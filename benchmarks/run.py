@@ -1,0 +1,77 @@
+"""Benchmark driver: one function per paper table/figure + kernels +
+roofline. Prints ``name,us_per_call,derived`` CSV lines and a summary.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _emit(name, us, derived):
+    print(f"{name},{us:.1f},{json.dumps(derived, default=str)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import bench_kernels, bench_paper
+
+    t_all = time.time()
+    results = {}
+    failures = []
+
+    paper_benches = [
+        ("table1_costs", bench_paper.bench_table1_costs),
+        ("fig3_case_study", bench_paper.bench_fig3_case_study),
+        ("fig4_mpi", bench_paper.bench_fig4_mpi),
+        ("table3_savings", bench_paper.bench_table3_savings),
+        ("fig5_tradeoff", bench_paper.bench_fig5_tradeoff),
+    ]
+    for name, fn in paper_benches:
+        rows, derived, secs = fn()
+        results[name] = {"rows": rows, "derived": derived}
+        _emit(name, secs * 1e6, derived)
+        if not derived.get("pass", True):
+            failures.append(name)
+
+    for fn in (bench_kernels.bench_flash_attention,
+               bench_kernels.bench_decode_attention,
+               bench_kernels.bench_ssd_scan,
+               bench_kernels.bench_moe_gmm):
+        rows = fn()
+        for r in rows:
+            name = r.pop("kernel")
+            us = r.pop("us_per_call")
+            results[f"kernel_{name}"] = {"us": us, **r}
+            _emit(f"kernel_{name}", us, r)
+
+    if not args.skip_roofline and os.path.exists("dryrun_results.json"):
+        from repro.launch import roofline
+        rows = roofline.analyze("dryrun_results.json")
+        dom = {}
+        for r in rows:
+            dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+        results["roofline"] = {"n_pairs": len(rows), "dominant_counts": dom}
+        _emit("roofline_summary", 0.0,
+              {"pairs": len(rows), "dominant": dom})
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+
+    print(f"\n# total {time.time()-t_all:.1f}s; "
+          f"{len(failures)} claim-check failures: {failures or 'none'}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

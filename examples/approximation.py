@@ -1,0 +1,58 @@
+"""LLM approximation (paper Strategy 2): completion cache + distillation.
+
+Run: PYTHONPATH=src python examples/approximation.py
+"""
+import numpy as np
+
+from repro.core import approx, neural_market as NM
+from repro.core.distill import distill
+from repro.core.scorer import SCORER_CFG, train_scorer
+from repro.data import synthetic
+
+
+def main():
+    # one "expensive" teacher API
+    NM.TIERS = {"GPT-4": NM.TIERS["GPT-4"]}
+    NM.TIERS["GPT-4"]["steps"] = 250
+    print("== training the expensive teacher ==")
+    teacher = NM.train_marketplace("overruling", seed=0, verbose=True)[0]
+
+    # ---- completion cache (Fig 2c) ----------------------------------------
+    print("\n== completion cache ==")
+    base = synthetic.sample("overruling", 128, seed=5)
+    # request stream with heavy repetition (same queries re-asked)
+    idx = np.random.default_rng(0).integers(0, 128, size=1024)
+    stream = base.tokens[idx]
+    # embeddings from a small encoder (scorer backbone, untrained is fine
+    # for exact-repeat detection; trained embeddings catch near-duplicates)
+    from repro.models.classifier import init_classifier
+    import jax
+    enc = init_classifier(jax.random.PRNGKey(0), SCORER_CFG, 1)
+    emb = approx.embed_queries(enc, stream, SCORER_CFG)
+    cache = approx.CompletionCache(capacity=512, threshold=0.995)
+    total_cost = 0.0
+    for i in range(0, len(stream), 64):      # requests arrive in batches
+        _, cost, _ = approx.serve_with_cache(
+            cache, emb[i:i + 64], stream[i:i + 64],
+            teacher.answer, teacher.query_cost)
+        total_cost += cost.sum()
+    full_cost = teacher.query_cost(stream).sum()
+    print(f"hit rate {cache.hit_rate:.2f}; cost ${total_cost:.4f} vs "
+          f"${full_cost:.4f} uncached -> "
+          f"{100*(1-total_cost/full_cost):.0f}% saved")
+
+    # ---- distillation (Fig 2d) --------------------------------------------
+    print("\n== model fine-tuning (distillation) ==")
+    student = distill(teacher, "overruling", n_unlabeled=1024, steps=200)
+    test = synthetic.sample("overruling", 512, seed=99)
+    t_acc = (teacher.answer(test.tokens) == test.labels).mean()
+    s_acc = (student.answer(test.tokens) == test.labels).mean()
+    t_cost = teacher.query_cost(test.tokens).mean()
+    s_cost = student.query_cost(test.tokens).mean()
+    print(f"teacher acc {t_acc:.3f} @ ${t_cost:.6f}/query")
+    print(f"student acc {s_acc:.3f} @ ${s_cost:.6f}/query "
+          f"({100*(1-s_cost/t_cost):.0f}% cheaper)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Quickstart: learn a FrugalGPT cascade on the (simulated) HEADLINES
+marketplace and print the cost/accuracy outcome.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.cascade import evaluate_offline
+from repro.core.router import RouterConfig, learn_cascade
+from repro.core.simulate import simulate_market, simulate_scores, split_market
+
+
+def main():
+    # 1. the LLM marketplace: 12 APIs, Table-1 prices, paper-calibrated
+    data = simulate_market("HEADLINES", seed=0)
+    scores = simulate_scores(data, seed=1)            # g(q, a) reliability
+    tr, te, str_, ste = split_market(data, scores, 0.5, seed=2)
+
+    accs = np.asarray(data.accuracy())
+    g4 = data.names.index("GPT-4")
+    print("marketplace accuracy:")
+    for n, a in sorted(zip(data.names, accs), key=lambda x: -x[1]):
+        print(f"  {n:10s} {a:.3f}")
+
+    # 2. learn the cascade under a budget = 1/5 of GPT-4's cost
+    budget = float(data.cost[:, g4].mean()) / 5
+    cascade, _ = learn_cascade(tr, str_, budget, RouterConfig())
+    print(f"\nlearned cascade: {cascade.describe(data.names)}")
+
+    # 3. evaluate on held-out queries
+    m = evaluate_offline(cascade, te, ste)
+    g4_cost = float(te.cost[:, g4].mean())
+    print(f"accuracy: {m['acc']:.3f} (GPT-4 alone: {accs[g4]:.3f})")
+    print(f"avg cost: ${m['avg_cost']:.5f} vs GPT-4 ${g4_cost:.5f} "
+          f"-> {100*(1-m['avg_cost']/g4_cost):.0f}% saved")
+
+
+if __name__ == "__main__":
+    main()

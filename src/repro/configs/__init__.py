@@ -1,0 +1,11 @@
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    InputShape,
+    LayerSpec,
+    MLACfg,
+    ModelConfig,
+    MoECfg,
+    SSMCfg,
+    active_param_count,
+    param_count,
+)

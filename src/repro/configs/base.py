@@ -1,0 +1,298 @@
+"""Config system for the repro framework.
+
+Every architecture is described by a ModelConfig. Heterogeneous layer
+stacks (hybrid Jamba, Gemma-3 local:global, DeepSeek dense-prefix+MoE)
+are expressed as ``prefix ++ (period * n_periods) ++ suffix`` of
+LayerSpec entries; the periods are scanned (params stacked on a leading
+axis) so deep stacks lower to compact HLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    """Mixture-of-experts FFN config (capacity-based routing)."""
+
+    n_experts: int
+    top_k: int
+    d_expert: int
+    n_shared: int = 0            # shared (always-on) experts
+    capacity_factor: float = 1.25
+    router_noise: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MLACfg:
+    """DeepSeek-style Multi-head Latent Attention."""
+
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_head_dim: int
+    qk_rope_head_dim: int
+    v_head_dim: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    """Mamba-2 SSD mixer config."""
+
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    d_conv: int = 4
+    chunk: int = 256             # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One transformer sub-layer: a sequence mixer + an FFN."""
+
+    mixer: str                   # "attn" | "attn_sliding" | "mamba"
+    ffn: str                     # "dense" | "moe" | "none"
+
+    def __post_init__(self):
+        assert self.mixer in ("attn", "attn_sliding", "mamba"), self.mixer
+        assert self.ffn in ("dense", "moe", "none"), self.ffn
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+_ARCH_TYPES = ("dense", "moe", "ssm", "hybrid", "audio", "vlm")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str               # one of _ARCH_TYPES
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab: int
+    n_heads: int = 0             # 0 for attention-free archs
+    n_kv_heads: int = 0
+    head_dim: int = 0
+
+    # layer pattern: prefix ++ period*n_periods ++ suffix
+    prefix: Tuple[LayerSpec, ...] = ()
+    period: Tuple[LayerSpec, ...] = ()
+    n_periods: int = 0
+    suffix: Tuple[LayerSpec, ...] = ()
+
+    moe: Optional[MoECfg] = None
+    mla: Optional[MLACfg] = None
+    ssm: Optional[SSMCfg] = None
+
+    pos: str = "rope"            # "rope" | "mrope" | "abs" | "none"
+    rope_theta: float = 10_000.0
+    window: int = 0              # sliding-window size for attn_sliding
+    causal: bool = True          # False => encoder-only (no decode)
+    ffn_act: str = "swiglu"      # "swiglu" | "gelu" | "geglu"
+    norm: str = "rmsnorm"        # "rmsnorm" | "layernorm"
+    tie_embeddings: bool = False
+    embed_inputs: bool = True    # False => inputs are precomputed embeddings
+    vision_tokens: int = 0       # VLM: number of stubbed patch-embedding slots
+    mtp: bool = False            # DeepSeek multi-token-prediction head
+    max_seq: int = 131_072
+    dtype: str = "bfloat16"
+    # citation for the config numbers
+    source: str = ""
+
+    # -- derived -------------------------------------------------------------
+    def __post_init__(self):
+        assert self.arch_type in _ARCH_TYPES, self.arch_type
+        got = len(self.prefix) + len(self.period) * self.n_periods + len(self.suffix)
+        assert got == self.n_layers, (
+            f"{self.name}: layer pattern covers {got} layers, expected {self.n_layers}"
+        )
+
+    @property
+    def layers(self) -> Tuple[LayerSpec, ...]:
+        """The flattened per-layer spec list (for reference / counting)."""
+        return self.prefix + self.period * self.n_periods + self.suffix
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def has_attention(self) -> bool:
+        return any(s.mixer.startswith("attn") for s in self.layers)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if no layer attends to unbounded full context."""
+        return all(s.mixer != "attn" for s in self.layers)
+
+    @property
+    def decode_supported(self) -> bool:
+        return self.causal
+
+    def supports_shape(self, shape_name: str) -> Tuple[bool, str]:
+        """(supported, reason-if-not) for an input-shape name."""
+        if shape_name in ("decode_32k", "long_500k") and not self.decode_supported:
+            return False, "encoder-only: no decode step"
+        if shape_name == "long_500k":
+            # require sub-quadratic attention: every attn layer must be
+            # sliding-window or the arch must be SSM/hybrid (bounded attn share)
+            full_attn = any(s.mixer == "attn" for s in self.layers)
+            if full_attn and self.arch_type not in ("ssm", "hybrid"):
+                # dense archs with a global-attention share: allowed only if the
+                # global layers are a small minority (gemma3 5:1 pattern)
+                n_full = sum(1 for s in self.layers if s.mixer == "attn")
+                if n_full / self.n_layers > 0.25:
+                    return False, "full attention: long_500k requires sub-quadratic"
+        return True, ""
+
+    # -- reduced variant for CPU smoke tests ---------------------------------
+    def reduced(self) -> "ModelConfig":
+        """2-layer, d_model<=512, <=4-expert variant of the same family."""
+        d_model = min(self.d_model, 256)
+        head_dim = min(self.head_dim, 64) if self.head_dim else 0
+        n_heads = min(self.n_heads, 4) if self.n_heads else 0
+        n_kv = min(self.n_kv_heads, max(1, n_heads // 2)) if self.n_kv_heads else 0
+        if self.n_kv_heads == self.n_heads:  # keep MHA archs MHA
+            n_kv = n_heads
+        moe = None
+        if self.moe is not None:
+            moe = dataclasses.replace(
+                self.moe,
+                n_experts=min(self.moe.n_experts, 4),
+                top_k=min(self.moe.top_k, 2),
+                d_expert=min(self.moe.d_expert, 128),
+                n_shared=min(self.moe.n_shared, 1),
+            )
+        mla = None
+        if self.mla is not None:
+            mla = MLACfg(q_lora_rank=64, kv_lora_rank=32,
+                         qk_nope_head_dim=32, qk_rope_head_dim=16, v_head_dim=32)
+            head_dim = 0
+        ssm = None
+        if self.ssm is not None:
+            ssm = dataclasses.replace(self.ssm, d_state=16, head_dim=32, chunk=32)
+        # 2 layers: take the first period (truncated to 2) or prefix+period head
+        if self.period:
+            period = self.period[:2] if len(self.period) >= 2 else self.period
+            n_periods = 2 // len(period)
+            rem = 2 - n_periods * len(period)
+            prefix = self.prefix[:rem]
+            if len(prefix) < rem:  # pad from period
+                prefix = (self.period[0],) * rem
+            suffix = ()
+        else:
+            prefix, period, n_periods, suffix = self.prefix[:2], (), 0, ()
+        n_layers = len(prefix) + len(period) * n_periods + len(suffix)
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            n_layers=n_layers,
+            d_model=d_model,
+            d_ff=min(self.d_ff, 512),
+            vocab=min(self.vocab, 1024),
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=head_dim,
+            prefix=prefix,
+            period=period,
+            n_periods=n_periods,
+            suffix=suffix,
+            moe=moe,
+            mla=mla,
+            ssm=ssm,
+            window=min(self.window, 64) if self.window else 0,
+            vision_tokens=min(self.vision_tokens, 16),
+            max_seq=512,
+            dtype="float32",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Analytic parameter count (used for 6*N*D roofline term)."""
+    n = 0
+    d = cfg.d_model
+    if cfg.embed_inputs:
+        n += cfg.vocab * d
+    if not cfg.tie_embeddings:
+        n += cfg.vocab * d
+    for spec in cfg.layers:
+        # mixer
+        if spec.mixer.startswith("attn"):
+            if cfg.mla is not None:
+                m = cfg.mla
+                qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+                n += d * m.q_lora_rank + m.q_lora_rank * cfg.n_heads * qk_hd
+                n += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                n += m.kv_lora_rank * cfg.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                n += cfg.n_heads * m.v_head_dim * d
+            else:
+                n += d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d
+        elif spec.mixer == "mamba":
+            s = cfg.ssm
+            d_in = s.expand * d
+            n_h = d_in // s.head_dim
+            n += d * (2 * d_in + 2 * s.d_state + n_h)  # in_proj(zx) + BC + dt
+            n += s.d_conv * (d_in + 2 * s.d_state)     # conv over x,B,C
+            n += d_in * d                              # out proj
+            n += 2 * n_h                               # A_log, D
+        # ffn
+        if spec.ffn == "dense":
+            mult = 3 if cfg.ffn_act in ("swiglu", "geglu") else 2
+            n += mult * d * cfg.d_ff
+        elif spec.ffn == "moe":
+            mult = 3 if cfg.ffn_act in ("swiglu", "geglu") else 2
+            e = cfg.moe
+            n += (e.n_experts + e.n_shared) * mult * d * e.d_expert
+            n += d * e.n_experts                       # router
+        # norms
+        n += 2 * d
+    n += d  # final norm
+    if cfg.mtp:
+        # one MTP block: a dense transformer layer + projection
+        n += d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d + 3 * d * cfg.d_ff + 2 * d * d
+    return n
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Parameters active per token (MoE: top_k+shared experts only)."""
+    if cfg.moe is None:
+        return param_count(cfg)
+    n = param_count(cfg)
+    e = cfg.moe
+    mult = 3 if cfg.ffn_act in ("swiglu", "geglu") else 2
+    n_moe_layers = sum(1 for s in cfg.layers if s.ffn == "moe")
+    dense_equiv = (e.top_k + e.n_shared) * mult * cfg.d_model * e.d_expert
+    full = (e.n_experts + e.n_shared) * mult * cfg.d_model * e.d_expert
+    return n - n_moe_layers * (full - dense_equiv)

@@ -1,0 +1,30 @@
+"""DeepSeek-V3 671B [arXiv:2412.19437] — MLA, 1 shared + 256 routed top-8 MoE, MTP."""
+from repro.configs.base import LayerSpec, MLACfg, ModelConfig, MoECfg
+
+_DENSE = LayerSpec(mixer="attn", ffn="dense")
+_MOE = LayerSpec(mixer="attn", ffn="moe")
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    arch_type="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,          # MLA: latent cache, heads materialized from latents
+    head_dim=128,
+    d_ff=18432,              # dense-layer FFN width (first 3 layers)
+    vocab=129_280,
+    prefix=(_DENSE, _DENSE, _DENSE),
+    period=(_MOE,),
+    n_periods=58,
+    moe=MoECfg(n_experts=256, top_k=8, d_expert=2048, n_shared=1,
+               capacity_factor=1.25),
+    mla=MLACfg(q_lora_rank=1536, kv_lora_rank=512,
+               qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128),
+    pos="rope",
+    rope_theta=10_000.0,
+    ffn_act="swiglu",
+    mtp=True,
+    max_seq=131_072,
+    source="arXiv:2412.19437 (MLA; 1 shared + 256 routed top-8; MTP depth 1)",
+)

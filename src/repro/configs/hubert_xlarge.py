@@ -1,0 +1,30 @@
+"""HuBERT-XLarge [arXiv:2106.07447] — audio encoder-only (w2v2-style backbone).
+
+Frontend (mel + conv feature extractor) is a STUB per the brief:
+``input_specs()`` feeds precomputed frame embeddings (B, frames, 1280).
+vocab=504 is the masked-unit codebook / classification head.
+"""
+from repro.configs.base import LayerSpec, ModelConfig
+
+_L = LayerSpec(mixer="attn", ffn="dense")
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    arch_type="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    vocab=504,
+    period=(_L,),
+    n_periods=48,
+    pos="abs",
+    causal=False,            # encoder-only: no decode shapes
+    embed_inputs=False,      # frame embeddings come from the stubbed frontend
+    ffn_act="gelu",
+    norm="layernorm",
+    max_seq=65_536,
+    source="arXiv:2106.07447 (encoder-only, MHA, conv frontend stubbed)",
+)

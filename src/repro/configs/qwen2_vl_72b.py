@@ -1,0 +1,30 @@
+"""Qwen2-VL-72B [arXiv:2409.12191] — VLM backbone, M-RoPE, dynamic resolution.
+
+Vision frontend (ViT + projector) is a STUB per the brief: ``input_specs``
+provides precomputed patch embeddings (B, vision_tokens, d_model) that are
+scattered into the token stream; M-RoPE position ids (3, B, S) carry the
+temporal/height/width coordinates.
+"""
+from repro.configs.base import LayerSpec, ModelConfig
+
+_L = LayerSpec(mixer="attn", ffn="dense")
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    arch_type="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=29568,
+    vocab=152_064,
+    period=(_L,),
+    n_periods=80,
+    pos="mrope",
+    rope_theta=1_000_000.0,
+    ffn_act="swiglu",
+    vision_tokens=1024,      # stubbed patch-embedding slots per sequence
+    max_seq=131_072,
+    source="arXiv:2409.12191 (M-RoPE sections t/h/w; ViT frontend stubbed)",
+)

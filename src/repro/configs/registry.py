@@ -1,0 +1,48 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers/tests."""
+from __future__ import annotations
+
+from repro.configs import (
+    deepseek_v3_671b,
+    gemma3_1b,
+    granite_moe_1b_a400m,
+    hubert_xlarge,
+    jamba_v0_1_52b,
+    mamba2_1_3b,
+    mistral_nemo_12b,
+    moonshot_v1_16b_a3b,
+    qwen2_vl_72b,
+    starcoder2_15b,
+)
+from repro.configs.base import INPUT_SHAPES, ModelConfig
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        starcoder2_15b.CONFIG,
+        hubert_xlarge.CONFIG,
+        deepseek_v3_671b.CONFIG,
+        granite_moe_1b_a400m.CONFIG,
+        mamba2_1_3b.CONFIG,
+        mistral_nemo_12b.CONFIG,
+        moonshot_v1_16b_a3b.CONFIG,
+        qwen2_vl_72b.CONFIG,
+        jamba_v0_1_52b.CONFIG,
+        gemma3_1b.CONFIG,
+    ]
+}
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def all_pairs():
+    """All (arch, shape) pairs with their support status."""
+    out = []
+    for a in ARCHS.values():
+        for s in INPUT_SHAPES.values():
+            ok, why = a.supports_shape(s.name)
+            out.append((a, s, ok, why))
+    return out

@@ -1,0 +1,10 @@
+from repro.core.cascade import Cascade, evaluate_offline, run_online  # noqa: F401
+from repro.core.cost import TABLE1, ApiCost  # noqa: F401
+from repro.core.router import RouterConfig, cost_to_match, frontier, learn_cascade  # noqa: F401
+from repro.core.simulate import (  # noqa: F401
+    DATASETS,
+    MarketData,
+    mpi_matrix,
+    simulate_market,
+    simulate_scores,
+)

@@ -1,0 +1,104 @@
+"""LLM approximation (paper §3 Strategy 2a): the completion cache.
+
+Stores (query-embedding, answer) pairs; a new query reuses a cached
+answer when its nearest cached neighbour is within a similarity
+threshold. Embeddings come from the scorer's encoder (mean-pooled), so
+no extra model is needed. Pure-JAX nearest-neighbour over the cache
+matrix; the cache itself is a ring buffer of fixed capacity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_norm
+from repro.models.transformer import _apply_stack, _embed_inputs
+
+
+def embed_queries(params, tokens, cfg: ModelConfig, batch: int = 512):
+    """Mean-pooled encoder embedding, L2-normalized. (n, d)."""
+
+    @jax.jit
+    def fn(params, toks):
+        x, positions = _embed_inputs(params, {"tokens": toks}, cfg, "train")
+        x, _, _ = _apply_stack(params, x, cfg=cfg, mode="train",
+                               positions=positions, cache=None, pos=None,
+                               remat=False)
+        h = apply_norm(params["final_norm"], x, cfg).mean(1)
+        return h / (jnp.linalg.norm(h, axis=-1, keepdims=True) + 1e-6)
+
+    out = []
+    for i in range(0, tokens.shape[0], batch):
+        out.append(np.asarray(fn(params, jnp.asarray(tokens[i:i + batch]))))
+    return np.concatenate(out)
+
+
+@dataclasses.dataclass
+class CompletionCache:
+    capacity: int = 4096
+    threshold: float = 0.97
+
+    def __post_init__(self):
+        self._emb = None            # (cap, d)
+        self._ans = None            # (cap,)
+        self._valid = None
+        self._next = 0
+        self.hits = 0
+        self.misses = 0
+
+    def lookup(self, emb: np.ndarray):
+        """emb (n, d) -> (hit_mask (n,), answers (n,))."""
+        n = emb.shape[0]
+        if self._emb is None or not self._valid.any():
+            self.misses += n
+            return np.zeros(n, bool), np.zeros(n, np.int32)
+        sims = emb @ self._emb.T                       # (n, cap)
+        sims = np.where(self._valid[None, :], sims, -1.0)
+        best = sims.argmax(1)
+        best_sim = sims[np.arange(n), best]
+        hit = best_sim >= self.threshold
+        self.hits += int(hit.sum())
+        self.misses += int((~hit).sum())
+        return hit, self._ans[best].astype(np.int32)
+
+    def insert(self, emb: np.ndarray, answers: np.ndarray):
+        n, d = emb.shape
+        if self._emb is None:
+            self._emb = np.zeros((self.capacity, d), emb.dtype)
+            self._ans = np.zeros(self.capacity, np.int32)
+            self._valid = np.zeros(self.capacity, bool)
+        idx = (self._next + np.arange(n)) % self.capacity
+        self._emb[idx] = emb
+        self._ans[idx] = answers
+        self._valid[idx] = True
+        self._next = int((self._next + n) % self.capacity)
+
+    @property
+    def hit_rate(self):
+        t = self.hits + self.misses
+        return self.hits / t if t else 0.0
+
+
+def serve_with_cache(cache: CompletionCache, emb: np.ndarray,
+                     tokens: np.ndarray, api_answer, api_cost):
+    """Answer queries, consulting the cache first (Fig. 2c).
+
+    api_answer(tokens_subset) -> answers; api_cost(tokens_subset) -> costs.
+    Returns (answers, total_cost, hit_mask)."""
+    hit, cached = cache.lookup(emb)
+    n = tokens.shape[0]
+    answers = np.zeros(n, np.int32)
+    answers[hit] = cached[hit]
+    cost = np.zeros(n, np.float64)
+    miss = ~hit
+    if miss.any():
+        fresh = api_answer(tokens[miss])
+        answers[miss] = fresh
+        cost[miss] = api_cost(tokens[miss])
+        cache.insert(emb[miss], fresh)
+    return answers, cost, hit

@@ -1,0 +1,103 @@
+"""LLM cascade (paper §3 Strategy 3): ordered API list + score thresholds.
+
+Two execution paths:
+  * ``evaluate_offline`` — vectorized accuracy/cost of a cascade on
+    offline-collected marketplace data (used by the router optimizer and
+    all §Repro experiments, mirroring the paper's offline methodology);
+  * ``run_online`` — tier-by-tier batched execution against live models
+    (the serving engine path): query tier-1 for the whole batch, score,
+    and re-batch only the unreliable queries to the next tier.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.simulate import MarketData
+
+
+@dataclasses.dataclass(frozen=True)
+class Cascade:
+    """A learned cascade: API indices L and per-position thresholds tau.
+
+    The last position needs no threshold (it always answers), so
+    ``thresholds`` has length len(apis) - 1.
+    """
+
+    apis: tuple            # indices into the marketplace (len m)
+    thresholds: tuple      # len m-1, floats in [0,1]
+
+    def describe(self, names: Sequence[str]) -> str:
+        parts = []
+        for j, a in enumerate(self.apis):
+            if j < len(self.thresholds):
+                parts.append(f"{names[a]} (accept if g>{self.thresholds[j]:.2f})")
+            else:
+                parts.append(f"{names[a]}")
+        return " -> ".join(parts)
+
+
+def evaluate_offline(cascade: Cascade, data: MarketData, scores) -> dict:
+    """Vectorized evaluation. scores: (n, K) reliability scores g(q, a_k).
+
+    Returns dict(acc, avg_cost, stop_fracs, total_cost).
+    """
+    n = data.n
+    m = len(cascade.apis)
+    answered = jnp.zeros((n,), bool)
+    acc = jnp.zeros((n,), jnp.float32)
+    cost = jnp.zeros((n,), jnp.float32)
+    stop_fracs = []
+    for j, a in enumerate(cascade.apis):
+        cost = cost + jnp.where(answered, 0.0, data.cost[:, a])
+        if j < m - 1:
+            accept = scores[:, a] >= cascade.thresholds[j]
+        else:
+            accept = jnp.ones((n,), bool)
+        take = (~answered) & accept
+        acc = acc + jnp.where(take, data.correct[:, a], 0.0)
+        stop_fracs.append(float(take.mean()))
+        answered = answered | take
+    return {
+        "acc": float(acc.mean()),
+        "avg_cost": float(cost.mean()),
+        "total_cost": float(cost.sum()),
+        "stop_fracs": stop_fracs,
+    }
+
+
+def run_online(cascade: Cascade, queries: list, apis: Sequence[Callable],
+               scorer: Callable, names: Sequence[str] | None = None) -> dict:
+    """Execute the cascade against live tier models.
+
+    apis[k](list_of_queries) -> (answers, per_query_cost)
+    scorer(queries, answers, api_index) -> np.ndarray scores in [0,1]
+
+    Batched tier-by-tier: all pending queries hit tier j together
+    (the serving engine's compaction pattern).
+    """
+    n = len(queries)
+    pending = np.arange(n)
+    answers = [None] * n
+    total_cost = np.zeros(n, np.float64)
+    trace = np.full(n, -1, np.int32)
+    for j, a in enumerate(cascade.apis):
+        if len(pending) == 0:
+            break
+        qs = [queries[i] for i in pending]
+        ans, cost = apis[a](qs)
+        total_cost[pending] += np.asarray(cost, np.float64)
+        if j < len(cascade.apis) - 1:
+            s = np.asarray(scorer(qs, ans, a))
+            accept = s >= cascade.thresholds[j]
+        else:
+            accept = np.ones(len(pending), bool)
+        for i_local, i_global in enumerate(pending):
+            if accept[i_local]:
+                answers[i_global] = ans[i_local]
+                trace[i_global] = a
+        pending = pending[~accept]
+    return {"answers": answers, "cost": total_cost, "stopped_at": trace}

@@ -1,0 +1,66 @@
+"""The paper's 3-term LLM API cost model (Table 1, §2).
+
+c_i(p) = c2 * ||f_i(p)|| + c1 * ||p|| + c0
+       = output-token cost + input-token cost + fixed per-request cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ApiCost:
+    """Prices in USD. input/output rates are per 10M tokens (Table 1)."""
+
+    per_10m_input: float
+    per_10m_output: float
+    per_request: float = 0.0
+
+    @property
+    def c1(self) -> float:          # per input token
+        return self.per_10m_input / 1e7
+
+    @property
+    def c2(self) -> float:          # per output token
+        return self.per_10m_output / 1e7
+
+    @property
+    def c0(self) -> float:
+        return self.per_request
+
+    def query_cost(self, n_in, n_out):
+        """Vectorized: n_in/n_out may be arrays of token counts."""
+        return self.c2 * jnp.asarray(n_out, jnp.float32) + \
+            self.c1 * jnp.asarray(n_in, jnp.float32) + self.c0
+
+
+# Table 1 — retrieved March 2023 (USD per 10M tokens; per-request fixed fee).
+TABLE1: dict[str, ApiCost] = {
+    "GPT-C":     ApiCost(2.0, 2.0, 0.0),        # OpenAI GPT-Curie (6.7B)
+    "ChatGPT":   ApiCost(2.0, 2.0, 0.0),
+    "GPT-3":     ApiCost(20.0, 20.0, 0.0),      # 175B
+    "GPT-4":     ApiCost(30.0, 60.0, 0.0),
+    "J1-L":      ApiCost(0.0, 30.0, 0.0003),    # AI21 J1-Large (7.5B)
+    "J1-G":      ApiCost(0.0, 80.0, 0.0008),    # J1-Grande (17B)
+    "J1-J":      ApiCost(0.0, 250.0, 0.005),    # J1-Jumbo (178B)
+    "Cohere":    ApiCost(10.0, 10.0, 0.0),      # Xlarge (52B)
+    "FF-QA":     ApiCost(5.8, 5.8, 0.0),        # ForeFrontAI QA (16B)
+    "GPT-J":     ApiCost(0.2, 5.0, 0.0),        # Textsynth (6B)
+    "FAIRSEQ":   ApiCost(0.6, 15.0, 0.0),       # Textsynth (13B)
+    "GPT-Neox":  ApiCost(1.4, 35.0, 0.0),       # Textsynth (20B)
+}
+
+MODEL_SIZES_B = {
+    "GPT-C": 6.7, "ChatGPT": 20.0, "GPT-3": 175.0, "GPT-4": 300.0,
+    "J1-L": 7.5, "J1-G": 17.0, "J1-J": 178.0, "Cohere": 52.0,
+    "FF-QA": 16.0, "GPT-J": 6.0, "FAIRSEQ": 13.0, "GPT-Neox": 20.0,
+}
+
+
+def compute_cost_flops(name: str, n_in, n_out):
+    """Self-hosted compute-cost analogue: ~2*N FLOPs per token (DESIGN.md §3)."""
+    n = MODEL_SIZES_B.get(name, 10.0) * 1e9
+    return 2.0 * n * (jnp.asarray(n_in, jnp.float32)
+                      + jnp.asarray(n_out, jnp.float32))

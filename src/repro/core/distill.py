@@ -1,0 +1,42 @@
+"""LLM approximation (paper §3 Strategy 2b): model fine-tuning.
+
+Collect an expensive API's answers on unlabeled queries, fine-tune a
+small model on those answers, and register the student as a new
+(near-zero-cost) API in the marketplace. Mirrors Fig. 2(d)'s 3 steps.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cost import ApiCost
+from repro.core.neural_market import NeuralAPI
+from repro.data import synthetic
+from repro.models.classifier import encoder_config
+from repro.training.train_loop import train_classifier
+
+
+def distill(teacher: NeuralAPI, task: str, *, n_unlabeled: int = 2048,
+            seq_len: int = 64, steps: int = 300, seed: int = 0,
+            student_layers: int = 2, student_d: int = 64) -> NeuralAPI:
+    """Fine-tune a student on the teacher's answers (not gold labels)."""
+    n_classes = synthetic.N_CLASSES[task]
+    pool = synthetic.sample(task, n_unlabeled, seq_len=seq_len,
+                            seed=seed + 777)
+    teacher_ans = teacher.answer(pool.tokens)     # step 1: collect responses
+
+    rng = np.random.default_rng(seed)
+
+    def data_fn(step):                            # step 2: fine-tune student
+        idx = rng.choice(n_unlabeled, size=128, replace=False)
+        return pool.tokens[idx], teacher_ans[idx]
+
+    cfg = encoder_config(f"student-of-{teacher.name}",
+                         n_layers=student_layers, d_model=student_d,
+                         n_heads=max(2, student_d // 32), d_ff=2 * student_d,
+                         max_seq=seq_len + 4)
+    params, _ = train_classifier(cfg, n_classes, data_fn=data_fn,
+                                 steps=steps, seed=seed)
+    # step 3: serve the student — self-hosted, near-zero marginal cost;
+    # we bill it at the cheapest Table-1 rate to stay conservative.
+    return NeuralAPI(f"distilled-{teacher.name}", cfg, params,
+                     ApiCost(0.2, 5.0, 0.0))

@@ -1,0 +1,72 @@
+"""Compositions (paper §3): joint prompt and LLM selection.
+
+"for a given query, it searches for the smallest prompt and most
+affordable LLM that achieves satisfactory task performance."
+
+We compose Strategy 1 (prompt selection) with Strategy 3 (LLM cascade):
+for each candidate prompt size (number of in-context examples), rebuild
+the marketplace costs (shorter prompt -> cheaper queries) and the
+accuracy profile (fewer shots -> slightly weaker APIs), learn a cascade
+under the budget, and return the (prompt, cascade) pair with the best
+held-out accuracy. The search space is the cross product the paper
+describes; pruning comes from the router's own list pruning.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cascade import evaluate_offline
+from repro.core.router import RouterConfig, learn_cascade
+from repro.core.simulate import DATASETS, MarketData
+
+# accuracy penalty per removed in-context example (measured on the
+# synthetic tasks; conservative vs published few-shot scaling curves)
+SHOT_PENALTY = 0.008
+
+
+def reprice_for_prompt(data: MarketData, dataset: str, n_examples: int,
+                       seed: int = 0) -> MarketData:
+    """Marketplace as it would look with an n_examples-shot prompt."""
+    spec = DATASETS[dataset]
+    full = spec["n_shot"]
+    assert 0 <= n_examples <= full
+    tokens_per_example = spec["n_in"] // (full + 2)
+    delta_tokens = (full - n_examples) * tokens_per_example
+    n_in = jnp.maximum(8, data.n_in - delta_tokens)
+    # shorter prompt => cheaper input cost; recompute c1 * n_in exactly
+    from repro.core.cost import TABLE1
+    cost = np.zeros(np.asarray(data.cost).shape, np.float32)
+    for k, name in enumerate(data.names):
+        cost[:, k] = np.asarray(TABLE1[name].query_cost(n_in, data.n_out))
+    # fewer shots => mild accuracy degradation (stochastic flips)
+    rng = np.random.default_rng(seed)
+    p_flip = SHOT_PENALTY * (full - n_examples)
+    flips = rng.uniform(size=np.asarray(data.correct).shape) < p_flip
+    correct = np.asarray(data.correct).copy()
+    correct[flips] = np.where(rng.uniform(size=flips.sum()) < 0.25,
+                              1.0 - correct[flips], correct[flips] * 0.0)
+    return MarketData(data.names, jnp.asarray(correct), jnp.asarray(cost),
+                      n_in.astype(jnp.int32), data.n_out, data.difficulty)
+
+
+def joint_prompt_cascade(data: MarketData, scores, dataset: str,
+                         budget: float, cfg: RouterConfig | None = None,
+                         prompt_sizes=None, seed: int = 0):
+    """Search (prompt size x cascade) jointly. Returns the best combo and
+    the per-prompt-size frontier row."""
+    spec = DATASETS[dataset]
+    prompt_sizes = prompt_sizes or range(spec["n_shot"] + 1)
+    cfg = cfg or RouterConfig(top_lists=15, sample=384)
+    rows = []
+    best = None
+    for n_ex in prompt_sizes:
+        d = reprice_for_prompt(data, dataset, n_ex, seed=seed)
+        cas, m = learn_cascade(d, scores, budget, cfg)
+        row = {"n_examples": int(n_ex), "cascade": cas, **m}
+        rows.append(row)
+        if best is None or m["acc"] > best["acc"]:
+            best = row
+    return best, rows

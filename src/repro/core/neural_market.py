@@ -1,0 +1,92 @@
+"""Neural LLM marketplace: real JAX models of different capacity as the
+"APIs". This is the end-to-end path — the cascade runs actual forward
+passes through tier models (the IRT path in ``simulate.py`` reproduces the
+paper's numbers at scale; this path proves the system runs for real).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost import TABLE1, ApiCost
+from repro.core.simulate import MarketData
+from repro.data import synthetic
+from repro.models.classifier import classifier_logits, encoder_config
+from repro.training.train_loop import train_classifier
+
+# tier name -> (encoder size, train steps, Table-1 price analogue)
+TIERS = {
+    "GPT-J":   dict(n_layers=1, d_model=32, steps=60, price="GPT-J"),
+    "J1-L":    dict(n_layers=2, d_model=48, steps=120, price="J1-L"),
+    "GPT-C":   dict(n_layers=2, d_model=64, steps=200, price="GPT-C"),
+    "ChatGPT": dict(n_layers=3, d_model=96, steps=320, price="ChatGPT"),
+    "GPT-3":   dict(n_layers=4, d_model=128, steps=480, price="GPT-3"),
+    "GPT-4":   dict(n_layers=4, d_model=160, steps=800, price="GPT-4"),
+}
+
+
+@dataclasses.dataclass
+class NeuralAPI:
+    name: str
+    cfg: object
+    params: dict
+    price: ApiCost
+
+    def answer(self, tokens: np.ndarray, batch: int = 512) -> np.ndarray:
+        fn = jax.jit(functools.partial(classifier_logits, cfg=self.cfg))
+        out = []
+        for i in range(0, tokens.shape[0], batch):
+            logits = fn(self.params, jnp.asarray(tokens[i:i + batch]))
+            out.append(np.asarray(jnp.argmax(logits, -1)))
+        return np.concatenate(out)
+
+    def query_cost(self, tokens: np.ndarray) -> np.ndarray:
+        n_in = (tokens != synthetic.PAD).sum(-1)
+        return np.asarray(self.price.query_cost(n_in, np.ones_like(n_in)))
+
+
+def train_marketplace(task: str, *, seq_len: int = 64, seed: int = 0,
+                      verbose: bool = False) -> list[NeuralAPI]:
+    """Train the tier models on the synthetic task."""
+    n_classes = synthetic.N_CLASSES[task]
+    apis = []
+    for i, (name, spec) in enumerate(TIERS.items()):
+        cfg = encoder_config(f"api-{name}", n_layers=spec["n_layers"],
+                             d_model=spec["d_model"],
+                             n_heads=max(2, spec["d_model"] // 32),
+                             d_ff=2 * spec["d_model"], max_seq=seq_len + 4)
+        if verbose:
+            print(f"training tier {name} ({spec['n_layers']}L "
+                  f"d={spec['d_model']}, {spec['steps']} steps)")
+        params, _ = train_classifier(cfg, n_classes, task=task,
+                                     steps=spec["steps"], seq_len=seq_len,
+                                     seed=seed + i)
+        apis.append(NeuralAPI(name, cfg, params, TABLE1[spec["price"]]))
+    return apis
+
+
+def collect_market_data(apis: list[NeuralAPI], tokens: np.ndarray,
+                        labels: np.ndarray) -> tuple[MarketData, np.ndarray]:
+    """Query every API on every example (the paper's offline collection).
+
+    Returns (MarketData, answers (n, K))."""
+    n = tokens.shape[0]
+    k = len(apis)
+    correct = np.zeros((n, k), np.float32)
+    cost = np.zeros((n, k), np.float32)
+    answers = np.zeros((n, k), np.int32)
+    for j, api in enumerate(apis):
+        ans = api.answer(tokens)
+        answers[:, j] = ans
+        correct[:, j] = (ans == labels).astype(np.float32)
+        cost[:, j] = api.query_cost(tokens)
+    n_in = (tokens != synthetic.PAD).sum(-1).astype(np.int32)
+    data = MarketData([a.name for a in apis], jnp.asarray(correct),
+                      jnp.asarray(cost), jnp.asarray(n_in),
+                      jnp.asarray(np.ones(n, np.int32)),
+                      jnp.asarray(np.zeros(n, np.float32)))
+    return data, answers

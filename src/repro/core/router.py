@@ -1,0 +1,154 @@
+"""The FrugalGPT router optimizer (paper §3, eq. (1)).
+
+Learning (L, tau) is a mixed-integer program:
+
+    max_{L, tau} E[r(a, f_{L_z}(q))]
+    s.t.         E[cascade cost] <= b
+
+The paper's specialized optimizer (i) prunes the list search space by
+ignoring lists with small answer disagreement, and (ii) approximates the
+objective by interpolating it within a few samples. We implement both:
+
+  * pruning: a candidate list must have every later API fix at least
+    ``min_mpi`` of the earlier APIs' errors (MPI-based), and we keep the
+    ``top_lists`` lists by union-accuracy potential;
+  * approximation: thresholds are grid-searched on a subsample of the
+    training queries (vectorized over the (tau_1, tau_2) grid in jnp),
+    then the winning (L, tau) is re-scored on the full training set.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cascade import Cascade, evaluate_offline
+from repro.core.simulate import MarketData, mpi_matrix
+
+
+@dataclasses.dataclass
+class RouterConfig:
+    m: int = 3                  # cascade length (paper uses 3)
+    grid: int = 24              # threshold grid resolution per position
+    sample: int = 512           # subsample size for objective interpolation
+    min_mpi: float = 0.01       # disagreement pruning threshold
+    top_lists: int = 40         # lists kept after potential ranking
+    seed: int = 0
+
+
+def _candidate_lists(data: MarketData, cfg: RouterConfig):
+    """MPI-pruned, potential-ranked candidate lists of length m."""
+    k = data.k
+    mpi = np.asarray(mpi_matrix(data.correct))
+    acc = np.asarray(data.accuracy())
+    cand = []
+    for perm in itertools.permutations(range(k), cfg.m):
+        # disagreement pruning: each later API must fix >= min_mpi of the
+        # previous API's errors, else the extra stage is dead weight.
+        ok = all(mpi[perm[j], perm[j + 1]] >= cfg.min_mpi
+                 for j in range(cfg.m - 1))
+        if not ok:
+            continue
+        # potential = accuracy of the union oracle (upper bound)
+        union = np.asarray(data.correct)[:, list(perm)].max(1).mean()
+        # cheap first stages are what saves money: sort key prefers
+        # potential, then low first-stage cost
+        first_cost = float(data.cost[:, perm[0]].mean())
+        cand.append((union, -first_cost, perm))
+    cand.sort(reverse=True)
+    return [c[-1] for c in cand[:cfg.top_lists]]
+
+
+def _grid_eval(perm, data: MarketData, scores, grid: jnp.ndarray):
+    """Vectorized (acc, cost) over the full threshold grid for one list.
+
+    Supports m in {2, 3}. Returns acc, cost arrays of shape grid^(m-1).
+    """
+    y = data.correct[:, list(perm)]          # (n, m)
+    c = data.cost[:, list(perm)]             # (n, m)
+    g = scores[:, list(perm)]                # (n, m)
+    if len(perm) == 2:
+        stop1 = g[:, 0][None] >= grid[:, None]            # (G, n)
+        acc = jnp.where(stop1, y[:, 0][None], y[:, 1][None]).mean(-1)
+        cost = (c[:, 0][None] + jnp.where(stop1, 0.0, c[:, 1][None])).mean(-1)
+        return acc, cost
+    stop1 = g[:, 0][None] >= grid[:, None]                # (G1, n)
+    stop2 = g[:, 1][None] >= grid[:, None]                # (G2, n)
+    s1 = stop1[:, None, :]                                # (G1, 1, n)
+    s2 = (~stop1)[:, None, :] & stop2[None, :, :]         # (G1, G2, n)
+    s3 = (~stop1)[:, None, :] & (~stop2)[None, :, :]
+    acc = (s1 * y[:, 0] + s2 * y[:, 1] + s3 * y[:, 2]).mean(-1)
+    cost = (c[:, 0] + (~stop1)[:, None, :] * c[:, 1] + s3 * c[:, 2]).mean(-1)
+    return acc, cost
+
+
+def learn_cascade(data: MarketData, scores, budget: float,
+                  cfg: RouterConfig | None = None) -> tuple[Cascade, dict]:
+    """Learn (L, tau) maximizing accuracy s.t. avg cost <= budget."""
+    cfg = cfg or RouterConfig()
+    rng = np.random.default_rng(cfg.seed)
+    sub = rng.choice(data.n, size=min(cfg.sample, data.n), replace=False)
+    sub_data = MarketData(data.names, data.correct[sub], data.cost[sub],
+                          data.n_in[sub], data.n_out[sub],
+                          data.difficulty[sub])
+    sub_scores = scores[sub]
+    grid = jnp.linspace(0.0, 1.0, cfg.grid)
+
+    best = (-1.0, None, None)
+    for perm in _candidate_lists(data, cfg):
+        acc, cost = _grid_eval(perm, sub_data, sub_scores, grid)
+        feasible = cost <= budget
+        if not bool(feasible.any()):
+            continue
+        masked = jnp.where(feasible, acc, -1.0)
+        flat = int(jnp.argmax(masked))
+        if len(perm) == 2:
+            taus = (float(grid[flat]),)
+        else:
+            i1, i2 = np.unravel_index(flat, (cfg.grid, cfg.grid))
+            taus = (float(grid[i1]), float(grid[i2]))
+        a = float(masked.max())
+        if a > best[0]:
+            best = (a, perm, taus)
+    if best[1] is None:
+        # budget below the cheapest API: fall back to cheapest single API
+        cheapest = int(jnp.argmin(data.cost.mean(0)))
+        cascade = Cascade((cheapest,), ())
+        return cascade, evaluate_offline(cascade, data, scores)
+    cascade = Cascade(tuple(best[1]), best[2])
+    # re-score the winner on the full training data (interpolation step)
+    metrics = evaluate_offline(cascade, data, scores)
+    return cascade, metrics
+
+
+def frontier(data: MarketData, scores, budgets,
+             cfg: RouterConfig | None = None):
+    """Accuracy-cost tradeoff curve (Fig. 5): learn a cascade per budget."""
+    out = []
+    for b in budgets:
+        cas, m = learn_cascade(data, scores, float(b), cfg)
+        out.append({"budget": float(b), "cascade": cas, **m})
+    return out
+
+
+def cost_to_match(data_train: MarketData, scores_train,
+                  data_test: MarketData, scores_test,
+                  target_acc: float, cfg: RouterConfig | None = None,
+                  n_steps: int = 12) -> dict:
+    """Bisection over budgets: smallest avg cost whose learned cascade
+    matches ``target_acc`` on the *test* split (Table 3 protocol)."""
+    lo = float(data_train.cost.min(1).mean()) * 0.5
+    hi = float(data_train.cost.max(1).mean()) * 1.5
+    best = None
+    for _ in range(n_steps):
+        mid = 0.5 * (lo + hi)
+        cas, _ = learn_cascade(data_train, scores_train, mid, cfg)
+        m = evaluate_offline(cas, data_test, scores_test)
+        if m["acc"] >= target_acc:
+            best = {"budget": mid, "cascade": cas, **m}
+            hi = mid
+        else:
+            lo = mid
+    return best

@@ -1,0 +1,80 @@
+"""The generation scoring function g(q, a) — DistilBERT-analogue in JAX.
+
+A small transformer encoder with a sigmoid regression head, trained with
+BCE on (query ++ SEP ++ answer) -> correct, exactly the paper's recipe
+("a simple regression model that learns whether a generation is correct
+from the query and a generated answer").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import synthetic
+from repro.models.classifier import (classifier_logits, encoder_config,
+                                     init_classifier)
+from repro.training.optim import OptConfig, adamw_update, init_opt_state
+
+SCORER_CFG = encoder_config("scorer-distilbert", n_layers=4, d_model=128,
+                            n_heads=4, d_ff=256, max_seq=256)
+
+
+def train_scorer(queries: np.ndarray, answers: np.ndarray,
+                 correct: np.ndarray, *, steps: int = 400, batch: int = 128,
+                 seed: int = 0, log_every: int = 0):
+    """queries (n, L) tokens; answers (n,) class ids; correct (n,) 0/1."""
+    cfg = SCORER_CFG
+    pairs = synthetic.append_answer(queries, answers)
+    key = jax.random.PRNGKey(seed)
+    params = init_classifier(key, cfg, 1)
+    opt = OptConfig(lr=1e-3, warmup=20, total_steps=steps)
+    state = init_opt_state(params)
+    n = pairs.shape[0]
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step_fn(params, state, toks, y):
+        def loss_fn(p):
+            logit = classifier_logits(p, toks, cfg)[:, 0]
+            loss = jnp.mean(jnp.maximum(logit, 0) - logit * y
+                            + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+            return loss, jax.nn.sigmoid(logit)
+        (loss, s), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, state, om = adamw_update(opt, params, grads, state)
+        return params, state, loss
+
+    for i in range(steps):
+        idx = rng.choice(n, size=min(batch, n), replace=False)
+        params, state, loss = step_fn(params, state, jnp.asarray(pairs[idx]),
+                                      jnp.asarray(correct[idx], jnp.float32))
+        if log_every and (i + 1) % log_every == 0:
+            print(f"  scorer step {i+1}: bce={float(loss):.3f}")
+    return params
+
+
+def score(params, queries: np.ndarray, answers: np.ndarray,
+          batch: int = 512) -> np.ndarray:
+    """g(q, a) in [0,1] for each (query, answer) pair."""
+    cfg = SCORER_CFG
+    pairs = synthetic.append_answer(np.asarray(queries), np.asarray(answers))
+    fn = jax.jit(functools.partial(classifier_logits, cfg=cfg))
+    out = []
+    for i in range(0, pairs.shape[0], batch):
+        logit = fn(params, jnp.asarray(pairs[i:i + batch]))[:, 0]
+        out.append(np.asarray(jax.nn.sigmoid(logit)))
+    return np.concatenate(out)
+
+
+def auc(scores: np.ndarray, labels: np.ndarray) -> float:
+    """ROC-AUC via rank statistic."""
+    order = np.argsort(scores)
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, len(scores) + 1)
+    pos = labels > 0.5
+    n1, n0 = pos.sum(), (~pos).sum()
+    if n1 == 0 or n0 == 0:
+        return 0.5
+    return float((ranks[pos].sum() - n1 * (n1 + 1) / 2) / (n1 * n0))

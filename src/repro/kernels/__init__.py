@@ -1,0 +1,17 @@
+"""Pallas TPU kernels (kernel.py + ops.py wrapper + ref.py oracle each).
+
+``enable_kernels(True)`` routes the model stack's hot paths through the
+kernels (interpret mode on CPU — used by the integration tests; compiled
+on real TPUs). Default off: the pure-jnp reference path is the oracle
+and the dry-run path (Pallas cannot lower on the CPU dry-run backend).
+"""
+_ENABLED = False
+
+
+def enable_kernels(on: bool = True):
+    global _ENABLED
+    _ENABLED = on
+
+
+def kernels_enabled() -> bool:
+    return _ENABLED

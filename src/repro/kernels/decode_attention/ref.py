@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_ref(q, k, v, length):
+    """q: (B, KVH, G, d); k/v: (B, S, KVH, d). Returns (B, KVH, G, dv)."""
+    s = k.shape[1]
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    valid = jnp.arange(s) < length
+    logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhgs,bshd->bhgd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,100 @@
+"""Flash attention (prefill) Pallas TPU kernel.
+
+Online-softmax blocked attention with causal and sliding-window masking.
+Grid = (batch*kv_heads*q_groups, n_q_blocks, n_kv_blocks); the kv-block
+grid dim is 'arbitrary' so running max / denominator / accumulator
+persist in VMEM scratch across kv blocks (the TPU analogue of the GPU
+flash-attention inner loop — no warp shuffles, per-block VREG reductions
+instead). Block shapes are MXU-aligned (multiples of 128 where the
+problem allows).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int, bq: int, bk: int,
+                  nk: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                 # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                 # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                              # (bq,)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    v = v_ref[0].astype(jnp.float32)                 # (bk, dv)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128, interpret: bool = True):
+    """q: (BH, S, d); k/v: (BH, S, d) (GQA pre-broadcast by ops.py).
+
+    Returns (BH, S, dv)."""
+    bh, s, d = q.shape
+    dv = v.shape[-1]
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    nq, nk = s // bq, s // bk
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               window=window, bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dv), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dv), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dv), jnp.float32),   # running accumulator
+            pltpu.VMEM((bq,), jnp.float32),      # running max
+            pltpu.VMEM((bq,), jnp.float32),      # running denominator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,31 @@
+"""Sequential-recurrence oracle for the SSD kernel (independent of the
+chunked formulation — a plain O(S) state-space scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a, bm, cm):
+    """x: (B, S, H, P); dt: (B, S, H); a: (H,); bm/cm: (B, S, N).
+
+    h_t = exp(a*dt_t) h_{t-1} + dt_t * B_t x_t ;  y_t = C_t . h_t
+    """
+    b, s, h, p = x.shape
+    n = bm.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                         # (b,h,p),(b,h),(b,n),(b,n)
+        da = jnp.exp(dtt * a)                         # (b,h)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dtt, bt, xt)
+        state = da[..., None, None] * state + upd
+        y = jnp.einsum("bn,bhpn->bhp", ct, state)
+        return state, y
+
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(bm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(cm.astype(jnp.float32), 1, 0))
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

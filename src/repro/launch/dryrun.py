@@ -1,0 +1,229 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+# production mesh; record memory_analysis / cost_analysis / collective
+# schedule for the roofline (EXPERIMENTS.md §Dry-run, §Roofline).
+# NOTE: XLA_FLAGS must be set before any other import (jax locks device
+# count on first init), hence the two lines above everything else.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b --shape decode_32k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes --out results.json
+
+import argparse
+import contextlib
+import dataclasses
+
+
+def _nullcontext():
+    return contextlib.nullcontext()
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import ARCHS, get_arch
+from repro.launch import specs as S
+from repro.launch.hlo import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.sharding import policy
+from repro.sharding import rules as R
+
+
+def _jit_step(cfg, shape_name, mesh):
+    shape = INPUT_SHAPES[shape_name]
+    spec = S.input_specs(cfg, shape_name)
+    step = S.make_step(cfg, shape_name)
+    b_sh = R.batch_shardings(spec["batch"], mesh)
+
+    if shape.kind == "train":
+        p_sh = R.params_shardings(spec["params"], mesh, fsdp=True)
+        o_sh = {"mu": R.params_shardings(spec["opt_state"]["mu"], mesh,
+                                         fsdp=True),
+                "nu": R.params_shardings(spec["opt_state"]["nu"], mesh,
+                                         fsdp=True),
+                "step": jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec())}
+        rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        metrics_shapes = jax.eval_shape(step, spec["params"],
+                                        spec["opt_state"], spec["batch"])[2]
+        jitted = jax.jit(step,
+                         in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh,
+                                        jax.tree.map(lambda _: rep,
+                                                     metrics_shapes)),
+                         donate_argnums=(0, 1))
+        args = (spec["params"], spec["opt_state"], spec["batch"])
+    elif shape.kind == "prefill":
+        p_sh = R.params_shardings(spec["params"], mesh)
+        out_shapes = jax.eval_shape(step, spec["params"], spec["batch"])
+        lg_sh = R.logits_sharding(mesh, cfg, shape.global_batch)
+        c_sh = (R.cache_shardings(out_shapes[1], mesh, cfg)
+                if out_shapes[1] is not None else None)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                         out_shardings=(lg_sh, c_sh))
+        args = (spec["params"], spec["batch"])
+    else:  # decode
+        p_sh = R.params_shardings(spec["params"], mesh)
+        c_sh = R.cache_shardings(spec["cache"], mesh, cfg)
+        rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        lg_sh = R.logits_sharding(mesh, cfg, shape.global_batch)
+        # donate the KV cache: the decode step updates it in place on
+        # real hardware instead of copying seq_len bytes per token
+        jitted = jax.jit(step,
+                         in_shardings=(p_sh, c_sh, b_sh["tokens"], rep),
+                         out_shardings=(lg_sh, c_sh),
+                         donate_argnums=(1,))
+        args = (spec["params"], spec["cache"], spec["batch"]["tokens"],
+                spec["pos"])
+    return jitted, args
+
+
+def _unrolled_variant(cfg, k: int):
+    """Variant with k periods UNROLLED into the prefix (no scan). Used to
+    measure the true in-context marginal cost of one period: XLA's
+    cost_analysis counts a scan (while) body once regardless of trip
+    count, and a naive (full - empty) subtraction picks up unrelated
+    compile-context differences (measured 22x on mamba2 - see
+    EXPERIMENTS.md #Perf B2), so we extrapolate from two unrolled
+    compiles instead."""
+    k = min(k, cfg.n_periods)
+    return dataclasses.replace(
+        cfg, n_layers=len(cfg.prefix) + k * len(cfg.period) + len(cfg.suffix),
+        prefix=cfg.prefix + cfg.period * k, period=(), n_periods=0,
+        name=f"{cfg.name}-u{k}")
+
+
+def _compile_and_measure(cfg, shape_name, mesh):
+    jitted, args = _jit_step(cfg, shape_name, mesh)
+    t0 = time.time()
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "memory": {
+            k: int(getattr(mem, k, 0) or 0)
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+        },
+    }
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               verbose: bool = True, correct_scan: bool = True,
+               constrain_activations: bool = True) -> dict:
+    cfg = get_arch(arch)
+    ok, why = cfg.supports_shape(shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pol = policy.policy(mesh) if constrain_activations else _nullcontext()
+    try:
+        with mesh, pol:
+            main = _compile_and_measure(cfg, shape_name, mesh)
+            u2 = u4 = None
+            if correct_scan and cfg.n_periods > 1:
+                u2 = _compile_and_measure(_unrolled_variant(cfg, 2),
+                                          shape_name, mesh)
+                if cfg.n_periods > 2:
+                    u4 = _compile_and_measure(_unrolled_variant(cfg, 4),
+                                              shape_name, mesh)
+    except Exception as e:
+        if verbose:
+            traceback.print_exc()
+        return {"arch": arch, "shape": shape_name, "status": "failed",
+                "multi_pod": multi_pod, "error": f"{type(e).__name__}: {e}"}
+
+    n_dev = mesh.size
+    res = {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "multi_pod": multi_pod, "n_devices": n_dev,
+        "n_periods": cfg.n_periods, **main,
+    }
+    # cost_analysis counts a scan (while) body ONCE -> correct FLOPs/bytes
+    # by extrapolating the per-period marginal measured on UNROLLED
+    # variants (u2, u4). The HLO collective parser is trip-count aware
+    # and needs no correction.
+    if u2 is not None:
+        n = cfg.n_periods
+        k2 = min(2, n)
+        k4 = min(4, n)
+        for key in ("flops_per_device", "bytes_per_device"):
+            if u4 is not None and k4 > k2:
+                body = max(0.0, (u4[key] - u2[key]) / (k4 - k2))
+                res[key + "_corrected"] = u2[key] + body * (n - k2)
+            else:
+                res[key + "_corrected"] = u2[key]
+        res["u2_flops_per_device"] = u2["flops_per_device"]
+        if u4 is not None:
+            res["u4_flops_per_device"] = u4["flops_per_device"]
+    else:
+        res["flops_per_device_corrected"] = main["flops_per_device"]
+        res["bytes_per_device_corrected"] = main["bytes_per_device"]
+    if verbose:
+        ms = res["memory"]
+        print(f"[{arch} x {shape_name} x {'512' if multi_pod else '256'}] "
+              f"OK lower={main['lower_s']:.0f}s compile={main['compile_s']:.0f}s "
+              f"flops/dev={res['flops_per_device_corrected']:.3e} "
+              f"args={ms['argument_size_in_bytes']/2**30:.2f}GiB "
+              f"temp={ms['temp_size_in_bytes']/2**30:.2f}GiB "
+              f"coll={res['collectives']['total']/2**20:.1f}MiB/shard")
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--no-constrain", action="store_true",
+                    help="disable activation sharding constraints (A/B)")
+    args = ap.parse_args()
+
+    runs = []
+    if args.all:
+        for a in ARCHS:
+            for s in INPUT_SHAPES:
+                runs.append((a, s))
+    else:
+        runs.append((args.arch, args.shape))
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for a, s in runs:
+        for mp in meshes:
+            res = dryrun_one(a, s, multi_pod=mp,
+                             constrain_activations=not args.no_constrain)
+            results.append(res)
+            if res["status"] == "skipped":
+                print(f"[{a} x {s}] SKIP: {res['reason']}")
+            elif res["status"] == "failed":
+                print(f"[{a} x {s} x {'512' if mp else '256'}] "
+                      f"FAILED: {res['error']}")
+            if args.out:
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_fail = sum(r["status"] == "failed" for r in results)
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,66 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Hillclimb measurement driver: re-measures the three chosen pairs and
+# appends a labeled row per pair to hillclimb_log.json (EXPERIMENTS §Perf).
+#
+# Usage: PYTHONPATH=src python -m repro.launch.hillclimb <label> [--no-constrain]
+
+import argparse
+import json
+
+from repro.launch.dryrun import dryrun_one
+from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS, model_flops
+
+PAIRS = [
+    ("deepseek-v3-671b", "train_4k"),
+    ("mamba2-1.3b", "train_4k"),
+    ("mistral-nemo-12b", "decode_32k"),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("label")
+    ap.add_argument("--no-constrain", action="store_true")
+    ap.add_argument("--pairs", default=None,
+                    help="comma-separated arch:shape filter")
+    args = ap.parse_args()
+    pairs = PAIRS
+    if args.pairs:
+        pairs = [tuple(p.split(":")) for p in args.pairs.split(",")]
+
+    log_path = "hillclimb_log.json"
+    log = []
+    if os.path.exists(log_path):
+        log = json.load(open(log_path))
+    for arch, shape in pairs:
+        r = dryrun_one(arch, shape, verbose=False,
+                       constrain_activations=not args.no_constrain)
+        if r["status"] != "ok":
+            print(f"{arch} x {shape}: {r}")
+            continue
+        fl = r["flops_per_device_corrected"]
+        by = r["bytes_per_device_corrected"]
+        co = r["collectives"]["total"]
+        row = {
+            "label": args.label, "arch": arch, "shape": shape,
+            "compute_s": fl / PEAK_FLOPS, "memory_s": by / HBM_BW,
+            "collective_s": co / LINK_BW,
+            "useful_ratio": model_flops(arch, shape) / (fl * r["n_devices"]),
+            "flops_per_device": fl, "bytes_per_device": by,
+            "collective_bytes": co,
+            "collective_breakdown": r["collectives"]["bytes"],
+            "temp_gib": r["memory"]["temp_size_in_bytes"] / 2**30,
+        }
+        log.append(row)
+        print(f"[{args.label}] {arch} x {shape}: "
+              f"C={row['compute_s']:.3g}s M={row['memory_s']:.3g}s "
+              f"X={row['collective_s']:.3g}s useful={row['useful_ratio']:.3f} "
+              f"temp={row['temp_gib']:.0f}GiB")
+    with open(log_path, "w") as f:
+        json.dump(log, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

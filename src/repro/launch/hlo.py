@@ -1,0 +1,131 @@
+"""HLO text analysis: collective-bytes accounting for the roofline.
+
+cost_analysis() does not report collective traffic, so we parse the
+compiled (post-SPMD) HLO and sum the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op. Two subtleties:
+
+  * shapes in the partitioned module are per-shard -> global bytes =
+    per-shard bytes x n_devices;
+  * a jax.lax.scan lowers to a `while` whose body appears ONCE in the
+    module — collectives inside it must be multiplied by the loop trip
+    count. We parse the computation graph structurally: per-computation
+    collective bytes, then walk call/while edges, multiplying while
+    bodies by the trip count recovered from the loop condition constant.
+
+(The same body-once caveat applies to cost_analysis FLOPs/bytes; dryrun
+corrects those by lowering a zero-period "base" variant and scaling the
+difference — see dryrun.py.)
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)"
+                       r"\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+(?:\.\d+)?\s*=\s*(\([^=]*?\)|[\w\[\],{}\/ ]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute|while|"
+    r"call|conditional)"
+    r"(-start)?\(")
+_ATTR_RE = re.compile(r"(body|condition|to_apply)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_module(hlo_text: str):
+    """Split into computations; per computation record collectives and
+    call/while edges."""
+    comps = {}
+    cur = None
+    entry = None
+    for line in hlo_text.splitlines():
+        mc = _COMP_RE.match(line.strip()) if line.rstrip().endswith("{") else None
+        if mc and ("->" in line):
+            cur = mc.group(1)
+            comps[cur] = {"colls": defaultdict(int), "counts": defaultdict(int),
+                          "calls": [], "whiles": [], "consts": []}
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        for m in _CONST_RE.finditer(line):
+            comps[cur]["consts"].append(int(m.group(1)))
+        mo = _OP_RE.match(line)
+        if not mo:
+            continue
+        shape_str, op, is_start = mo.group(1), mo.group(2), mo.group(3)
+        if op in COLLECTIVE_OPS:
+            comps[cur]["colls"][op] += _shape_bytes(shape_str)
+            comps[cur]["counts"][op] += 1
+        elif op == "while":
+            attrs = dict(_ATTR_RE.findall(line))
+            comps[cur]["whiles"].append((attrs.get("body"),
+                                         attrs.get("condition")))
+        elif op in ("call", "conditional"):
+            for _, target in _ATTR_RE.findall(line):
+                comps[cur]["calls"].append(target)
+    return comps, entry
+
+
+def _trip_count(comps, cond_name) -> int:
+    """Heuristic: the largest constant in the loop condition computation."""
+    c = comps.get(cond_name)
+    if not c or not c["consts"]:
+        return 1
+    return max(1, max(c["consts"]))
+
+
+def _accumulate(comps, name, memo):
+    if name not in comps:
+        return {}, {}
+    if name in memo:
+        return memo[name]
+    c = comps[name]
+    by = defaultdict(int, c["colls"])
+    cnt = defaultdict(int, c["counts"])
+    for callee in c["calls"]:
+        sub_b, sub_c = _accumulate(comps, callee, memo)
+        for k, v in sub_b.items():
+            by[k] += v
+        for k, v in sub_c.items():
+            cnt[k] += v
+    for body, cond in c["whiles"]:
+        trips = _trip_count(comps, cond)
+        sub_b, sub_c = _accumulate(comps, body, memo)
+        for k, v in sub_b.items():
+            by[k] += v * trips
+        for k, v in sub_c.items():
+            cnt[k] += v * trips
+    memo[name] = (dict(by), dict(cnt))
+    return memo[name]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Trip-count-aware per-shard collective bytes from compiled HLO."""
+    comps, entry = parse_module(hlo_text)
+    if entry is None:
+        return {"bytes": {}, "counts": {}, "total": 0}
+    by, cnt = _accumulate(comps, entry, {})
+    return {"bytes": by, "counts": cnt, "total": sum(by.values())}

@@ -1,0 +1,103 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+  compute term    = HLO_FLOPs_per_chip / peak_FLOPs
+  memory term     = HLO_bytes_per_chip / HBM_bw
+  collective term = collective_bytes_per_chip / link_bw
+
+HLO terms use the scan-corrected per-device numbers from dryrun.py (the
+SPMD module is per-chip). MODEL_FLOPS = 6*N_active*D (train) or
+2*N_active*D (inference) per token; the ratio MODEL_FLOPS/HLO_FLOPs
+exposes remat/dispatch/redundancy waste.
+"""
+from __future__ import annotations
+
+import json
+
+from repro.configs.base import INPUT_SHAPES, active_param_count
+from repro.configs.registry import get_arch
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic useful FLOPs for the whole step (all chips)."""
+    cfg = get_arch(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch              # one token per sequence
+    return 2.0 * n_active * tokens
+
+
+def _advice(dom: str, arch: str, shape: str) -> str:
+    cfg = get_arch(arch)
+    if dom == "collective":
+        if cfg.moe is not None:
+            return ("shard_map sort-based MoE dispatch with explicit "
+                    "all-to-all; bf16 FSDP gathers")
+        return "overlap all-gathers with compute; reduce-scatter grads"
+    if dom == "memory":
+        if INPUT_SHAPES[shape].kind == "decode":
+            return ("KV-cache is re-read per token: quantize cache to int8 "
+                    "or shrink with MLA/ring buffers")
+        return "fuse attention (flash kernel) to avoid score materialization"
+    return "increase arithmetic intensity: larger per-chip batch or seq tile"
+
+
+def analyze(results_path: str, multi_pod: bool | None = False):
+    with open(results_path) as f:
+        results = json.load(f)
+    rows = []
+    for r in results:
+        if r.get("status") != "ok":
+            continue
+        if multi_pod is not None and r.get("multi_pod") != multi_pod:
+            continue
+        n = r["n_devices"]
+        fl = r.get("flops_per_device_corrected", r["flops_per_device"])
+        by = r.get("bytes_per_device_corrected", r["bytes_per_device"])
+        coll = r["collectives"]["total"]
+        t_c = fl / PEAK_FLOPS
+        t_m = by / HBM_BW
+        t_x = coll / LINK_BW
+        dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+        mf = model_flops(r["arch"], r["shape"])
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "n_devices": n,
+            "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "dominant": dom,
+            "model_flops": mf,
+            "hlo_flops_global": fl * n,
+            "useful_ratio": mf / (fl * n) if fl else 0.0,
+            "advice": _advice(dom, r["arch"], r["shape"]),
+        })
+    return rows
+
+
+def to_markdown(rows) -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO flops | what would move it |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} "
+            f"| {r['memory_s']:.2e} | {r['collective_s']:.2e} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {r['advice']} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    import sys
+    rows = analyze(sys.argv[1] if len(sys.argv) > 1 else
+                   "dryrun_results.json")
+    print(to_markdown(rows))

@@ -1,0 +1,117 @@
+"""Input specs + step functions for the multi-pod dry-run.
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStruct
+stand-ins for every model input — shardable, never allocated. Decode
+shapes lower ``serve_step`` (one token against a seq_len KV cache);
+train_4k lowers ``train_step`` (loss + grad + AdamW); prefill lowers the
+cache-building forward.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models import transformer as T
+from repro.training.optim import OptConfig, adamw_update, init_opt_state
+
+OPT = OptConfig(lr=3e-4, warmup=100, total_steps=10_000)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStructs for the data batch of one step."""
+    b, s = shape.global_batch, shape.seq_len
+    out = {}
+    if shape.kind == "decode":
+        out["tokens"] = _sds((b, 1), jnp.int32)
+        return out
+    if cfg.embed_inputs:
+        out["tokens"] = _sds((b, s), jnp.int32)
+        if cfg.vision_tokens:
+            out["vision_embeds"] = _sds((b, cfg.vision_tokens, cfg.d_model),
+                                        cfg.dtype)
+            out["mrope_pos"] = _sds((3, b, s), jnp.int32)
+    else:
+        out["embeds"] = _sds((b, s, cfg.d_model), cfg.dtype)
+    if shape.kind == "train":
+        out["labels"] = _sds((b, s), jnp.int32)
+    return out
+
+
+def params_specs(cfg: ModelConfig, dtype=None) -> dict:
+    """Shape-only param tree (via eval_shape; nothing allocated)."""
+    shapes = jax.eval_shape(functools.partial(T.init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    if dtype is not None:
+        shapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, jnp.dtype(dtype)), shapes)
+    return shapes
+
+
+def opt_specs(params_shapes) -> dict:
+    return jax.eval_shape(init_opt_state, params_shapes)
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """Everything the step function consumes, as ShapeDtypeStructs."""
+    shape = INPUT_SHAPES[shape_name]
+    out = {"batch": batch_specs(cfg, shape)}
+    if shape.kind == "train":
+        p = params_specs(cfg, "float32")
+        out["params"] = p
+        out["opt_state"] = opt_specs(p)
+    else:
+        out["params"] = params_specs(cfg, cfg.dtype)
+        if shape.kind == "decode":
+            out["cache"] = cache_specs(cfg, shape)
+            out["pos"] = _sds((), jnp.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, remat: bool = True):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = T.forward_train(p, batch, cfg, remat=remat)
+            return loss, metrics
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params)
+        params, opt_state, om = adamw_update(OPT, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **om}
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return T.prefill(params, batch, cfg)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens, pos):
+        return T.decode_step(params, cache, tokens, pos, cfg)
+    return serve_step
+
+
+def make_step(cfg: ModelConfig, shape_name: str):
+    kind = INPUT_SHAPES[shape_name].kind
+    if kind == "train":
+        return make_train_step(cfg)
+    if kind == "prefill":
+        return make_prefill_step(cfg)
+    return make_serve_step(cfg)

@@ -1,0 +1,72 @@
+"""Training launcher.
+
+CPU/demo:    PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b \
+                 --reduced --steps 20
+Production:  the same entry point with --mesh pod|multipod builds the
+             pjit train step exactly as the dry-run does (requires TPU
+             devices; on this container use repro.launch.dryrun instead).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_arch
+from repro.training.optim import OptConfig
+from repro.training.train_loop import train_lm
+from repro.training import checkpoint
+
+
+def synthetic_lm_data(cfg, batch: int, seq: int, seed: int = 0):
+    """Token stream with learnable n-gram structure (repeat + offset)."""
+    rng = np.random.default_rng(seed)
+
+    def data_fn(step):
+        base = rng.integers(3, cfg.vocab, size=(batch, seq), dtype=np.int32)
+        evens = base[:, 2::2]
+        base[:, 2::2] = (base[:, 1:1 + 2 * evens.shape[1]:2] + 1) % cfg.vocab
+        labels = np.roll(base, -1, axis=1)
+        return {"tokens": base, "labels": labels}
+
+    return data_fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (CPU-sized) variant")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if not cfg.embed_inputs:
+        raise SystemExit(f"{cfg.name} is encoder-only; use the classifier "
+                         f"trainer (repro.training.train_loop)")
+    print(f"training {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
+          f"vocab={cfg.vocab} on {jax.device_count()} device(s)")
+    params, hist = train_lm(
+        cfg, data_fn=synthetic_lm_data(cfg, args.batch, args.seq),
+        steps=args.steps,
+        opt=OptConfig(lr=args.lr, warmup=max(1, args.steps // 10),
+                      total_steps=args.steps),
+        log_every=max(1, args.steps // 10))
+    print(f"final loss {hist[-1]['loss']:.3f} "
+          f"(first {hist[0]['loss']:.3f})")
+    if args.ckpt:
+        checkpoint.save(args.ckpt, params, meta={"arch": cfg.name,
+                                                 "steps": args.steps})
+        print(f"checkpoint -> {args.ckpt}.npz")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.models.transformer import (  # noqa: F401
+    decode_step,
+    forward_train,
+    init_cache,
+    init_params,
+    prefill,
+)

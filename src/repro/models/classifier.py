@@ -1,0 +1,53 @@
+"""Sequence classifier on top of the transformer stack (encoder mode).
+
+Used for (i) the neural marketplace "APIs" (tiny models of different
+capacity answering classification-style queries, mirroring the paper's
+tasks) and (ii) the DistilBERT-analogue generation scorer.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models.layers import apply_norm
+from repro.models.transformer import _apply_stack, _embed_inputs, init_params
+
+
+def encoder_config(name: str, n_layers: int = 4, d_model: int = 128,
+                   n_heads: int = 4, d_ff: int = 256, vocab: int = 512,
+                   max_seq: int = 256) -> ModelConfig:
+    return ModelConfig(
+        name=name, arch_type="dense", n_layers=n_layers, d_model=d_model,
+        n_heads=n_heads, n_kv_heads=n_heads, head_dim=d_model // n_heads,
+        d_ff=d_ff, vocab=vocab,
+        period=(LayerSpec("attn", "dense"),), n_periods=n_layers,
+        pos="abs", causal=False, ffn_act="gelu", norm="layernorm",
+        max_seq=max_seq, dtype="float32",
+    )
+
+
+def init_classifier(key, cfg: ModelConfig, n_classes: int):
+    k1, k2 = jax.random.split(key)
+    params = init_params(k1, cfg)
+    params["head"] = {"w": 0.02 * jax.random.normal(
+        k2, (cfg.d_model, n_classes)), "b": jnp.zeros((n_classes,))}
+    return params
+
+
+def classifier_logits(params, tokens, cfg: ModelConfig):
+    """tokens: (B, L) -> class logits (B, C). Pools the CLS position."""
+    x, positions = _embed_inputs(params, {"tokens": tokens}, cfg, "train")
+    x, _, _ = _apply_stack(params, x, cfg=cfg, mode="train",
+                           positions=positions, cache=None, pos=None,
+                           remat=False)
+    h = apply_norm(params["final_norm"], x, cfg)[:, 0]      # CLS pool
+    return h @ params["head"]["w"] + params["head"]["b"]
+
+
+def classifier_score(params, tokens, cfg: ModelConfig):
+    """Regression head in [0,1] (the generation scorer g)."""
+    logits = classifier_logits(params, tokens, cfg)
+    return jax.nn.sigmoid(logits[:, 0])

@@ -1,0 +1,176 @@
+"""Common layers: norms, MLPs, embeddings, RoPE / M-RoPE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = dict
+
+
+def _normal(key, shape, scale=0.02, dtype=jnp.float32):
+    return scale * jax.random.normal(key, shape, dtype=dtype)
+
+
+def compute_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def cast(x, cfg: ModelConfig):
+    return x.astype(compute_dtype(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig, d: int | None = None) -> Params:
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p: Params, x, cfg: ModelConfig, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm" or "bias" in p:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p.get("bias", 0.0)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / MLP
+# ---------------------------------------------------------------------------
+
+
+def init_dense(key, d_in: int, d_out: int, scale=0.02) -> Params:
+    return {"w": _normal(key, (d_in, d_out), scale)}
+
+
+def apply_dense(p: Params, x, cfg: ModelConfig):
+    w = cast(p["w"], cfg)
+    y = jnp.einsum("...d,df->...f", x, w, preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def _act(name: str):
+    if name in ("swiglu",):
+        return jax.nn.silu
+    return jax.nn.gelu
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"up": init_dense(ks[0], cfg.d_model, d_ff),
+         "down": init_dense(ks[1], d_ff, cfg.d_model)}
+    if cfg.ffn_act in ("swiglu", "geglu"):
+        p["gate"] = init_dense(ks[2], cfg.d_model, d_ff)
+    return p
+
+
+def apply_mlp(p: Params, x, cfg: ModelConfig):
+    up = apply_dense(p["up"], x, cfg)
+    if "gate" in p:
+        g = apply_dense(p["gate"], x, cfg)
+        h = _act(cfg.ffn_act)(g) * up
+    else:
+        h = _act(cfg.ffn_act)(up)
+    return apply_dense(p["down"], h, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {}
+    if cfg.embed_inputs:
+        p["tok"] = _normal(ks[0], (cfg.vocab, cfg.d_model))
+    if cfg.pos == "abs":
+        p["pos"] = _normal(ks[1], (cfg.max_seq if cfg.max_seq <= 65_536 else 65_536,
+                                   cfg.d_model))
+    if not cfg.tie_embeddings:
+        p["unembed"] = _normal(ks[2], (cfg.d_model, cfg.vocab))
+    return p
+
+
+def embed_tokens(p: Params, tokens, cfg: ModelConfig):
+    w = cast(p["tok"], cfg)
+    return jnp.take(w, tokens, axis=0)
+
+
+def unembed(p: Params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        w = cast(p["tok"], cfg).T
+    else:
+        w = cast(p["unembed"], cfg)
+    return jnp.einsum("...d,dv->...v", x, w,
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    ang = ang[..., None, :]                          # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_sections(head_dim: int):
+    """Split of the half-dim into (t, h, w) sections, Qwen2-VL style."""
+    half = head_dim // 2
+    t = half // 4
+    h = (half - t) // 2
+    w = half - t - h
+    return (t, h, w)
+
+
+def apply_mrope(x, pos3, theta: float):
+    """x: (B, S, H, hd); pos3: (3, B, S) t/h/w position ids."""
+    hd = x.shape[-1]
+    half = hd // 2
+    inv = rope_freqs(hd, theta)                      # (half,)
+    secs = mrope_sections(hd)
+    # section id per frequency index
+    sec_id = jnp.concatenate([
+        jnp.full((secs[0],), 0), jnp.full((secs[1],), 1), jnp.full((secs[2],), 2)
+    ]).astype(jnp.int32)                             # (half,)
+    # per-frequency positions: pick t/h/w pos per section
+    pos = jnp.take(pos3.astype(jnp.float32), sec_id, axis=0)  # (half, B, S)
+    ang = jnp.moveaxis(pos, 0, -1) * inv             # (B, S, half)
+    ang = ang[..., None, :]                          # (B, S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,128 @@
+"""Serving engine: generation (prefill + decode loop) and the
+cascade-aware tiered scheduler (the production realization of FrugalGPT's
+LLM cascade — DESIGN.md §3).
+
+Queries hit tier 1 as one batch; the scorer marks unreliable answers;
+those are *compacted* and re-batched to tier 2, etc. Each tier is an
+independently sharded model (pjit on the production mesh; plain jit on
+the CPU CI runner).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class GenerationEngine:
+    """Batched prefill+decode generation for one model."""
+
+    cfg: ModelConfig
+    params: dict
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+
+    def __post_init__(self):
+        cfg = self.cfg
+
+        @jax.jit
+        def _prefill(params, batch, max_len):
+            return T.prefill(params, batch, cfg, max_len=int(max_len))
+
+        self._prefill_fns = {}
+
+        @functools.partial(jax.jit, static_argnums=())
+        def _decode(params, cache, tok, pos, key):
+            logits, cache = T.decode_step(params, cache, tok, pos, cfg)
+            logits = logits[:, -1]
+            if self.temperature > 0:
+                nxt = jax.random.categorical(key, logits / self.temperature)
+            else:
+                nxt = jnp.argmax(logits, -1)
+            return nxt[:, None].astype(jnp.int32), cache
+
+        self._decode = _decode
+
+    def generate(self, tokens: np.ndarray, n_new: int | None = None,
+                 seed: int = 0) -> np.ndarray:
+        """tokens (B, S) -> generated (B, n_new)."""
+        n_new = n_new or self.max_new_tokens
+        b, s = tokens.shape
+        max_len = s + n_new
+        key = (s, max_len)
+        if key not in self._prefill_fns:
+            self._prefill_fns[key] = jax.jit(
+                lambda p, bt: T.prefill(p, bt, self.cfg, max_len=max_len))
+        logits, cache = self._prefill_fns[key](self.params,
+                                               {"tokens": jnp.asarray(tokens)})
+        nxt = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        out = [np.asarray(nxt)]
+        rkey = jax.random.PRNGKey(seed)
+        for i in range(n_new - 1):
+            rkey, sub = jax.random.split(rkey)
+            nxt, cache = self._decode(self.params, cache, nxt,
+                                      jnp.int32(s + i), sub)
+            out.append(np.asarray(nxt))
+        return np.concatenate(out, axis=1)
+
+
+@dataclasses.dataclass
+class Tier:
+    name: str
+    answer: Callable            # tokens (n, L) -> answers (n,)
+    cost: Callable              # tokens (n, L) -> per-query cost (n,)
+
+
+@dataclasses.dataclass
+class CascadeServer:
+    """FrugalGPT cascade as a serving policy (tier-by-tier compaction)."""
+
+    tiers: Sequence[Tier]
+    thresholds: Sequence[float]         # len = len(tiers) - 1
+    scorer: Callable                    # (tokens, answers) -> scores (n,)
+    batch_size: int = 256
+
+    def serve(self, tokens: np.ndarray) -> dict:
+        n = tokens.shape[0]
+        answers = np.zeros(n, np.int32)
+        cost = np.zeros(n, np.float64)
+        stopped_at = np.full(n, len(self.tiers) - 1, np.int32)
+        pending = np.arange(n)
+        t0 = time.time()
+        tier_counts = []
+        for j, tier in enumerate(self.tiers):
+            if len(pending) == 0:
+                tier_counts.append(0)
+                continue
+            tier_counts.append(len(pending))
+            toks = tokens[pending]
+            ans = np.zeros(len(pending), np.int32)
+            for i in range(0, len(pending), self.batch_size):
+                ans[i:i + self.batch_size] = tier.answer(
+                    toks[i:i + self.batch_size])
+            cost[pending] += tier.cost(toks)
+            if j < len(self.tiers) - 1:
+                s = self.scorer(toks, ans)
+                accept = s >= self.thresholds[j]
+            else:
+                accept = np.ones(len(pending), bool)
+            done = pending[accept]
+            answers[done] = ans[accept]
+            stopped_at[done] = j
+            pending = pending[~accept]
+        return {
+            "answers": answers,
+            "cost": cost,
+            "stopped_at": stopped_at,
+            "tier_counts": tier_counts,
+            "latency_s": time.time() - t0,
+        }

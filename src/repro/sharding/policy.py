@@ -1,0 +1,93 @@
+"""Activation-sharding policy: logical with_sharding_constraint hooks.
+
+Model code calls ``constrain(x, "dp", None, "model")`` with logical axis
+names; when a policy mesh is active (the dry-run / production launcher),
+this pins the intermediate's sharding so GSPMD propagation cannot wander
+into pathological reshards (e.g. all-gathering a 43 GB KV cache to
+re-split it over heads — see EXPERIMENTS.md §Perf C1). When no policy is
+active (CPU tests, single-device smoke), it is a no-op.
+
+Logical names:
+  "dp"    -> the batch axes ("pod","data") — applied only if divisible
+  "data"  -> the data axis only
+  "model" -> the model axis — applied only if divisible
+  None    -> replicated dim
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_ACTIVE_MESH = None
+
+
+def activate(mesh):
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def deactivate():
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = None
+
+
+@contextlib.contextmanager
+def policy(mesh):
+    activate(mesh)
+    try:
+        yield
+    finally:
+        deactivate()
+
+
+def _axis_size(mesh, name):
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def constrain(x, *logical, priority=None):
+    """Pin x's sharding by logical axis names (no-op without a policy).
+
+    Each dim may name one axis, "dp", or a tuple of axes. Dims claim mesh
+    axes in ``priority`` order (default: left-to-right); an axis already
+    claimed by a higher-priority dim is dropped for later dims, so e.g.
+    KV heads take "model" when they divide it and the sequence dim picks
+    it up otherwise.
+    """
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+    spec = [None] * x.ndim
+    order = list(priority) if priority is not None else list(range(x.ndim))
+    used: set = set()
+    for i in order:
+        if i >= len(logical) or logical[i] is None:
+            continue
+        name = logical[i]
+        if name == "dp":
+            cand = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        elif isinstance(name, tuple):
+            cand = tuple(a for a in name if a in mesh.axis_names)
+        else:
+            cand = (name,) if name in mesh.axis_names else ()
+        axes = tuple(a for a in cand if a not in used)
+        # greedily shrink the axis set until it divides the dim
+        while axes:
+            total = 1
+            for a in axes:
+                total *= _axis_size(mesh, a)
+            if total > 1 and x.shape[i] % total == 0:
+                break
+            axes = axes[:-1]
+        if not axes:
+            continue
+        total = 1
+        for a in axes:
+            total *= _axis_size(mesh, a)
+        if total <= 1:
+            continue
+        used.update(axes)
+        spec[i] = axes if len(axes) > 1 else axes[0]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,214 @@
+"""Partition-spec rules: param / optimizer / cache / batch shardings.
+
+Logical mapping (DESIGN.md §5):
+  vocab, attention heads, FFN hidden, MoE expert axis, mamba inner dim
+      -> "model"
+  batch -> ("pod", "data"); batch==1 decode -> sequence over "data"
+  train mode additionally FSDP-shards the largest replicated dim of every
+  weight over "data" (ZeRO-style; serving keeps params data-replicated).
+
+Axes are only sharded when divisible by the mesh axis size (e.g. gemma3's
+4 query heads stay replicated on a 16-wide model axis).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import axis_size, data_axes
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 1 and n % size == 0
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(path: str, shape: tuple, mesh, *, fsdp: bool = False) -> P:
+    """PartitionSpec for one parameter leaf, by path + shape."""
+    m = axis_size(mesh, "model")
+    stacked = "period/" in path or path.startswith("period")
+    dims = list(shape[1:]) if stacked else list(shape)
+    spec: list = [None] * len(dims)
+
+    def ok(i):                      # dim i divisible by model axis
+        return _div(dims[i], m)
+
+    leaf = path.split("/")[-1]
+    parent = path.split("/")[-2] if "/" in path else ""
+
+    if leaf == "tok" or (parent == "embed" and leaf == "pos"):
+        if leaf == "tok" and ok(0):
+            spec[0] = "model"                      # (V, d) vocab-sharded
+    elif leaf == "unembed":
+        if ok(1):
+            spec[1] = "model"                      # (d, V)
+    elif leaf in ("wq", "wk", "wv"):               # (d, H, hd)
+        if ok(1):
+            spec[1] = "model"
+    elif leaf == "wo":                             # (H, hd, d)
+        if ok(0):
+            spec[0] = "model"
+    elif leaf in ("wuq", "wuk", "wuv"):            # MLA (r, H, hd)
+        if ok(1):
+            spec[1] = "model"
+    elif leaf in ("up", "gate", "down") and len(dims) == 3:
+        if ok(0):
+            spec[0] = "model"                      # MoE experts (E, d, f)
+    elif leaf in ("sh_up", "sh_gate"):             # shared experts (d, f)
+        if ok(1):
+            spec[1] = "model"
+    elif leaf == "sh_down":                        # (f, d)
+        if ok(0):
+            spec[0] = "model"
+    elif leaf == "w" and len(dims) == 2:
+        # dense mlp / head: (d, f) or (f, d) — shard the wider dim
+        if "up" in path or "gate" in path:
+            if ok(1):
+                spec[1] = "model"
+        elif "down" in path:
+            if ok(0):
+                spec[0] = "model"
+    elif leaf in ("z_proj", "x_proj"):             # (d, d_in)
+        if ok(1):
+            spec[1] = "model"
+    elif leaf == "out_proj":                       # (d_in, d)
+        if ok(0):
+            spec[0] = "model"
+    elif leaf == "conv_x_w":                       # (k, d_in)
+        if ok(1):
+            spec[1] = "model"
+    elif leaf in ("conv_x_b", "norm") and len(dims) == 1:
+        if ok(0):
+            spec[0] = "model"
+    elif leaf in ("A_log", "D", "dt_bias"):
+        if ok(0):
+            spec[0] = "model"
+
+    if fsdp:
+        d = axis_size(mesh, "data")
+        # ZeRO-style: shard the largest still-replicated dim over "data"
+        order = sorted(range(len(dims)), key=lambda i: -dims[i])
+        for i in order:
+            if spec[i] is None and _div(dims[i], d) and dims[i] >= 1024:
+                spec[i] = "data"
+                break
+
+    if stacked:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def params_shardings(params_shapes, mesh, *, fsdp: bool = False):
+    """Map a params (or optimizer-state) shape pytree to NamedShardings."""
+
+    def fn(path, leaf):
+        ps = _path_str(path)
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, param_spec(ps, leaf.shape, mesh, fsdp=fsdp))
+
+    return jax.tree_util.tree_map_with_path(fn, params_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(shape: tuple, mesh, *, batch_dim: int = 0) -> P:
+    """Shard the batch dim over (pod, data) when divisible."""
+    dp = data_axes(mesh)
+    total = 1
+    for a in dp:
+        total *= axis_size(mesh, a)
+    spec = [None] * len(shape)
+    if total > 1 and _div(shape[batch_dim], total):
+        spec[batch_dim] = dp if len(dp) > 1 else dp[0]
+    return P(*spec)
+
+
+def batch_shardings(batch_shapes, mesh):
+    def fn(path, leaf):
+        ps = _path_str(path)
+        bd = 1 if ps.startswith("mrope_pos") else 0
+        return NamedSharding(mesh, batch_spec(leaf.shape, mesh, batch_dim=bd))
+
+    return jax.tree_util.tree_map_with_path(fn, batch_shapes)
+
+
+def cache_spec(path: str, shape: tuple, mesh, cfg: ModelConfig) -> P:
+    """Decode-cache sharding. Batch over (pod,data); if batch==1, shard
+    long sequence dims over "data" (context parallelism); KV heads / mamba
+    heads / inner dims over "model" when divisible."""
+    m = axis_size(mesh, "model")
+    d = axis_size(mesh, "data")
+    dp = data_axes(mesh)
+    total = 1
+    for a in dp:
+        total *= axis_size(mesh, a)
+    stacked = "period/" in path
+    dims = list(shape[1:]) if stacked else list(shape)
+    spec: list = [None] * len(dims)
+    leaf = path.split("/")[-1]
+
+    batch = dims[0]
+    if _div(batch, total):
+        spec[0] = dp if len(dp) > 1 else dp[0]
+
+    if leaf in ("k", "v"):                          # (B, S, KVH, hd)
+        if _div(dims[2], m):
+            spec[2] = "model"                       # heads fill the axis
+        elif _div(dims[1], m) and dims[1] >= 8192:
+            # heads can't fill "model": shard the sequence instead
+            # (flash-decode partial softmax; keeps cache/device bounded)
+            spec[1] = "model"
+        if spec[0] is None and dims[1] >= 8192:
+            # batch==1: additionally spread the sequence over "data"
+            if spec[1] == "model" and _div(dims[1], m * d):
+                spec[1] = ("data", "model")
+            elif spec[1] is None and _div(dims[1], d):
+                spec[1] = "data"
+    elif leaf in ("ckv", "kr"):                     # MLA (B, S, r)
+        if spec[0] is None and _div(dims[1], d) and dims[1] >= 8192:
+            spec[1] = "data"
+    elif leaf == "ssm":                             # (B, H, P, N)
+        if _div(dims[1], m):
+            spec[1] = "model"
+    elif leaf == "conv_x":                          # (B, k-1, d_in)
+        if _div(dims[2], m):
+            spec[2] = "model"
+    # conv_bc: replicated
+
+    if stacked:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def cache_shardings(cache_shapes, mesh, cfg: ModelConfig):
+    def fn(path, leaf):
+        ps = _path_str(path)
+        return NamedSharding(mesh, cache_spec(ps, leaf.shape, mesh, cfg))
+
+    return jax.tree_util.tree_map_with_path(fn, cache_shapes)
+
+
+def logits_sharding(mesh, cfg: ModelConfig, batch: int):
+    dp = data_axes(mesh)
+    total = 1
+    for a in dp:
+        total *= axis_size(mesh, a)
+    b = (dp if len(dp) > 1 else dp[0]) if _div(batch, total) else None
+    v = "model" if _div(cfg.vocab, axis_size(mesh, "model")) else None
+    return NamedSharding(mesh, P(b, None, v))

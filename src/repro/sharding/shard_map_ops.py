@@ -1,0 +1,94 @@
+"""Explicit shard_map collectives for the serving data plane.
+
+GSPMD handles the seq-sharded decode attention implicitly (§Perf C2);
+this module is the *explicit* production variant: flash-decode partial
+softmax over sequence shards with hand-placed pmax/psum, so the
+collective schedule is deterministic rather than propagation-dependent.
+Used by the launcher when ``--explicit-collectives`` is set; validated
+against the single-device oracle in tests/test_shard_map_ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+NEG_INF = -1e30
+
+
+def flash_decode_sharded(q, k, v, length, mesh, *, seq_axis: str = "model"):
+    """Decode attention with the KV cache sequence-sharded over
+    ``seq_axis``: each shard computes a partial softmax over its local
+    keys; pmax/psum combine the partials (one scalar-sized collective
+    per head instead of gathering the cache).
+
+    q: (B, KVH, G, D) replicated over seq_axis
+    k/v: (B, S, KVH, D) sharded on dim 1
+    length: scalar valid length. Returns (B, KVH, G, D).
+    """
+    n_shards = mesh.shape[seq_axis]
+    s = k.shape[1]
+    assert s % n_shards == 0, (s, n_shards)
+    s_loc = s // n_shards
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+
+    def local(q, k, v, length):
+        # k/v here are the LOCAL shard (B, s_loc, KVH, D)
+        idx = jax.lax.axis_index(seq_axis)
+        kpos = idx * s_loc + jnp.arange(s_loc)
+        logits = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        valid = kpos < length
+        logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+        m_loc = jnp.max(logits, axis=-1)                  # (b,h,g)
+        p = jnp.exp(logits - m_loc[..., None])
+        l_loc = jnp.sum(p, axis=-1)
+        o_loc = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+        # combine partial softmaxes across sequence shards
+        m_glob = jax.lax.pmax(m_loc, seq_axis)
+        corr = jnp.exp(m_loc - m_glob)
+        l_glob = jax.lax.psum(l_loc * corr, seq_axis)
+        o_glob = jax.lax.psum(o_loc * corr[..., None], seq_axis)
+        return (o_glob / jnp.maximum(l_glob, 1e-30)[..., None]).astype(q.dtype)
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(None, seq_axis, None, None),
+                  P(None, seq_axis, None, None), P()),
+        out_specs=P(),
+        check_rep=False,
+    )
+    return fn(q, k, v, jnp.asarray(length, jnp.int32))
+
+
+def expert_parallel_ffn(xg, w_gate, w_up, w_down, mesh, *,
+                        expert_axis: str = "model"):
+    """Explicit expert-parallel gated FFN: experts sharded over
+    ``expert_axis``; each shard runs only its local experts (no
+    cross-shard traffic here — dispatch/combine gathers live outside).
+
+    xg: (B, E, C, d) dispatched tokens; w_*: (E, d, f) / (E, f, d).
+    """
+    def local(xg, wg, wu, wd):
+        # all operands local: (B, E_loc, C, d), (E_loc, d, f)
+        g = jnp.einsum("becd,edf->becf", xg, wg,
+                       preferred_element_type=jnp.float32)
+        u = jnp.einsum("becd,edf->becf", xg, wu,
+                       preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(g) * u).astype(xg.dtype)
+        return jnp.einsum("becf,efd->becd", h, wd,
+                          preferred_element_type=jnp.float32).astype(xg.dtype)
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, expert_axis, None, None),
+                  P(expert_axis, None, None),
+                  P(expert_axis, None, None),
+                  P(expert_axis, None, None)),
+        out_specs=P(None, expert_axis, None, None),
+        check_rep=False,
+    )
+    return fn(xg, w_gate, w_up, w_down)

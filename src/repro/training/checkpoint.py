@@ -1,0 +1,57 @@
+"""Flat-npz checkpointing with a JSON manifest (no external deps)."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def save(path: str, tree, meta: dict | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    struct = jax.tree.map(lambda _: 0, tree)
+    man = {"structure": _describe(tree), "meta": meta or {}}
+    with open(path.removesuffix(".npz") + ".json", "w") as f:
+        json.dump(man, f, indent=1, default=str)
+
+
+def _describe(tree):
+    if isinstance(tree, dict):
+        return {k: _describe(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return [_describe(v) for v in tree]
+    a = np.asarray(tree)
+    return {"shape": list(a.shape), "dtype": str(a.dtype)}
+
+
+def load(path: str, like):
+    """Load into the structure of ``like`` (a template pytree)."""
+    z = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat = dict(z)
+
+    def rebuild(tmpl, prefix=""):
+        if isinstance(tmpl, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in tmpl.items()}
+        if isinstance(tmpl, (list, tuple)):
+            vals = [rebuild(v, f"{prefix}{i}/") for i, v in enumerate(tmpl)]
+            return type(tmpl)(vals)
+        return jnp.asarray(flat[prefix[:-1]])
+
+    return rebuild(like)

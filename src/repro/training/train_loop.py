@@ -1,0 +1,105 @@
+"""Training loops: classifier (marketplace APIs / scorer) and LM."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data import synthetic
+from repro.models.classifier import classifier_logits, init_classifier
+from repro.models.transformer import forward_train
+from repro.training.optim import OptConfig, adamw_update, init_opt_state
+
+
+def _xent(logits, labels):
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def train_classifier(cfg: ModelConfig, n_classes: int, *, task: str | None = None,
+                     data_fn=None, steps: int = 300, batch: int = 64,
+                     seq_len: int = 64, seed: int = 0,
+                     opt: OptConfig | None = None, log_every: int = 0):
+    """Train a classifier; data from the synthetic task or a custom
+    ``data_fn(step) -> (tokens, labels)``. Returns (params, history)."""
+    opt = opt or OptConfig(lr=1e-3, warmup=20, total_steps=steps)
+    key = jax.random.PRNGKey(seed)
+    params = init_classifier(key, cfg, n_classes)
+    state = init_opt_state(params)
+
+    @jax.jit
+    def step_fn(params, state, tokens, labels):
+        def loss_fn(p):
+            logits = classifier_logits(p, tokens, cfg)
+            return _xent(logits, labels), logits
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, state, om = adamw_update(opt, params, grads, state)
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return params, state, {"loss": loss, "acc": acc, **om}
+
+    hist = []
+    for i in range(steps):
+        if data_fn is not None:
+            toks, labels = data_fn(i)
+        else:
+            b = synthetic.sample(task, batch, seq_len=seq_len,
+                                 seed=seed * 100_003 + i)
+            toks, labels = b.tokens, b.labels
+        params, state, m = step_fn(params, state, jnp.asarray(toks),
+                                   jnp.asarray(labels))
+        hist.append({k: float(v) for k, v in m.items()})
+        if log_every and (i + 1) % log_every == 0:
+            print(f"  step {i+1}: loss={hist[-1]['loss']:.3f} "
+                  f"acc={hist[-1]['acc']:.3f}")
+    return params, hist
+
+
+def eval_classifier(params, cfg: ModelConfig, tokens, labels,
+                    batch: int = 256):
+    """Accuracy + predictions on a fixed set."""
+    n = tokens.shape[0]
+    preds = []
+    fn = jax.jit(functools.partial(classifier_logits, cfg=cfg))
+    for i in range(0, n, batch):
+        logits = fn(params, jnp.asarray(tokens[i:i + batch]))
+        preds.append(np.asarray(jnp.argmax(logits, -1)))
+    preds = np.concatenate(preds)
+    return float((preds == np.asarray(labels)).mean()), preds
+
+
+def train_lm(cfg: ModelConfig, *, data_fn, steps: int = 100,
+             opt: OptConfig | None = None, seed: int = 0, log_every: int = 0,
+             remat: bool = True):
+    """Generic LM trainer (used by the e2e example and distillation)."""
+    from repro.models.transformer import init_params
+    opt = opt or OptConfig(lr=3e-4, warmup=max(1, steps // 10),
+                           total_steps=steps)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    state = init_opt_state(params)
+
+    @jax.jit
+    def step_fn(params, state, batch):
+        def loss_fn(p):
+            loss, metrics = forward_train(p, batch, cfg, remat=remat)
+            return loss, metrics
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, state, om = adamw_update(opt, params, grads, state)
+        return params, state, {**metrics, **om}
+
+    hist = []
+    t0 = time.time()
+    for i in range(steps):
+        batch = data_fn(i)
+        batch = jax.tree.map(jnp.asarray, batch)
+        params, state, m = step_fn(params, state, batch)
+        hist.append({k: float(v) for k, v in m.items()})
+        if log_every and (i + 1) % log_every == 0:
+            dt = (time.time() - t0) / (i + 1)
+            print(f"  step {i+1}: loss={hist[-1]['loss']:.3f} "
+                  f"({dt*1e3:.0f} ms/step)")
+    return params, hist

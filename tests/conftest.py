@@ -1,0 +1,11 @@
+import os
+import sys
+
+# Tests run on the single CPU device (the dry-run sets its own 512-device
+# flag in a separate process; never here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

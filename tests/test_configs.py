@@ -1,0 +1,71 @@
+"""Config system: pattern coverage, published param counts, shape support."""
+import pytest
+
+from repro.configs.base import INPUT_SHAPES, active_param_count, param_count
+from repro.configs.registry import ARCHS, all_pairs, get_arch
+
+# published total parameter counts (billions), tolerance 15%
+PUBLISHED_B = {
+    "starcoder2-15b": 15.5, "hubert-xlarge": 0.96, "deepseek-v3-671b": 671.0,
+    "granite-moe-1b-a400m": 1.3, "mamba2-1.3b": 1.3, "mistral-nemo-12b": 12.2,
+    "qwen2-vl-72b": 72.0, "jamba-v0.1-52b": 52.0, "gemma3-1b": 1.0,
+}
+
+
+def test_all_archs_present():
+    assert len(ARCHS) == 10
+    kinds = {c.arch_type for c in ARCHS.values()}
+    assert kinds == {"dense", "moe", "ssm", "hybrid", "audio", "vlm"}
+
+
+@pytest.mark.parametrize("name", list(ARCHS))
+def test_layer_pattern_covers_stack(name):
+    cfg = ARCHS[name]
+    assert len(cfg.layers) == cfg.n_layers
+
+
+@pytest.mark.parametrize("name,target", PUBLISHED_B.items())
+def test_param_count_matches_published(name, target):
+    n = param_count(ARCHS[name]) / 1e9
+    assert abs(n - target) / target < 0.15, f"{name}: {n:.2f}B vs {target}B"
+
+
+def test_moe_active_params_far_below_total():
+    c = ARCHS["deepseek-v3-671b"]
+    assert active_param_count(c) < 0.1 * param_count(c)
+
+
+def test_reduced_variants_are_small():
+    for cfg in ARCHS.values():
+        r = cfg.reduced()
+        assert r.n_layers <= 2
+        assert r.d_model <= 512
+        if r.moe:
+            assert r.moe.n_experts <= 4
+
+
+def test_shape_support_matrix():
+    pairs = all_pairs()
+    ok = [(a.name, s.name) for a, s, o, _ in pairs if o]
+    skip = [(a.name, s.name) for a, s, o, _ in pairs if not o]
+    assert len(ok) == 33 and len(skip) == 7
+    # encoder-only: no decode
+    assert ("hubert-xlarge", "decode_32k") in skip
+    assert ("hubert-xlarge", "long_500k") in skip
+    # full-attention: no long_500k
+    for a in ("deepseek-v3-671b", "granite-moe-1b-a400m", "mistral-nemo-12b",
+              "moonshot-v1-16b-a3b", "qwen2-vl-72b"):
+        assert (a, "long_500k") in skip
+    # sub-quadratic archs run long_500k
+    for a in ("mamba2-1.3b", "jamba-v0.1-52b", "gemma3-1b", "starcoder2-15b"):
+        assert (a, "long_500k") in ok
+
+
+def test_get_arch_raises():
+    with pytest.raises(KeyError):
+        get_arch("nope")
+
+
+def test_input_shapes():
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["long_500k"].seq_len == 524_288

@@ -1,0 +1,182 @@
+"""FrugalGPT core: cascade invariants (hypothesis), router, simulation."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cascade import Cascade, evaluate_offline, run_online
+from repro.core.cost import TABLE1, ApiCost
+from repro.core.router import RouterConfig, learn_cascade, frontier
+from repro.core.simulate import (DATASETS, MarketData, mpi_matrix,
+                                 simulate_market, simulate_scores)
+
+
+def _tiny_market(n=200, k=4, seed=0):
+    rng = np.random.default_rng(seed)
+    correct = (rng.uniform(size=(n, k)) < np.linspace(0.5, 0.9, k)).astype(
+        np.float32)
+    cost = np.exp(np.linspace(0.0, 3.0, k))[None, :] * np.ones((n, 1),
+                                                               np.float32)
+    return MarketData([f"api{i}" for i in range(k)], jnp.asarray(correct),
+                      jnp.asarray(cost), jnp.ones(n, jnp.int32),
+                      jnp.ones(n, jnp.int32), jnp.zeros(n))
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+
+def test_table1_prices():
+    assert len(TABLE1) == 12
+    # 2 orders of magnitude spread (paper Table 1)
+    in_costs = [a.per_10m_input for a in TABLE1.values()
+                if a.per_10m_input > 0]
+    assert max(in_costs) / min(in_costs) >= 100
+    # the example from Table 1: 10M input tokens
+    assert float(TABLE1["GPT-4"].query_cost(1e7, 0)) == pytest.approx(30.0)
+    assert float(TABLE1["GPT-J"].query_cost(1e7, 0)) == pytest.approx(0.2)
+
+
+@given(n_in=st.integers(0, 10_000), n_out=st.integers(0, 2_000))
+def test_cost_model_linearity(n_in, n_out):
+    api = ApiCost(10.0, 20.0, 0.001)
+    c = float(api.query_cost(n_in, n_out))
+    assert c == pytest.approx(1e-6 * n_in + 2e-6 * n_out + 0.001, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# cascade invariants (property-based)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(t1=st.floats(0, 1), t2=st.floats(0, 1),
+       seed=st.integers(0, 10))
+def test_cascade_cost_between_first_and_sum(t1, t2, seed):
+    """Cascade cost >= first API cost and <= sum of all API costs."""
+    data = _tiny_market(seed=seed)
+    scores = simulate_scores(data, seed=seed)
+    cas = Cascade((0, 1, 2), (t1, t2))
+    m = evaluate_offline(cas, data, scores)
+    lo = float(data.cost[:, 0].mean())
+    hi = float(data.cost[:, [0, 1, 2]].sum(1).mean())
+    assert lo - 1e-6 <= m["avg_cost"] <= hi + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(t1=st.floats(0, 1), seed=st.integers(0, 10))
+def test_cascade_thresholds_monotone_cost(t1, seed):
+    """Raising a threshold can only push more queries downstream =>
+    cost is non-decreasing in tau."""
+    data = _tiny_market(seed=seed)
+    scores = simulate_scores(data, seed=seed)
+    lo = evaluate_offline(Cascade((0, 3), (t1 * 0.5,)), data, scores)
+    hi = evaluate_offline(Cascade((0, 3), (min(1.0, t1 * 0.5 + 0.25),)),
+                          data, scores)
+    assert hi["avg_cost"] >= lo["avg_cost"] - 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 20))
+def test_cascade_stop_fracs_sum_to_one(seed):
+    data = _tiny_market(seed=seed)
+    scores = simulate_scores(data, seed=seed)
+    m = evaluate_offline(Cascade((1, 2, 3), (0.5, 0.5)), data, scores)
+    assert sum(m["stop_fracs"]) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_cascade_threshold_zero_equals_first_api():
+    data = _tiny_market()
+    scores = simulate_scores(data)
+    m = evaluate_offline(Cascade((2, 0), (0.0,)), data, scores)
+    assert m["acc"] == pytest.approx(float(data.correct[:, 2].mean()))
+    assert m["avg_cost"] == pytest.approx(float(data.cost[:, 2].mean()),
+                                          rel=1e-5)
+
+
+def test_online_matches_offline():
+    """run_online with callable APIs reproduces the offline evaluation."""
+    data = _tiny_market()
+    scores = np.asarray(simulate_scores(data))
+    correct = np.asarray(data.correct)
+    cost = np.asarray(data.cost)
+    n = data.n
+    queries = list(range(n))
+
+    def make_api(k):
+        def api(qs):
+            idx = np.array(qs)
+            return correct[idx, k], cost[idx, k]
+        return api
+
+    apis = [make_api(k) for k in range(data.k)]
+
+    def scorer(qs, ans, k):
+        return scores[np.array(qs), k]
+
+    cas = Cascade((0, 1, 3), (0.6, 0.4))
+    res = run_online(cas, queries, apis, scorer)
+    off = evaluate_offline(cas, data, jnp.asarray(scores))
+    acc_online = float(np.mean([res["answers"][i] for i in range(n)]))
+    assert acc_online == pytest.approx(off["acc"], abs=1e-6)
+    assert res["cost"].mean() == pytest.approx(off["avg_cost"], rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# router / optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_learned_cascade_respects_budget_and_beats_cheapest():
+    data = simulate_market("HEADLINES", n=1500, seed=3)
+    scores = simulate_scores(data, seed=4)
+    budget = float(data.cost.mean())  # mid-range budget
+    cas, m = learn_cascade(data, scores, budget,
+                           RouterConfig(top_lists=20, sample=256))
+    assert m["avg_cost"] <= budget * 1.05
+    accs = np.asarray(data.accuracy())
+    cheapest = int(np.asarray(data.cost.mean(0)).argmin())
+    assert m["acc"] >= accs[cheapest]
+
+
+def test_tiny_budget_falls_back_to_cheapest():
+    data = _tiny_market()
+    scores = simulate_scores(data)
+    cas, m = learn_cascade(data, scores, 1e-9)
+    assert len(cas.apis) == 1
+
+
+def test_frontier_is_monotone_in_budget():
+    data = simulate_market("OVERRULING", n=1200, seed=5)
+    scores = simulate_scores(data, seed=6)
+    budgets = np.linspace(float(data.cost.min(1).mean()) * 1.2,
+                          float(data.cost.max(1).mean()), 5)
+    pts = frontier(data, scores, budgets, RouterConfig(top_lists=15,
+                                                       sample=256))
+    accs = [p["acc"] for p in pts]
+    # allow small non-monotonic noise from the sampled threshold search
+    assert accs[-1] >= accs[0] - 0.02
+
+
+# ---------------------------------------------------------------------------
+# simulation calibration
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("ds", list(DATASETS))
+def test_simulated_accuracies_match_targets(ds):
+    data = simulate_market(ds, seed=11)
+    target = DATASETS[ds]["acc"]
+    for name, a in zip(data.names, np.asarray(data.accuracy())):
+        assert abs(a - target[name]) < 0.03, (ds, name, a, target[name])
+
+
+def test_mpi_matrix_properties():
+    data = simulate_market("HEADLINES", n=4000, seed=12)
+    mpi = np.asarray(mpi_matrix(data.correct))
+    assert np.allclose(np.diag(mpi), 0.0)        # no self-improvement
+    assert (mpi >= 0).all() and (mpi <= 1).all()
+    # complementarity exists: someone fixes >=3% of GPT-4's errors
+    g4 = data.names.index("GPT-4")
+    assert mpi[g4].max() > 0.03

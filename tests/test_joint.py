@@ -1,0 +1,45 @@
+"""Joint prompt + LLM selection (paper §3 Compositions)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.joint import joint_prompt_cascade, reprice_for_prompt
+from repro.core.router import RouterConfig
+from repro.core.simulate import simulate_market, simulate_scores
+
+
+@pytest.fixture(scope="module")
+def market():
+    data = simulate_market("HEADLINES", n=1500, seed=0)
+    scores = simulate_scores(data, seed=1)
+    return data, scores
+
+
+def test_reprice_shorter_prompt_is_cheaper(market):
+    data, _ = market
+    d0 = reprice_for_prompt(data, "HEADLINES", 0)
+    d8 = reprice_for_prompt(data, "HEADLINES", 8)
+    assert float(d0.cost.mean()) < float(d8.cost.mean())
+    # full prompt == original costs
+    assert np.allclose(np.asarray(d8.cost), np.asarray(data.cost), rtol=1e-5)
+
+
+def test_reprice_fewer_shots_hurts_accuracy(market):
+    data, _ = market
+    d0 = reprice_for_prompt(data, "HEADLINES", 0, seed=3)
+    assert float(d0.correct.mean()) < float(data.correct.mean())
+
+
+def test_joint_beats_fixed_full_prompt_at_tight_budget(market):
+    data, scores = market
+    g4 = data.names.index("GPT-4")
+    budget = float(data.cost[:, g4].mean()) / 10
+    cfg = RouterConfig(top_lists=8, sample=256)
+    best, rows = joint_prompt_cascade(data, scores, "HEADLINES", budget,
+                                      cfg=cfg, prompt_sizes=[0, 4, 8])
+    full = [r for r in rows if r["n_examples"] == 8][0]
+    assert best["acc"] >= full["acc"] - 1e-9     # joint can only help
+    # the paper's optimizer enforces the budget on a training SUBSAMPLE
+    # ("approximates the objective by interpolating it within a few
+    # samples"); full-set cost can exceed it by the sampling error
+    assert all(r["avg_cost"] <= budget * 1.3 for r in rows)

@@ -1,0 +1,113 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.decode_attention.ops import gqa_decode
+from repro.kernels.decode_attention.ref import decode_ref
+from repro.kernels.flash_attention.ops import mha
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.moe_gmm.kernel import gmm
+from repro.kernels.moe_gmm.ops import expert_mlp
+from repro.kernels.moe_gmm.ref import gmm_ref
+from repro.kernels.ssd_scan.kernel import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _rand(shape, dtype=jnp.float32, key=KEY):
+    return jax.random.normal(key, shape).astype(dtype)
+
+
+@pytest.mark.parametrize("b,s,h,kvh,d", [
+    (1, 128, 4, 4, 64),     # MHA
+    (2, 256, 4, 2, 64),     # GQA 2:1
+    (1, 256, 8, 1, 32),     # MQA
+    (2, 128, 4, 4, 128),    # MXU-width head dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+def test_flash_attention_sweep(b, s, h, kvh, d, dtype, causal, window):
+    q = _rand((b, s, h, d), dtype)
+    k = _rand((b, s, kvh, d), dtype, jax.random.PRNGKey(1))
+    v = _rand((b, s, kvh, d), dtype, jax.random.PRNGKey(2))
+    o = mha(q, k, v, causal=causal, window=window, interpret=True,
+            bq=64, bk=64)
+    g = h // kvh
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, 1).reshape(b * h, s, d)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, 1).reshape(b * h, s, d)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    r = attention_ref(qf, kf, vf, causal=causal, window=window)
+    r = r.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert jnp.allclose(o.astype(jnp.float32), r.astype(jnp.float32),
+                        atol=tol, rtol=tol), float(jnp.abs(o - r).max())
+
+
+@pytest.mark.parametrize("b,s,h,kvh,d,length", [
+    (2, 512, 4, 2, 64, 300),
+    (1, 256, 8, 8, 32, 256),
+    (2, 1024, 8, 2, 128, 1),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(b, s, h, kvh, d, length, dtype):
+    q = _rand((b, 1, h, d), dtype)
+    k = _rand((b, s, kvh, d), dtype, jax.random.PRNGKey(1))
+    v = _rand((b, s, kvh, d), dtype, jax.random.PRNGKey(2))
+    o = gqa_decode(q, k, v, jnp.int32(length), bk=128, interpret=True)
+    r = decode_ref(q.reshape(b, kvh, h // kvh, d), k, v, length)
+    r = r.reshape(b, 1, h, d)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    assert jnp.allclose(o.astype(jnp.float32), r.astype(jnp.float32),
+                        atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 64, 2, 32, 16, 32),
+    (2, 128, 4, 32, 16, 32),
+    (1, 256, 2, 64, 32, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_sweep(b, s, h, p, n, chunk, dtype):
+    x = _rand((b, s, h, p), dtype)
+    dt = jax.nn.softplus(_rand((b, s, h), key=jax.random.PRNGKey(1))
+                         ).astype(dtype)
+    a = -jnp.exp(0.3 * _rand((h,), key=jax.random.PRNGKey(2)))
+    bm = _rand((b, s, n), dtype, jax.random.PRNGKey(3))
+    cm = _rand((b, s, n), dtype, jax.random.PRNGKey(4))
+    o = ssd_scan(x, dt, a, bm, cm, chunk=chunk, interpret=True)
+    r = ssd_ref(x.astype(jnp.float32), dt.astype(jnp.float32), a,
+                bm.astype(jnp.float32), cm.astype(jnp.float32))
+    scale = float(jnp.abs(r).max()) + 1e-6
+    err = float(jnp.abs(o.astype(jnp.float32) - r).max()) / scale
+    assert err < (3e-2 if dtype == jnp.bfloat16 else 1e-5), err
+
+
+@pytest.mark.parametrize("e,c,k,f", [
+    (4, 256, 128, 256),
+    (2, 128, 256, 128),
+    (8, 128, 128, 384),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gmm_sweep(e, c, k, f, dtype):
+    x = _rand((e, c, k), dtype)
+    w = _rand((e, k, f), dtype, jax.random.PRNGKey(1))
+    o = gmm(x, w, interpret=True)
+    r = gmm_ref(x, w)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    assert jnp.allclose(o.astype(jnp.float32), r.astype(jnp.float32),
+                        atol=tol, rtol=tol)
+
+
+def test_expert_mlp_against_einsum():
+    e, c, d, f = 2, 128, 64, 128
+    x = _rand((e, c, d))
+    wg = _rand((e, d, f), key=jax.random.PRNGKey(1))
+    wu = _rand((e, d, f), key=jax.random.PRNGKey(2))
+    wd = _rand((e, f, d), key=jax.random.PRNGKey(3))
+    o = expert_mlp(x, wg, wu, wd, interpret=True)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, wg)) * \
+        jnp.einsum("ecd,edf->ecf", x, wu)
+    r = jnp.einsum("ecf,efd->ecd", h, wd)
+    assert jnp.allclose(o, r, atol=1e-3, rtol=1e-3)

@@ -1,0 +1,90 @@
+"""Fast end-to-end neural path: tiny tier models -> offline collection ->
+scorer -> router -> online serving. (The full-size version is
+examples/cascade_serving.py.)"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import neural_market as NM
+from repro.core import scorer as SC
+from repro.core.distill import distill
+from repro.core.router import RouterConfig, learn_cascade
+from repro.core.cascade import evaluate_offline
+from repro.data import synthetic
+from repro.serving.engine import CascadeServer, Tier
+
+
+@pytest.fixture(scope="module")
+def tiny_market():
+    tiers = {
+        "GPT-J": dict(n_layers=1, d_model=32, steps=30, price="GPT-J"),
+        "GPT-4": dict(n_layers=2, d_model=64, steps=120, price="GPT-4"),
+    }
+    old = NM.TIERS
+    NM.TIERS = tiers
+    try:
+        apis = NM.train_marketplace("overruling", seq_len=32, seed=0)
+    finally:
+        NM.TIERS = old
+    test = synthetic.sample("overruling", 300, seq_len=32, seed=42)
+    data, answers = NM.collect_market_data(apis, test.tokens, test.labels)
+    return apis, test, data, answers
+
+
+def test_tiers_are_heterogeneous(tiny_market):
+    _, _, data, _ = tiny_market
+    accs = np.asarray(data.accuracy())
+    assert accs[-1] > accs[0] - 0.05      # big tier >= small tier (roughly)
+    assert accs[-1] > 0.6                 # big tier learned the task
+
+
+def test_scorer_learns_correctness(tiny_market):
+    apis, test, data, answers = tiny_market
+    k = len(apis)
+    sp = SC.train_scorer(np.repeat(test.tokens, k, axis=0),
+                         answers.reshape(-1),
+                         np.asarray(data.correct).reshape(-1), steps=120)
+    s = np.stack([SC.score(sp, test.tokens, answers[:, j])
+                  for j in range(k)], axis=1)
+    auc = SC.auc(s.reshape(-1), np.asarray(data.correct).reshape(-1))
+    assert auc > 0.6, auc
+
+
+def test_cascade_learned_and_served_online(tiny_market):
+    apis, test, data, answers = tiny_market
+    scores = jnp.asarray(
+        0.7 * np.asarray(data.correct) +
+        0.3 * np.random.default_rng(0).uniform(size=data.correct.shape))
+    budget = float(data.cost[:, -1].mean()) * 0.5
+    cas, m = learn_cascade(data, scores, budget,
+                           RouterConfig(m=2, top_lists=4, sample=128))
+    assert m["avg_cost"] <= budget * 1.05
+    off = evaluate_offline(cas, data, scores)
+    assert off["acc"] >= float(np.asarray(data.accuracy())[0]) - 0.05
+
+    snp = np.asarray(scores)
+    idx_of = {a: i for i, a in enumerate(cas.apis)}
+    tok_row = {t: i for i, t in enumerate(map(tuple, test.tokens.tolist()))}
+
+    def scorer_fn(toks, ans):
+        rows = np.array([tok_row[tuple(t)] for t in toks.tolist()])
+        return snp[rows, cas.apis[0]]
+
+    tiers = [Tier(apis[i].name, apis[i].answer, apis[i].query_cost)
+             for i in cas.apis]
+    srv = CascadeServer(tiers, cas.thresholds, scorer_fn)
+    res = srv.serve(test.tokens)
+    assert res["cost"].mean() > 0
+    assert len(res["answers"]) == test.tokens.shape[0]
+
+
+def test_distillation_produces_cheaper_api(tiny_market):
+    apis, test, _, _ = tiny_market
+    teacher = apis[-1]
+    student = distill(teacher, "overruling", n_unlabeled=256, seq_len=32,
+                      steps=60, student_layers=1, student_d=32)
+    s_cost = student.query_cost(test.tokens).mean()
+    t_cost = teacher.query_cost(test.tokens).mean()
+    assert s_cost < t_cost
+    s_acc = (student.answer(test.tokens) == test.labels).mean()
+    assert s_acc > 0.4                    # learned something from teacher

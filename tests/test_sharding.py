@@ -1,0 +1,151 @@
+"""Sharding rules + HLO collective parser unit tests (1-device safe)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ARCHS
+from repro.launch.hlo import collective_bytes, _shape_bytes
+from repro.launch import specs as S
+
+
+class FakeMesh:
+    """Duck-typed mesh for spec rules (no devices touched)."""
+
+    def __init__(self, shape_by_name):
+        self._s = shape_by_name
+
+    @property
+    def axis_names(self):
+        return tuple(self._s)
+
+    @property
+    def shape(self):
+        return dict(self._s)
+
+    @property
+    def size(self):
+        n = 1
+        for v in self._s.values():
+            n *= v
+        return n
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_param_spec_rules():
+    from repro.sharding.rules import param_spec
+    assert param_spec("embed/tok", (49152, 1024), MESH) == P("model", None)
+    assert param_spec("embed/unembed", (1024, 49152), MESH) == P(None, "model")
+    # attention heads sharded when divisible
+    assert param_spec("prefix/0/mixer/wq", (512, 32, 128), MESH) == \
+        P(None, "model", None)
+    # gemma3: 4 heads not divisible by 16 -> replicated
+    assert param_spec("prefix/0/mixer/wq", (1152, 4, 256), MESH) == \
+        P(None, None, None)
+    # MoE experts on the model axis, with the stacked period dim prepended
+    assert param_spec("period/sub0/ffn/up", (58, 256, 7168, 2048), MESH) == \
+        P(None, "model", None, None)
+    # mamba inner dim
+    assert param_spec("period/sub0/mixer/x_proj", (48, 2048, 4096), MESH) == \
+        P(None, None, "model")
+
+
+def test_param_spec_fsdp_adds_data_axis():
+    from repro.sharding.rules import param_spec
+    sp = param_spec("prefix/0/ffn/up/w", (5120, 14336), MESH, fsdp=True)
+    assert sp == P("data", "model")
+
+
+def test_batch_spec():
+    from repro.sharding.rules import batch_spec
+    assert batch_spec((256, 4096), MESH) == P("data", None)
+    assert batch_spec((256, 4096), MESH_MP) == P(("pod", "data"), None)
+    assert batch_spec((1, 4096), MESH) == P(None, None)    # batch 1
+
+
+def test_cache_spec_long_context_shards_sequence():
+    from repro.sharding.rules import cache_spec
+    cfg = ARCHS["jamba-v0.1-52b"]
+    # batch==1, KV heads (8) can't fill the 16-wide model axis: the long
+    # sequence spreads over BOTH axes (flash-decode context parallelism)
+    sp = cache_spec("period/sub3/mixer/k", (4, 1, 524288, 8, 128), MESH, cfg)
+    assert sp == P(None, None, ("data", "model"), None, None)
+    # batched decode: batch over data, sequence over model
+    sp = cache_spec("period/sub3/mixer/k", (4, 128, 32768, 8, 128), MESH, cfg)
+    assert sp == P(None, "data", "model", None, None)
+    # heads that DO fill the axis keep head sharding (moonshot kv=16)
+    sp = cache_spec("period/sub0/mixer/k", (47, 128, 32768, 16, 128), MESH,
+                    ARCHS["moonshot-v1-16b-a3b"])
+    assert sp == P(None, "data", None, "model", None)
+
+
+def test_input_specs_cover_all_archs():
+    for name, cfg in ARCHS.items():
+        for shape in ("train_4k", "prefill_32k"):
+            sp = S.input_specs(cfg, shape)
+            assert "params" in sp and "batch" in sp
+        if cfg.causal:
+            sp = S.input_specs(cfg, "decode_32k")
+            assert sp["batch"]["tokens"].shape == (128, 1)
+            assert "cache" in sp
+
+
+def test_vlm_specs_include_vision_and_mrope():
+    sp = S.input_specs(ARCHS["qwen2-vl-72b"], "prefill_32k")
+    assert sp["batch"]["vision_embeds"].shape == (32, 1024, 8192)
+    assert sp["batch"]["mrope_pos"].shape == (3, 32, 32768)
+
+
+def test_audio_specs_use_frame_embeddings():
+    sp = S.input_specs(ARCHS["hubert-xlarge"], "prefill_32k")
+    assert "tokens" not in sp["batch"]
+    assert sp["batch"]["embeds"].shape == (32, 32768, 1280)
+
+
+# ---------------------------------------------------------------------------
+# HLO parser
+# ---------------------------------------------------------------------------
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[128,256]") == 128 * 256 * 2
+    assert _shape_bytes("(f32[4,4], s32[8])") == 64 + 32
+
+
+def test_collective_parser_counts_while_bodies():
+    hlo = """
+HloModule test
+
+%body (p: (s32[], bf16[64])) -> (s32[], bf16[64]) {
+  %ag = bf16[128] all-gather(bf16[64] %x), replica_groups={}
+  ROOT %t = (s32[], bf16[64]) tuple(...)
+}
+
+%cond (p: (s32[], bf16[64])) -> pred[] {
+  %c = s32[] constant(58)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %c), direction=LT
+}
+
+ENTRY %main (a: bf16[64]) -> bf16[64] {
+  %ar = bf16[64] all-reduce(bf16[64] %a), to_apply=%add
+  %w = (s32[], bf16[64]) while((s32[], bf16[64]) %init), condition=%cond, body=%body
+  ROOT %out = bf16[64] get-tuple-element(%w), index=1
+}
+"""
+    res = collective_bytes(hlo)
+    assert res["bytes"]["all-reduce"] == 128
+    assert res["bytes"]["all-gather"] == 58 * 256   # body x trip count
+    assert res["counts"]["all-gather"] == 58
+
+
+def test_collective_parser_real_lowering():
+    """All-reduce from an actual 1-device jit lowering parses (possibly 0
+    collectives — just must not crash)."""
+    import jax.numpy as jnp
+    f = jax.jit(lambda x: x @ x.T)
+    txt = f.lower(jnp.ones((8, 8))).compile().as_text()
+    res = collective_bytes(txt)
+    assert res["total"] >= 0
