@@ -22,7 +22,7 @@ def main() -> None:
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args()
 
-    from benchmarks import bench_kernels, bench_paper
+    from benchmarks import bench_kernels, bench_paper, bench_serving
 
     t_all = time.time()
     results = {}
@@ -34,6 +34,8 @@ def main() -> None:
         ("fig4_mpi", bench_paper.bench_fig4_mpi),
         ("table3_savings", bench_paper.bench_table3_savings),
         ("fig5_tradeoff", bench_paper.bench_fig5_tradeoff),
+        ("serving_pipeline", bench_serving.bench_pipeline_throughput),
+        ("bucketed_prefill", bench_serving.bench_bucketed_prefill),
     ]
     for name, fn in paper_benches:
         rows, derived, secs = fn()

@@ -1,23 +1,22 @@
-"""End-to-end driver: serve a batched request stream through a *real*
-model cascade (the paper's LLM cascade as a serving-system policy).
+"""End-to-end driver: serve a batched request stream through the unified
+FrugalGPT pipeline — completion cache + prompt adaptation + a *real*
+model cascade, all on one request path.
 
-Pipeline: train 3 tier models of different capacity on the synthetic
-HEADLINES task -> collect offline marketplace data -> train the
-DistilBERT-analogue scorer -> learn (L, tau) with the router optimizer ->
-serve a fresh request batch tier-by-tier with compaction.
+Thin wrapper over ``repro.serving.build_pipeline``: train 3 tier models
+of different capacity on the synthetic HEADLINES task, collect offline
+marketplace data, train the DistilBERT-analogue scorer, greedily select
+per-tier prompts, learn (L, tau) with the router optimizer, then serve
+request batches tier-by-tier with compaction. A second pass over a
+repetition-heavy stream shows the completion cache absorbing traffic.
 
 Run: PYTHONPATH=src python examples/cascade_serving.py [--requests 400]
 """
 import argparse
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import neural_market as NM
-from repro.core import scorer as SC
-from repro.core.router import RouterConfig, learn_cascade
 from repro.data import synthetic
-from repro.serving.engine import CascadeServer, Tier
+from repro.serving import BuildConfig, build_pipeline
 
 
 def main():
@@ -27,52 +26,26 @@ def main():
     args = ap.parse_args()
 
     # small 3-tier marketplace so the example runs in minutes on CPU
-    NM.TIERS = {k: v for k, v in NM.TIERS.items()
-                if k in ("GPT-J", "ChatGPT", "GPT-4")}
-    for k in NM.TIERS:
-        NM.TIERS[k]["steps"] = min(NM.TIERS[k]["steps"], 200)
-
-    print("== training tier models ==")
-    apis = NM.train_marketplace("headlines", seed=0, verbose=True)
-
-    print("== collecting offline marketplace data ==")
-    train = synthetic.sample("headlines", args.train_queries, seed=11)
-    data, answers = NM.collect_market_data(apis, train.tokens, train.labels)
-    print("tier accuracy:", {n: round(float(a), 3)
-                             for n, a in zip(data.names,
-                                             np.asarray(data.accuracy()))})
-
-    print("== training the scoring function g(q, a) ==")
-    k = len(apis)
-    q = np.repeat(train.tokens, k, axis=0)
-    a = answers.reshape(-1)
-    y = np.asarray(data.correct).reshape(-1)
-    sp = SC.train_scorer(q, a, y, steps=250)
-    s_train = np.stack([SC.score(sp, train.tokens, answers[:, j])
-                        for j in range(k)], axis=1)
-    print(f"scorer AUC: {SC.auc(s_train.reshape(-1), y):.3f}")
-
-    print("== learning the cascade ==")
-    budget = float(data.cost[:, -1].mean()) * 0.3   # 30% of the top tier
-    cas, m = learn_cascade(data, jnp.asarray(s_train), budget,
-                           RouterConfig(top_lists=10, sample=256))
-    print(f"cascade: {cas.describe(data.names)}")
-    print(f"train: acc={m['acc']:.3f} avg_cost=${m['avg_cost']:.6f}")
+    pipe, _ = build_pipeline(BuildConfig(
+        tiers=("GPT-J", "ChatGPT", "GPT-4"), train_steps_cap=200,
+        train_queries=args.train_queries, scorer_steps=250))
 
     print("== serving ==")
     test = synthetic.sample("headlines", args.requests, seed=77)
-    tiers = [Tier(apis[i].name, apis[i].answer, apis[i].query_cost)
-             for i in cas.apis]
-    server = CascadeServer(tiers, cas.thresholds,
-                           lambda t, ans: SC.score(sp, t, ans))
-    res = server.serve(test.tokens)
-    acc = float((res["answers"] == test.labels).mean())
-    top_cost = apis[-1].query_cost(test.tokens).mean()
-    print(f"served {args.requests} requests in {res['latency_s']:.1f}s; "
-          f"tier batch sizes: {res['tier_counts']}")
-    print(f"accuracy {acc:.3f}; avg cost ${res['cost'].mean():.6f} "
-          f"({100*(1-res['cost'].mean()/top_cost):.0f}% cheaper than "
-          f"top-tier-only)")
+    res = pipe.serve(test.tokens)
+    acc = float((res.answers == test.labels).mean())
+    print(res.summary())
+    print(f"accuracy {acc:.3f}; avg cost ${res.cost.mean():.6f} "
+          f"({100 * res.savings_frac:.0f}% cheaper than top-tier-only)")
+
+    print("== serving a repetition-heavy stream (cache at work) ==")
+    idx = np.random.default_rng(3).integers(0, args.requests,
+                                            size=args.requests)
+    res2 = pipe.serve(test.tokens[idx])
+    acc2 = float((res2.answers == test.labels[idx]).mean())
+    print(res2.summary())
+    print(f"accuracy {acc2:.3f}; avg cost ${res2.cost.mean():.6f} "
+          f"({100 * res2.savings_frac:.0f}% cheaper than top-tier-only)")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,11 @@
-from repro.core.cascade import Cascade, evaluate_offline, run_online  # noqa: F401
+from repro.core.cascade import (  # noqa: F401
+    Cascade,
+    CascadeTier,
+    evaluate_offline,
+    execute_cascade,
+    replay_tiers,
+    run_online,
+)
 from repro.core.cost import TABLE1, ApiCost  # noqa: F401
 from repro.core.router import RouterConfig, cost_to_match, frontier, learn_cascade  # noqa: F401
 from repro.core.simulate import (  # noqa: F401

@@ -9,7 +9,6 @@ matrix; the cache itself is a ring buffer of fixed capacity.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -20,18 +19,32 @@ from repro.models.layers import apply_norm
 from repro.models.transformer import _apply_stack, _embed_inputs
 
 
+_EMBED_JIT: dict = {}
+
+
+def _embed_fn(cfg: ModelConfig):
+    """Per-config cached jitted embedder — the cache stage runs on every
+    served batch, so it must not re-jit (and retrace) per call."""
+    fn = _EMBED_JIT.get(cfg.name)
+    if fn is None:
+
+        @jax.jit
+        def fn(params, toks):
+            x, positions = _embed_inputs(params, {"tokens": toks}, cfg,
+                                         "train")
+            x, _, _ = _apply_stack(params, x, cfg=cfg, mode="train",
+                                   positions=positions, cache=None, pos=None,
+                                   remat=False)
+            h = apply_norm(params["final_norm"], x, cfg).mean(1)
+            return h / (jnp.linalg.norm(h, axis=-1, keepdims=True) + 1e-6)
+
+        _EMBED_JIT[cfg.name] = fn
+    return fn
+
+
 def embed_queries(params, tokens, cfg: ModelConfig, batch: int = 512):
     """Mean-pooled encoder embedding, L2-normalized. (n, d)."""
-
-    @jax.jit
-    def fn(params, toks):
-        x, positions = _embed_inputs(params, {"tokens": toks}, cfg, "train")
-        x, _, _ = _apply_stack(params, x, cfg=cfg, mode="train",
-                               positions=positions, cache=None, pos=None,
-                               remat=False)
-        h = apply_norm(params["final_norm"], x, cfg).mean(1)
-        return h / (jnp.linalg.norm(h, axis=-1, keepdims=True) + 1e-6)
-
+    fn = _embed_fn(cfg)
     out = []
     for i in range(0, tokens.shape[0], batch):
         out.append(np.asarray(fn(params, jnp.asarray(tokens[i:i + batch]))))

@@ -1,19 +1,30 @@
 """LLM cascade (paper §3 Strategy 3): ordered API list + score thresholds.
 
-Two execution paths:
-  * ``evaluate_offline`` — vectorized accuracy/cost of a cascade on
-    offline-collected marketplace data (used by the router optimizer and
-    all §Repro experiments, mirroring the paper's offline methodology);
-  * ``run_online`` — tier-by-tier batched execution against live models
-    (the serving engine path): query tier-1 for the whole batch, score,
-    and re-batch only the unreliable queries to the next tier.
+There is exactly ONE cascade-execution implementation in this repo:
+``execute_cascade``. It runs the tier-by-tier compaction loop — query
+tier j with every still-pending query, score the answers, accept the
+reliable ones, re-batch the rest to tier j+1 — and every answer, cost
+and scorer call is chunked to ``batch_size`` so no tier ever sees an
+unbounded batch.
+
+The executor is parameterized by backend through ``CascadeTier``:
+
+  * offline replay — ``replay_tiers`` wraps a ``MarketData`` matrix so
+    ``evaluate_offline`` (router optimizer, §Repro experiments) replays
+    recorded marketplace responses through the same loop;
+  * live models   — ``repro.serving`` wraps real tier models (neural
+    marketplace APIs or ``GenerationEngine``-backed tiers) and the
+    ``ServingPipeline`` adds the completion-cache and prompt-adaptation
+    stages in front.
+
+``run_online`` is kept as a thin compatibility wrapper for callable-API
+call sites.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable, Sequence
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.simulate import MarketData
@@ -40,64 +51,156 @@ class Cascade:
         return " -> ".join(parts)
 
 
-def evaluate_offline(cascade: Cascade, data: MarketData, scores) -> dict:
-    """Vectorized evaluation. scores: (n, K) reliability scores g(q, a_k).
+@dataclasses.dataclass
+class CascadeTier:
+    """One cascade stage: a single call returning (answers, costs).
 
+    ``invoke(queries) -> (answers (b,), costs (b,))`` — one call per
+    batch chunk, so backends that produce the answer and its cost
+    together (a real API response) are never double-charged.
+    """
+
+    name: str
+    invoke: Callable
+
+
+def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
+                    scorer: Callable, queries, *,
+                    batch_size: int = 256) -> dict:
+    """THE cascade executor: tier-by-tier compaction over ``queries``.
+
+    queries: (n, ...) array — rows are whatever the tier backend consumes
+    (token matrices for live models, query indices for offline replay).
+    scorer(queries_chunk, answers_chunk, tier_pos) -> scores in [0,1].
+
+    All tier and scorer calls are chunked to ``batch_size``. Returns
+    dict(answers, cost, stopped_at (cascade position, -1 = unanswered),
+    tier_counts (pending per tier), accepted_counts).
+    """
+    queries = np.asarray(queries)
+    n = queries.shape[0]
+    m = len(tiers)
+    if len(thresholds) != m - 1:
+        raise ValueError(f"need {m - 1} thresholds for {m} tiers, "
+                         f"got {len(thresholds)}")
+    answers = np.empty(n, dtype=object)
+    cost = np.zeros(n, np.float64)
+    stopped_at = np.full(n, -1, np.int32)
+    pending = np.arange(n)
+    tier_counts: list[int] = []
+    accepted_counts: list[int] = []
+    for j, tier in enumerate(tiers):
+        tier_counts.append(len(pending))
+        if len(pending) == 0:
+            accepted_counts.append(0)
+            continue
+        qs = queries[pending]
+        b = len(pending)
+        ans_chunks, cost_chunks, score_chunks = [], [], []
+        last = j == m - 1
+        for i in range(0, b, batch_size):
+            chunk = qs[i:i + batch_size]
+            a, c = tier.invoke(chunk)
+            a = np.asarray(a)
+            ans_chunks.append(a)
+            cost_chunks.append(np.asarray(c, np.float64))
+            if not last:
+                score_chunks.append(np.asarray(scorer(chunk, a, j)))
+        ans = np.concatenate(ans_chunks)
+        cost[pending] += np.concatenate(cost_chunks)
+        if last:
+            accept = np.ones(b, bool)
+        else:
+            accept = np.concatenate(score_chunks) >= thresholds[j]
+        done = pending[accept]
+        if ans.dtype == object or ans.ndim != 1:
+            for i_local, i_global in zip(np.flatnonzero(accept), done):
+                answers[i_global] = ans[i_local]
+        else:
+            answers[done] = ans[accept]
+        stopped_at[done] = j
+        accepted_counts.append(int(accept.sum()))
+        pending = pending[~accept]
+    try:                                     # densify when answers are scalar
+        dense = np.array(answers.tolist())
+        answers_arr = dense if dense.ndim == 1 else answers
+    except ValueError:                       # heterogeneous answer objects
+        answers_arr = answers
+    return {
+        "answers": answers_arr,
+        "cost": cost,
+        "stopped_at": stopped_at,
+        "tier_counts": tier_counts,
+        "accepted_counts": accepted_counts,
+    }
+
+
+def replay_tiers(data: MarketData, apis: Sequence[int]) -> list[CascadeTier]:
+    """Offline backend: tiers that replay recorded MarketData responses.
+
+    Queries are row indices into ``data``; tier k's "answer" is the
+    recorded correctness bit (so accuracy = mean answer) and its cost is
+    the recorded per-query cost.
+    """
+    correct = np.asarray(data.correct)
+    cost = np.asarray(data.cost)
+
+    def make(a: int) -> CascadeTier:
+        return CascadeTier(
+            data.names[a],
+            lambda idx, a=a: (correct[idx, a], cost[idx, a]))
+
+    return [make(a) for a in apis]
+
+
+def evaluate_offline(cascade: Cascade, data: MarketData, scores) -> dict:
+    """Replay a cascade over offline marketplace data (the paper's offline
+    methodology). scores: (n, K) reliability scores g(q, a_k).
+
+    Runs through ``execute_cascade`` on the replay backend.
     Returns dict(acc, avg_cost, stop_fracs, total_cost).
     """
-    n = data.n
-    m = len(cascade.apis)
-    answered = jnp.zeros((n,), bool)
-    acc = jnp.zeros((n,), jnp.float32)
-    cost = jnp.zeros((n,), jnp.float32)
-    stop_fracs = []
-    for j, a in enumerate(cascade.apis):
-        cost = cost + jnp.where(answered, 0.0, data.cost[:, a])
-        if j < m - 1:
-            accept = scores[:, a] >= cascade.thresholds[j]
-        else:
-            accept = jnp.ones((n,), bool)
-        take = (~answered) & accept
-        acc = acc + jnp.where(take, data.correct[:, a], 0.0)
-        stop_fracs.append(float(take.mean()))
-        answered = answered | take
+    s = np.asarray(scores)
+    tiers = replay_tiers(data, cascade.apis)
+
+    def scorer(idx, _ans, j):
+        return s[idx, cascade.apis[j]]
+
+    res = execute_cascade(tiers, cascade.thresholds, scorer,
+                          np.arange(data.n), batch_size=max(1, data.n))
+    acc_per_query = np.asarray(res["answers"], np.float64)
     return {
-        "acc": float(acc.mean()),
-        "avg_cost": float(cost.mean()),
-        "total_cost": float(cost.sum()),
-        "stop_fracs": stop_fracs,
+        "acc": float(acc_per_query.mean()),
+        "avg_cost": float(res["cost"].mean()),
+        "total_cost": float(res["cost"].sum()),
+        "stop_fracs": [c / data.n for c in res["accepted_counts"]],
     }
 
 
 def run_online(cascade: Cascade, queries: list, apis: Sequence[Callable],
                scorer: Callable, names: Sequence[str] | None = None) -> dict:
-    """Execute the cascade against live tier models.
+    """Execute the cascade against live callable APIs (compat wrapper).
 
     apis[k](list_of_queries) -> (answers, per_query_cost)
     scorer(queries, answers, api_index) -> np.ndarray scores in [0,1]
-
-    Batched tier-by-tier: all pending queries hit tier j together
-    (the serving engine's compaction pattern).
     """
-    n = len(queries)
-    pending = np.arange(n)
-    answers = [None] * n
-    total_cost = np.zeros(n, np.float64)
-    trace = np.full(n, -1, np.int32)
+    try:
+        qarr = np.asarray(queries)
+    except ValueError:                   # ragged / heterogeneous queries
+        qarr = np.empty(len(queries), dtype=object)
+        qarr[:] = queries
+    tiers = [CascadeTier(names[a] if names else str(a),
+                         lambda qs, a=a: apis[a](list(qs)))
+             for a in cascade.apis]
+
+    def pos_scorer(qs, ans, j):
+        return scorer(list(qs), ans, cascade.apis[j])
+
+    res = execute_cascade(tiers, cascade.thresholds, pos_scorer, qarr,
+                          batch_size=max(1, len(queries)))
+    # map cascade positions back to marketplace API indices
+    trace = np.full(len(queries), -1, np.int32)
     for j, a in enumerate(cascade.apis):
-        if len(pending) == 0:
-            break
-        qs = [queries[i] for i in pending]
-        ans, cost = apis[a](qs)
-        total_cost[pending] += np.asarray(cost, np.float64)
-        if j < len(cascade.apis) - 1:
-            s = np.asarray(scorer(qs, ans, a))
-            accept = s >= cascade.thresholds[j]
-        else:
-            accept = np.ones(len(pending), bool)
-        for i_local, i_global in enumerate(pending):
-            if accept[i_local]:
-                answers[i_global] = ans[i_local]
-                trace[i_global] = a
-        pending = pending[~accept]
-    return {"answers": answers, "cost": total_cost, "stopped_at": trace}
+        trace[res["stopped_at"] == j] = a
+    return {"answers": list(res["answers"]), "cost": res["cost"],
+            "stopped_at": trace}

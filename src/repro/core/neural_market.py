@@ -6,16 +6,14 @@ paper's numbers at scale; this path proves the system runs for real).
 from __future__ import annotations
 
 import dataclasses
-import functools
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cost import TABLE1, ApiCost
 from repro.core.simulate import MarketData
 from repro.data import synthetic
-from repro.models.classifier import classifier_logits, encoder_config
+from repro.models.classifier import encoder_config, jitted_logits
 from repro.training.train_loop import train_classifier
 
 # tier name -> (encoder size, train steps, Table-1 price analogue)
@@ -37,7 +35,7 @@ class NeuralAPI:
     price: ApiCost
 
     def answer(self, tokens: np.ndarray, batch: int = 512) -> np.ndarray:
-        fn = jax.jit(functools.partial(classifier_logits, cfg=self.cfg))
+        fn = jitted_logits(self.cfg)   # cached: called per serving chunk
         out = []
         for i in range(0, tokens.shape[0], batch):
             logits = fn(self.params, jnp.asarray(tokens[i:i + batch]))
@@ -49,12 +47,33 @@ class NeuralAPI:
         return np.asarray(self.price.query_cost(n_in, np.ones_like(n_in)))
 
 
+def tier_subset(names, steps_cap: int | None = None) -> dict:
+    """A copy of TIERS restricted to ``names`` (order preserved), with
+    train steps optionally capped — lets callers build small marketplaces
+    without mutating the module-level registry."""
+    out = {}
+    for name in names:
+        if name not in TIERS:
+            raise KeyError(f"unknown tier {name!r}; available: "
+                           f"{list(TIERS)}")
+        spec = dict(TIERS[name])
+        if steps_cap is not None:
+            spec["steps"] = min(spec["steps"], steps_cap)
+        out[name] = spec
+    return out
+
+
 def train_marketplace(task: str, *, seq_len: int = 64, seed: int = 0,
-                      verbose: bool = False) -> list[NeuralAPI]:
-    """Train the tier models on the synthetic task."""
+                      verbose: bool = False,
+                      tiers: dict | None = None) -> list[NeuralAPI]:
+    """Train the tier models on the synthetic task.
+
+    ``tiers``: a TIERS-style dict (see ``tier_subset``); defaults to the
+    full module-level registry.
+    """
     n_classes = synthetic.N_CLASSES[task]
     apis = []
-    for i, (name, spec) in enumerate(TIERS.items()):
+    for i, (name, spec) in enumerate((tiers or TIERS).items()):
         cfg = encoder_config(f"api-{name}", n_layers=spec["n_layers"],
                              d_model=spec["d_model"],
                              n_heads=max(2, spec["d_model"] // 32),

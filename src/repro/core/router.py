@@ -66,6 +66,14 @@ def _grid_eval(perm, data: MarketData, scores, grid: jnp.ndarray):
 
     Supports m in {2, 3}. Returns acc, cost arrays of shape grid^(m-1).
     """
+    if len(perm) not in (2, 3):
+        # jnp's clamping fancy-indexing would otherwise silently mis-index
+        # y/c/g columns for longer (or shorter) lists
+        raise ValueError(
+            f"_grid_eval supports cascade lists of length 2 or 3 (the "
+            f"paper's setting); got m={len(perm)} ({perm}). Use a "
+            f"RouterConfig with m <= 3 or extend the threshold grid "
+            f"search before raising m.")
     y = data.correct[:, list(perm)]          # (n, m)
     c = data.cost[:, list(perm)]             # (n, m)
     g = scores[:, list(perm)]                # (n, m)

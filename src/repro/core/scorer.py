@@ -7,15 +7,13 @@ from the query and a generated answer").
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.data import synthetic
 from repro.models.classifier import (classifier_logits, encoder_config,
-                                     init_classifier)
+                                     init_classifier, jitted_logits)
 from repro.training.optim import OptConfig, adamw_update, init_opt_state
 
 SCORER_CFG = encoder_config("scorer-distilbert", n_layers=4, d_model=128,
@@ -60,7 +58,7 @@ def score(params, queries: np.ndarray, answers: np.ndarray,
     """g(q, a) in [0,1] for each (query, answer) pair."""
     cfg = SCORER_CFG
     pairs = synthetic.append_answer(np.asarray(queries), np.asarray(answers))
-    fn = jax.jit(functools.partial(classifier_logits, cfg=cfg))
+    fn = jitted_logits(cfg)      # cached: scoring runs per serving batch
     out = []
     for i in range(0, pairs.shape[0], batch):
         logit = fn(params, jnp.asarray(pairs[i:i + batch]))[:, 0]

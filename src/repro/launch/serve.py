@@ -1,26 +1,21 @@
-"""Serving launcher: FrugalGPT cascade over generation-capable tiers.
+"""Serving launcher: the unified FrugalGPT pipeline (cache + prompt
+adaptation + cascade) over a batched request stream.
 
 Demo (CPU):
   PYTHONPATH=src python -m repro.launch.serve --requests 200
 
-Builds a 3-tier marketplace of reduced-config models (cheap -> expensive),
-trains the scorer, learns (L, tau) with the router optimizer, then serves
-a batched request stream tier-by-tier with compaction. This is the
-serving entry point a real deployment would point at the production mesh
-(tiers sharded with pjit per DESIGN.md §5).
+Thin CLI over ``repro.serving.build_pipeline`` — this is the entry point
+a real deployment would point at the production mesh (tiers sharded with
+pjit per DESIGN.md §5).
 """
 from __future__ import annotations
 
 import argparse
 
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import neural_market as NM
-from repro.core import scorer as SC
-from repro.core.router import RouterConfig, learn_cascade
+from repro.core.router import RouterConfig
 from repro.data import synthetic
-from repro.serving.engine import CascadeServer, Tier
+from repro.serving import BuildConfig, build_pipeline
 
 
 def main():
@@ -32,45 +27,23 @@ def main():
                     help="budget as a fraction of top-tier cost")
     ap.add_argument("--tiers", default="GPT-J,ChatGPT,GPT-4")
     ap.add_argument("--train-steps", type=int, default=150)
+    ap.add_argument("--no-cache", action="store_true")
+    ap.add_argument("--no-prompt-adaptation", action="store_true")
     args = ap.parse_args()
 
-    keep = args.tiers.split(",")
-    NM.TIERS = {k: v for k, v in NM.TIERS.items() if k in keep}
-    for k in NM.TIERS:
-        NM.TIERS[k]["steps"] = min(NM.TIERS[k]["steps"], args.train_steps)
-
-    print("== tiers ==")
-    apis = NM.train_marketplace(args.task, seed=0, verbose=True)
-    train = synthetic.sample(args.task, 400, seed=11)
-    data, answers = NM.collect_market_data(apis, train.tokens, train.labels)
-    print("tier accuracy:",
-          {n: round(float(a), 3)
-           for n, a in zip(data.names, np.asarray(data.accuracy()))})
-
-    k = len(apis)
-    sp = SC.train_scorer(np.repeat(train.tokens, k, axis=0),
-                         answers.reshape(-1),
-                         np.asarray(data.correct).reshape(-1), steps=200)
-    s_train = np.stack([SC.score(sp, train.tokens, answers[:, j])
-                        for j in range(k)], axis=1)
-    budget = float(data.cost[:, -1].mean()) * args.budget_frac
-    cas, m = learn_cascade(data, jnp.asarray(s_train), budget,
-                           RouterConfig(top_lists=10, sample=256))
-    print(f"cascade: {cas.describe(data.names)} "
-          f"(train acc {m['acc']:.3f}, ${m['avg_cost']:.6f}/query)")
+    pipe, _ = build_pipeline(BuildConfig(
+        task=args.task, tiers=tuple(args.tiers.split(",")),
+        train_steps_cap=args.train_steps, budget_frac=args.budget_frac,
+        enable_cache=not args.no_cache,
+        enable_prompt_adaptation=not args.no_prompt_adaptation,
+        router=RouterConfig(top_lists=10, sample=256)))
 
     test = synthetic.sample(args.task, args.requests, seed=77)
-    tiers = [Tier(apis[i].name, apis[i].answer, apis[i].query_cost)
-             for i in cas.apis]
-    server = CascadeServer(tiers, cas.thresholds,
-                           lambda t, ans: SC.score(sp, t, ans))
-    res = server.serve(test.tokens)
-    acc = float((res["answers"] == test.labels).mean())
-    top = apis[-1].query_cost(test.tokens).mean()
-    print(f"served {args.requests} requests in {res['latency_s']:.1f}s "
-          f"(tiers {res['tier_counts']}): acc {acc:.3f}, "
-          f"${res['cost'].mean():.6f}/query "
-          f"({100 * (1 - res['cost'].mean() / top):.0f}% below top-tier-only)")
+    res = pipe.serve(test.tokens)
+    acc = float((res.answers == test.labels).mean())
+    print(res.summary())
+    print(f"accuracy {acc:.3f}; avg cost ${res.cost.mean():.6f}/query "
+          f"({100 * res.savings_frac:.0f}% below top-tier-only)")
 
 
 if __name__ == "__main__":

@@ -6,7 +6,8 @@ tasks) and (ii) the DistilBERT-analogue generation scorer.
 """
 from __future__ import annotations
 
-import dataclasses
+import functools
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -51,3 +52,20 @@ def classifier_score(params, tokens, cfg: ModelConfig):
     """Regression head in [0,1] (the generation scorer g)."""
     logits = classifier_logits(params, tokens, cfg)
     return jax.nn.sigmoid(logits[:, 0])
+
+
+_JITTED: dict[str, Callable] = {}
+
+
+def jitted_logits(cfg: ModelConfig) -> Callable:
+    """Per-config cached ``jit(classifier_logits)``.
+
+    Serving-hot-path callers must use this instead of wrapping a fresh
+    ``jax.jit(partial(...))`` per call — a new wrapper object misses
+    jax's jit cache and retraces on every batch.
+    """
+    fn = _JITTED.get(cfg.name)
+    if fn is None:
+        fn = jax.jit(functools.partial(classifier_logits, cfg=cfg))
+        _JITTED[cfg.name] = fn
+    return fn

@@ -299,11 +299,14 @@ def softmax_xent(logits, labels):
     return jnp.mean(logz - gold)
 
 
-def prefill(params, batch, cfg: ModelConfig, max_len: int = 0):
+def prefill(params, batch, cfg: ModelConfig, max_len: int = 0,
+            last_index=None):
     """Full-sequence forward building the decode cache (or, for encoder-only
     archs, the encoding pass). ``max_len``: decode-cache allocation length
-    (>= prompt length); defaults to the prompt length. Returns
-    (last_logits, cache)."""
+    (>= prompt length); defaults to the prompt length. ``last_index``:
+    position whose logits to return (may be a traced scalar; defaults to
+    the final position) — lets right-padded prompts read the logits of
+    their true last token. Returns (last_logits, cache)."""
     x, positions = _embed_inputs(params, batch, cfg, "prefill")
     b, s = x.shape[0], x.shape[1]
     cache = init_cache(cfg, b, s, jnp.dtype(cfg.dtype)) if cfg.causal else None
@@ -318,7 +321,11 @@ def prefill(params, batch, cfg: ModelConfig, max_len: int = 0):
                                        pos=None, remat=False)
     h = apply_norm(params["final_norm"], x, cfg)
     if cfg.causal:
-        logits = unembed(params["embed"], h[:, -1:], cfg)
+        if last_index is None:
+            h_last = h[:, -1:]
+        else:
+            h_last = jax.lax.dynamic_slice_in_dim(h, last_index, 1, axis=1)
+        logits = unembed(params["embed"], h_last, cfg)
     else:
         logits = unembed(params["embed"], h, cfg)   # per-frame logits
     return logits, new_cache

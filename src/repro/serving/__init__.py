@@ -1,0 +1,57 @@
+"""``repro.serving`` — the FrugalGPT serving subsystem.
+
+The paper's three cost-reduction strategies composed on one batched
+request path:
+
+  * **completion cache** (§3.2) — ``repro.core.approx.CompletionCache``,
+    keyed by scorer-encoder embeddings;
+  * **prompt adaptation** (§3.1) — per-tier ``PromptSpec`` billed with
+    the exact 3-term ``ApiCost`` model;
+  * **LLM cascade** (§3.3) — tier-by-tier compaction through the repo's
+    single cascade executor (``repro.core.cascade.execute_cascade``).
+
+Modules
+-------
+``engine``    ``GenerationEngine`` (bucketed prefill compilation — batch,
+              prompt and cache lengths round up to power-of-two buckets
+              so compiled variants stay O(log range)), a shared
+              ``EnginePool``, ``Tier``/``generation_tier`` adapters, and
+              the ``CascadeServer`` facade.
+``pipeline``  ``ServingPipeline`` (the three-stage request path) and the
+              ``ServeResult`` telemetry record: per-tier compaction
+              counts, cache hit rate, per-stage latency, prompt tokens
+              saved, and cost vs. the top-tier baseline.
+``builder``   ``build_pipeline(BuildConfig)`` — train tiers, collect
+              offline data, train the scorer, select prompts, learn the
+              cascade, assemble the pipeline. ``repro.launch.serve`` and
+              ``examples/cascade_serving.py`` are thin wrappers over it.
+
+Usage
+-----
+    from repro.serving import BuildConfig, build_pipeline
+    from repro.data import synthetic
+
+    pipe, report = build_pipeline(BuildConfig(task="headlines"))
+    batch = synthetic.sample("headlines", 256, seed=7)
+    res = pipe.serve(batch.tokens)       # ServeResult
+    print(res.summary())                 # hit rate, compaction, $ saved
+    res = pipe.serve(batch.tokens)       # repeats now hit the cache
+
+Serve a custom marketplace by constructing ``ServingPipeline`` directly
+with ``TierSpec`` entries (any ``answer`` callable: a marketplace
+classifier, a ``generation_tier`` over a pooled ``GenerationEngine``, or
+a remote API client).
+"""
+from repro.serving.builder import BuildConfig, build_pipeline  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    CascadeServer,
+    EnginePool,
+    GenerationEngine,
+    Tier,
+    generation_tier,
+)
+from repro.serving.pipeline import (  # noqa: F401
+    ServeResult,
+    ServingPipeline,
+    TierSpec,
+)

@@ -1,0 +1,165 @@
+"""Shared pipeline builder: everything between "a task name" and "a ready
+``ServingPipeline``", used by both ``repro.launch.serve`` and
+``examples/cascade_serving.py`` (which are now thin CLI wrappers).
+
+Build steps:
+  1. train the tier models (neural marketplace) on the synthetic task;
+  2. collect offline marketplace data and train the scoring function
+     g(q, a) on it;
+  3. greedy prompt selection per tier (§3.1): pick the few-shot examples
+     worth their tokens under each tier's measured accuracy profile;
+  4. reprice the offline data with the adapted per-tier prompts and
+     learn (L, tau) with the router optimizer under the budget;
+  5. assemble the ``ServingPipeline``: completion cache keyed by
+     scorer-encoder embeddings, adapted prompts, learned cascade.
+
+The prompt-selection accuracy model is the calibrated diminishing-
+returns curve (per-example gains anchored at the tier's measured
+validation accuracy, as in ``examples/prompt_adaptation.py``); the token
+accounting is exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import neural_market as NM
+from repro.core import scorer as SC
+from repro.core.approx import CompletionCache, embed_queries
+from repro.core.prompt import PromptSpec, select_prompt
+from repro.core.router import RouterConfig, learn_cascade
+from repro.core.simulate import MarketData
+from repro.data import synthetic
+from repro.serving.pipeline import ServingPipeline, TierSpec
+
+
+@dataclasses.dataclass
+class BuildConfig:
+    task: str = "headlines"
+    tiers: tuple = ("GPT-J", "ChatGPT", "GPT-4")
+    train_queries: int = 400
+    train_steps_cap: int = 200
+    scorer_steps: int = 250
+    budget_frac: float = 0.3        # budget as fraction of top-tier cost
+    seed: int = 0
+    router: RouterConfig | None = None
+    # strategy toggles
+    enable_cache: bool = True
+    enable_prompt_adaptation: bool = True
+    cache_capacity: int = 1024
+    cache_threshold: float = 0.995
+    # unadapted few-shot prompt shape (paper's 8-shot HEADLINES scale)
+    n_shot: int = 8
+    tokens_per_example: int = 110
+    base_tokens: int = 140
+    verbose: bool = True
+
+
+def _select_tier_prompt(cfg: BuildConfig, tier_idx: int,
+                        val_acc: float) -> tuple[PromptSpec, list]:
+    """Greedy prompt selection for one tier (Fig. 2a).
+
+    Accuracy model: measured validation accuracy at the full prompt,
+    diminishing per-example gains (seeded per tier) — the greedy selector
+    finds the knee where examples stop paying for their tokens.
+    """
+    rng = np.random.default_rng(cfg.seed + 101 * tier_idx)
+    gains = np.sort(rng.uniform(0.004, 0.02, size=cfg.n_shot))[::-1]
+    base = val_acc - float(gains.sum())
+
+    def evaluate(ids):
+        return base + sum(float(gains[i]) for i in ids)
+
+    return select_prompt(list(range(cfg.n_shot)), evaluate,
+                         tokens_per_example=cfg.tokens_per_example,
+                         base_tokens=cfg.base_tokens, min_gain=0.008)
+
+
+def _reprice(data: MarketData, apis, prompts, full_tokens: int) -> MarketData:
+    """Offline costs as the pipeline will actually bill them: query
+    tokens + the (adapted or full) per-tier prompt prefix."""
+    cost = np.zeros(np.asarray(data.cost).shape, np.float32)
+    n_in = np.asarray(data.n_in)
+    for k, api in enumerate(apis):
+        prefix = prompts[k].n_tokens if prompts[k] is not None else full_tokens
+        cost[:, k] = np.asarray(api.price.query_cost(n_in + prefix,
+                                                     data.n_out))
+    return MarketData(data.names, data.correct, jnp.asarray(cost),
+                      data.n_in, data.n_out, data.difficulty)
+
+
+def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
+    """Returns (pipeline, report). ``report`` carries the build artifacts
+    (apis, market data, scorer params, cascade, metrics) for drivers that
+    want to print or evaluate them."""
+    say = print if cfg.verbose else (lambda *a, **k: None)
+
+    # 1. tier models
+    say("== training tier models ==")
+    tier_specs = NM.tier_subset(cfg.tiers, steps_cap=cfg.train_steps_cap)
+    apis = NM.train_marketplace(cfg.task, seed=cfg.seed, verbose=cfg.verbose,
+                                tiers=tier_specs)
+
+    # 2. offline data + scorer
+    say("== collecting offline marketplace data ==")
+    train = synthetic.sample(cfg.task, cfg.train_queries, seed=cfg.seed + 11)
+    data, answers = NM.collect_market_data(apis, train.tokens, train.labels)
+    accs = np.asarray(data.accuracy())
+    say("tier accuracy:", {n: round(float(a), 3)
+                           for n, a in zip(data.names, accs)})
+
+    say("== training the scoring function g(q, a) ==")
+    k = len(apis)
+    q = np.repeat(train.tokens, k, axis=0)
+    y = np.asarray(data.correct).reshape(-1)
+    sp = SC.train_scorer(q, answers.reshape(-1), y, steps=cfg.scorer_steps,
+                         seed=cfg.seed)
+    s_train = np.stack([SC.score(sp, train.tokens, answers[:, j])
+                        for j in range(k)], axis=1)
+    say(f"scorer AUC: {SC.auc(s_train.reshape(-1), y):.3f}")
+
+    # 3. prompt adaptation per tier
+    full_tokens = cfg.base_tokens + cfg.n_shot * cfg.tokens_per_example
+    prompts: list[PromptSpec | None] = [None] * k
+    if cfg.enable_prompt_adaptation:
+        say("== greedy prompt selection per tier ==")
+        for j in range(k):
+            spec, _ = _select_tier_prompt(cfg, j, float(accs[j]))
+            prompts[j] = spec
+            say(f"  {data.names[j]}: kept {len(spec.example_ids)}/"
+                f"{cfg.n_shot} examples ({spec.n_tokens} vs {full_tokens} "
+                f"prompt tokens)")
+
+    # 4. learn the cascade on the repriced (served-as-billed) costs
+    say("== learning the cascade ==")
+    priced = _reprice(data, apis, prompts, full_tokens)
+    budget = float(priced.cost[:, -1].mean()) * cfg.budget_frac
+    router = cfg.router or RouterConfig(top_lists=10, sample=256)
+    cas, metrics = learn_cascade(priced, jnp.asarray(s_train), budget, router)
+    say(f"cascade: {cas.describe(data.names)} "
+        f"(train acc {metrics['acc']:.3f}, ${metrics['avg_cost']:.6f}/query)")
+
+    # 5. assemble the pipeline
+    cache = embed = None
+    if cfg.enable_cache:
+        cache = CompletionCache(capacity=cfg.cache_capacity,
+                                threshold=cfg.cache_threshold)
+        embed = functools.partial(embed_queries, sp, cfg=SC.SCORER_CFG)
+    tiers = [TierSpec(apis[i].name, apis[i].answer, apis[i].price,
+                      prompt=prompts[i]) for i in cas.apis]
+    # savings baseline = the marketplace's most expensive tier, NOT the
+    # cascade's last tier (a tight budget can drop the top tier entirely)
+    top = int(np.argmax(np.asarray(priced.cost).mean(0)))
+    pipeline = ServingPipeline(
+        tiers=tiers, thresholds=cas.thresholds,
+        scorer=lambda toks, ans: SC.score(sp, toks, ans),
+        cache=cache, embed=embed, full_prompt_tokens=full_tokens,
+        pad_token=synthetic.PAD, baseline_price=apis[top].price)
+    report = {"apis": apis, "data": data, "priced": priced,
+              "answers": answers, "scorer": sp, "scores": s_train,
+              "cascade": cas, "metrics": metrics, "budget": budget,
+              "prompts": prompts, "full_prompt_tokens": full_tokens}
+    return pipeline, report

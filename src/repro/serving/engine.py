@@ -1,16 +1,36 @@
-"""Serving engine: generation (prefill + decode loop) and the
-cascade-aware tiered scheduler (the production realization of FrugalGPT's
-LLM cascade — DESIGN.md §3).
+"""Serving engine: batched generation with bucketed prefill compilation,
+a shared engine pool, and the cascade-server facade.
 
-Queries hit tier 1 as one batch; the scorer marks unreliable answers;
-those are *compacted* and re-batched to tier 2, etc. Each tier is an
-independently sharded model (pjit on the production mesh; plain jit on
-the CPU CI runner).
+``GenerationEngine`` replaces the old per-``(seq_len, max_len)`` jit
+cache — which recompiled on every new shape the tier-by-tier compaction
+produced — with *bucketed* compilation: batch, prompt length and cache
+length are rounded up to power-of-two buckets, so the number of compiled
+prefill variants is logarithmic in the shape range instead of linear in
+the number of distinct request shapes.
+
+Exactness of the bucketing (all verified by tests/test_serving.py):
+  * batch padding    — extra rows are computed and sliced off; always exact.
+  * cache (max_len)  — decode masks slots beyond the fill level (full
+    attention) or by ring-slot position (sliding), so a larger cache is
+    always exact.
+  * prompt padding   — right-pad tokens, read prefill logits at the true
+    last position, start decode at the true length so pad slots are
+    overwritten before the mask admits them. Exact for attention-only
+    stacks whose ring cache never truncates the padded prompt; engines
+    fall back to exact prompt shapes for SSM/hybrid stacks or when the
+    sliding window is smaller than the padded prompt.
+With ``temperature > 0`` sampled tokens are seed-reproducible per bucket
+shape (the noise tensor follows the padded shape), greedy decoding is
+bit-exact regardless of bucketing.
+
+``CascadeServer`` is the serving facade over the repo's single cascade
+executor (``repro.core.cascade.execute_cascade``); the full three-strategy
+pipeline (cache + prompt adaptation + cascade) lives in
+``repro.serving.pipeline``.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Callable, Sequence
 
@@ -19,28 +39,37 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.cascade import CascadeTier, execute_cascade
 from repro.models import transformer as T
+
+
+def bucket_size(x: int, floor: int) -> int:
+    """Next power of two >= x, floored at ``floor`` — keeps the number of
+    compiled shape variants O(log range) instead of O(distinct shapes)."""
+    b = max(1, floor)
+    while b < x:
+        b *= 2
+    return b
 
 
 @dataclasses.dataclass
 class GenerationEngine:
-    """Batched prefill+decode generation for one model."""
+    """Batched prefill+decode generation for one model, bucket-compiled."""
 
     cfg: ModelConfig
     params: dict
     max_new_tokens: int = 16
     temperature: float = 0.0
+    batch_floor: int = 8        # batch sizes bucketed to pow2 >= this
+    seq_floor: int = 16         # prompt/cache lengths bucketed likewise
+    pad_token: int = 0
 
     def __post_init__(self):
         cfg = self.cfg
+        self._prefill_fns: dict[tuple[int, int, int], Callable] = {}
+        self.compile_stats = {"prefill_compiles": 0, "prefill_calls": 0}
 
         @jax.jit
-        def _prefill(params, batch, max_len):
-            return T.prefill(params, batch, cfg, max_len=int(max_len))
-
-        self._prefill_fns = {}
-
-        @functools.partial(jax.jit, static_argnums=())
         def _decode(params, cache, tok, pos, key):
             logits, cache = T.decode_step(params, cache, tok, pos, cfg)
             logits = logits[:, -1]
@@ -52,18 +81,47 @@ class GenerationEngine:
 
         self._decode = _decode
 
+    def _seq_paddable(self, seq_bucket: int) -> bool:
+        """Right-padding the prompt is exact iff every mixer is attention
+        and no sliding-window ring buffer would evict padded-prompt slots
+        before decode overwrites them (i.e. padded prompt fits the window).
+        """
+        specs = self.cfg.layers
+        if any(not s.mixer.startswith("attn") for s in specs):
+            return False
+        if self.cfg.window and any(s.mixer == "attn_sliding" for s in specs):
+            return seq_bucket < self.cfg.window
+        return True
+
+    def _prefill_fn(self, key: tuple[int, int, int]) -> Callable:
+        _, _, max_len = key
+        if key not in self._prefill_fns:
+            self.compile_stats["prefill_compiles"] += 1
+            self._prefill_fns[key] = jax.jit(
+                lambda p, toks, last: T.prefill(
+                    p, {"tokens": toks}, self.cfg, max_len=max_len,
+                    last_index=last))
+        return self._prefill_fns[key]
+
     def generate(self, tokens: np.ndarray, n_new: int | None = None,
                  seed: int = 0) -> np.ndarray:
         """tokens (B, S) -> generated (B, n_new)."""
         n_new = n_new or self.max_new_tokens
         b, s = tokens.shape
-        max_len = s + n_new
-        key = (s, max_len)
-        if key not in self._prefill_fns:
-            self._prefill_fns[key] = jax.jit(
-                lambda p, bt: T.prefill(p, bt, self.cfg, max_len=max_len))
-        logits, cache = self._prefill_fns[key](self.params,
-                                               {"tokens": jnp.asarray(tokens)})
+        b_b = bucket_size(b, self.batch_floor)
+        s_b = bucket_size(s, self.seq_floor)
+        if not self._seq_paddable(s_b):
+            s_b = s
+        max_len = bucket_size(s_b + n_new, self.seq_floor)
+
+        toks = np.full((b_b, s_b), self.pad_token, tokens.dtype)
+        toks[:b, :s] = tokens
+        toks[b:, :s] = tokens[-1]          # batch filler: replicate a row
+
+        self.compile_stats["prefill_calls"] += 1
+        fn = self._prefill_fn((b_b, s_b, max_len))
+        logits, cache = fn(self.params, jnp.asarray(toks),
+                           jnp.int32(s - 1))
         nxt = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
         out = [np.asarray(nxt)]
         rkey = jax.random.PRNGKey(seed)
@@ -72,7 +130,46 @@ class GenerationEngine:
             nxt, cache = self._decode(self.params, cache, nxt,
                                       jnp.int32(s + i), sub)
             out.append(np.asarray(nxt))
-        return np.concatenate(out, axis=1)
+        return np.concatenate(out, axis=1)[:b]
+
+
+@dataclasses.dataclass
+class EnginePool:
+    """Shared ``GenerationEngine`` pool: one engine (and so one bucketed
+    jit cache) per model config, reused by every tier/pipeline that serves
+    that model."""
+
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+
+    def __post_init__(self):
+        self._engines: dict[tuple[str, int], GenerationEngine] = {}
+
+    def get(self, cfg: ModelConfig, params: dict) -> GenerationEngine:
+        # key on weight identity too: two tiers can share an architecture
+        # (same cfg.name) with different trained params, and must not
+        # silently serve each other's model (the pooled engine keeps the
+        # params pytree alive, so id() stays valid for the cache lifetime)
+        key = (cfg.name, id(params))
+        eng = self._engines.get(key)
+        if eng is None:
+            eng = GenerationEngine(cfg, params,
+                                   max_new_tokens=self.max_new_tokens,
+                                   temperature=self.temperature)
+            self._engines[key] = eng
+        return eng
+
+    def __len__(self) -> int:
+        return len(self._engines)
+
+    @property
+    def compile_stats(self) -> dict:
+        """Aggregate prefill compile/call counts across the pool."""
+        out = {"prefill_compiles": 0, "prefill_calls": 0}
+        for eng in self._engines.values():
+            for k in out:
+                out[k] += eng.compile_stats[k]
+        return out
 
 
 @dataclasses.dataclass
@@ -82,9 +179,33 @@ class Tier:
     cost: Callable              # tokens (n, L) -> per-query cost (n,)
 
 
+def generation_tier(name: str, engine: GenerationEngine, price,
+                    decode_answer: Callable, n_new: int = 1,
+                    pad_token: int = 0) -> Tier:
+    """A cascade tier backed by a pooled ``GenerationEngine``.
+
+    decode_answer(generated (b, n_new)) -> answer ids (b,);
+    price: ``ApiCost`` used for exact token-count accounting.
+    """
+
+    def answer(tokens: np.ndarray) -> np.ndarray:
+        return np.asarray(decode_answer(engine.generate(tokens, n_new)))
+
+    def cost(tokens: np.ndarray) -> np.ndarray:
+        n_in = (tokens != pad_token).sum(-1)
+        return np.asarray(price.query_cost(n_in, np.full_like(n_in, n_new)))
+
+    return Tier(name, answer, cost)
+
+
 @dataclasses.dataclass
 class CascadeServer:
-    """FrugalGPT cascade as a serving policy (tier-by-tier compaction)."""
+    """FrugalGPT cascade as a serving policy (tier-by-tier compaction).
+
+    Thin facade over the repo's single cascade executor; use
+    ``repro.serving.pipeline.ServingPipeline`` for the full
+    cache + prompt-adaptation + cascade request path.
+    """
 
     tiers: Sequence[Tier]
     thresholds: Sequence[float]         # len = len(tiers) - 1
@@ -92,37 +213,16 @@ class CascadeServer:
     batch_size: int = 256
 
     def serve(self, tokens: np.ndarray) -> dict:
-        n = tokens.shape[0]
-        answers = np.zeros(n, np.int32)
-        cost = np.zeros(n, np.float64)
-        stopped_at = np.full(n, len(self.tiers) - 1, np.int32)
-        pending = np.arange(n)
         t0 = time.time()
-        tier_counts = []
-        for j, tier in enumerate(self.tiers):
-            if len(pending) == 0:
-                tier_counts.append(0)
-                continue
-            tier_counts.append(len(pending))
-            toks = tokens[pending]
-            ans = np.zeros(len(pending), np.int32)
-            for i in range(0, len(pending), self.batch_size):
-                ans[i:i + self.batch_size] = tier.answer(
-                    toks[i:i + self.batch_size])
-            cost[pending] += tier.cost(toks)
-            if j < len(self.tiers) - 1:
-                s = self.scorer(toks, ans)
-                accept = s >= self.thresholds[j]
-            else:
-                accept = np.ones(len(pending), bool)
-            done = pending[accept]
-            answers[done] = ans[accept]
-            stopped_at[done] = j
-            pending = pending[~accept]
+        ct = [CascadeTier(t.name, lambda q, t=t: (t.answer(q), t.cost(q)))
+              for t in self.tiers]
+        res = execute_cascade(ct, self.thresholds,
+                              lambda q, a, _j: self.scorer(q, a),
+                              tokens, batch_size=self.batch_size)
         return {
-            "answers": answers,
-            "cost": cost,
-            "stopped_at": stopped_at,
-            "tier_counts": tier_counts,
+            "answers": np.asarray(res["answers"]).astype(np.int32),
+            "cost": res["cost"],
+            "stopped_at": res["stopped_at"],
+            "tier_counts": [c for c in res["tier_counts"]],
             "latency_s": time.time() - t0,
         }

@@ -1,0 +1,200 @@
+"""The unified FrugalGPT serving pipeline: all three cost-reduction
+strategies composed on ONE batched request path (paper §3, Fig. 2).
+
+A token batch flows through three stages:
+
+  1. completion cache (§3.2, LLM approximation) — queries are embedded
+     with the scorer's encoder (no extra model) and answered from the
+     nearest-neighbour cache when similarity clears the threshold;
+  2. prompt adaptation (§3.1) — every cache miss is billed against the
+     *adapted* per-tier few-shot prefix (``PromptSpec``) instead of the
+     full prompt, with exact ``ApiCost`` token accounting;
+  3. LLM cascade (§3.3) — misses run tier-by-tier with compaction
+     through the repo's single cascade executor
+     (``repro.core.cascade.execute_cascade``); answer, cost and scorer
+     calls are all chunked to ``batch_size``.
+
+Fresh answers are inserted back into the cache, and every request batch
+returns a ``ServeResult`` telemetry record: per-tier counts, cache hit
+rate, per-stage latency, and cost against the always-top-tier baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.approx import CompletionCache
+from repro.core.cascade import CascadeTier, execute_cascade
+from repro.core.cost import ApiCost
+from repro.core.prompt import PromptSpec
+
+
+@dataclasses.dataclass
+class TierSpec:
+    """One serving tier: a live model plus its economics.
+
+    ``answer(tokens (b, L)) -> answers (b,)``; ``price`` is the exact
+    3-term API cost model; ``prompt`` is the tier's adapted few-shot
+    prefix (None = bill the full, unadapted prompt).
+    """
+
+    name: str
+    answer: Callable
+    price: ApiCost
+    prompt: PromptSpec | None = None
+    n_out: int = 1
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Telemetry for one served batch."""
+
+    answers: np.ndarray          # (n,) final answers
+    cost: np.ndarray             # (n,) accounted USD per query
+    stopped_at: np.ndarray       # (n,) cascade position; -1 = cache hit
+    tier_counts: list            # queries reaching each tier (compaction)
+    tier_names: list
+    cache_hits: int
+    cache_misses: int
+    prompt_tokens_saved: int     # adapted vs full prompt, summed over calls
+    baseline_cost: float         # top tier + full prompt for every query
+    latency: dict                # per-stage seconds
+
+    @property
+    def n(self) -> int:
+        return len(self.answers)
+
+    @property
+    def cache_hit_rate(self) -> float:
+        t = self.cache_hits + self.cache_misses
+        return self.cache_hits / t if t else 0.0
+
+    @property
+    def savings_frac(self) -> float:
+        if self.baseline_cost <= 0:
+            return 0.0
+        return 1.0 - float(self.cost.sum()) / self.baseline_cost
+
+    def summary(self) -> str:
+        lat = ", ".join(f"{k} {v * 1e3:.0f}ms" for k, v in
+                        self.latency.items())
+        tiers = ", ".join(f"{nm}: {c}" for nm, c in
+                          zip(self.tier_names, self.tier_counts))
+        return (
+            f"served {self.n} queries | cache hit rate "
+            f"{self.cache_hit_rate:.2f} ({self.cache_hits} hits) | "
+            f"tier compaction [{tiers}] | prompt tokens saved "
+            f"{self.prompt_tokens_saved} | cost ${self.cost.sum():.6f} vs "
+            f"${self.baseline_cost:.6f} top-tier baseline "
+            f"({100 * self.savings_frac:.0f}% saved) | {lat}")
+
+
+@dataclasses.dataclass
+class ServingPipeline:
+    """Completion cache -> prompt adaptation -> LLM cascade, batched."""
+
+    tiers: Sequence[TierSpec]
+    thresholds: Sequence[float]          # len = len(tiers) - 1
+    scorer: Callable                     # (tokens, answers) -> scores (n,)
+    cache: CompletionCache | None = None
+    embed: Callable | None = None        # tokens (n, L) -> embeddings (n, d)
+    full_prompt_tokens: int = 0          # unadapted few-shot prefix length
+    pad_token: int = 0
+    batch_size: int = 256
+    # economics of the marketplace's top tier, for the savings baseline —
+    # the learned cascade may not end there (budget fallback), so this
+    # must not default to whatever tier happens to be last in the cascade
+    baseline_price: ApiCost | None = None
+    baseline_n_out: int = 1
+
+    def __post_init__(self):
+        if self.cache is not None and self.embed is None:
+            raise ValueError("a completion cache needs an embed function "
+                             "(reuse the scorer encoder, see builder)")
+
+    # -- stage 2: exact per-tier cost with the adapted prompt --------------
+    def _query_tokens(self, tokens: np.ndarray) -> np.ndarray:
+        return np.asarray((tokens != self.pad_token).sum(-1), np.int64)
+
+    def _tier_cost(self, spec: TierSpec, tokens: np.ndarray) -> np.ndarray:
+        prefix = (spec.prompt.n_tokens if spec.prompt is not None
+                  else self.full_prompt_tokens)
+        n_q = self._query_tokens(tokens)
+        n_out = np.full_like(n_q, spec.n_out)
+        return np.asarray(spec.price.query_cost(n_q + prefix, n_out),
+                          np.float64)
+
+    def _baseline_cost(self, tokens: np.ndarray) -> float:
+        """Everything to the marketplace top tier, full prompt, no cache."""
+        if self.baseline_price is not None:
+            price, n_out = self.baseline_price, self.baseline_n_out
+        else:
+            price, n_out = self.tiers[-1].price, self.tiers[-1].n_out
+        n_q = self._query_tokens(tokens)
+        return float(np.asarray(price.query_cost(
+            n_q + self.full_prompt_tokens,
+            np.full_like(n_q, n_out))).sum())
+
+    def serve(self, tokens: np.ndarray) -> ServeResult:
+        t0 = time.time()
+        n = tokens.shape[0]
+        answers = np.zeros(n, np.int32)
+        cost = np.zeros(n, np.float64)
+        stopped_at = np.full(n, -1, np.int32)
+        latency: dict = {}
+
+        # stage 1: completion cache
+        hits = 0
+        emb = None
+        miss = np.arange(n)
+        if self.cache is not None:
+            t = time.time()
+            emb = self.embed(tokens)
+            latency["embed"] = time.time() - t
+            t = time.time()
+            hit_mask, cached = self.cache.lookup(emb)
+            answers[hit_mask] = cached[hit_mask]
+            hits = int(hit_mask.sum())
+            miss = np.flatnonzero(~hit_mask)
+            latency["cache"] = time.time() - t
+
+        # stages 2+3: adapted prompts + cascade over the misses
+        t = time.time()
+        tier_counts = [0] * len(self.tiers)
+        prompt_saved = 0
+        if len(miss):
+            ct = [CascadeTier(
+                      s.name,
+                      lambda q, s=s: (s.answer(q), self._tier_cost(s, q)))
+                  for s in self.tiers]
+            res = execute_cascade(ct, self.thresholds,
+                                  lambda q, a, _j: self.scorer(q, a),
+                                  tokens[miss], batch_size=self.batch_size)
+            answers[miss] = np.asarray(res["answers"]).astype(np.int32)
+            cost[miss] = res["cost"]
+            stopped_at[miss] = res["stopped_at"]
+            tier_counts = res["tier_counts"]
+            for spec, c in zip(self.tiers, tier_counts):
+                if spec.prompt is not None:
+                    prompt_saved += c * (self.full_prompt_tokens
+                                         - spec.prompt.n_tokens)
+        latency["cascade"] = time.time() - t
+
+        # write fresh answers back into the cache
+        if self.cache is not None and len(miss):
+            t = time.time()
+            self.cache.insert(emb[miss], answers[miss])
+            latency["insert"] = time.time() - t
+
+        latency["total"] = time.time() - t0
+        return ServeResult(
+            answers=answers, cost=cost, stopped_at=stopped_at,
+            tier_counts=list(tier_counts),
+            tier_names=[s.name for s in self.tiers],
+            cache_hits=hits, cache_misses=len(miss),
+            prompt_tokens_saved=int(prompt_saved),
+            baseline_cost=self._baseline_cost(tokens),
+            latency=latency)

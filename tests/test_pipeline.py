@@ -1,0 +1,283 @@
+"""Unified serving pipeline: completion-cache ring buffer, the single
+cascade executor, router guard rails, and the 3-strategy pipeline
+end-to-end on a 2-tier toy marketplace.
+
+(Runs without hypothesis — keeps executor/cache coverage alive even when
+the property-based modules skip.)
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.approx import CompletionCache
+from repro.core.cascade import (Cascade, CascadeTier, evaluate_offline,
+                                execute_cascade, replay_tiers)
+from repro.core.cost import ApiCost
+from repro.core.prompt import PromptSpec
+from repro.core.router import RouterConfig, _grid_eval, learn_cascade
+from repro.core.simulate import MarketData, simulate_scores
+from repro.serving.pipeline import ServeResult, ServingPipeline, TierSpec
+
+
+def _unit(v):
+    v = np.asarray(v, np.float32)
+    return v / np.linalg.norm(v, axis=-1, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# completion cache: ring wraparound + accounting
+# ---------------------------------------------------------------------------
+
+
+def test_cache_ring_wraparound_evicts_oldest():
+    cache = CompletionCache(capacity=4, threshold=0.99)
+    # 6 orthogonal embeddings -> inserting all wraps the ring by 2
+    emb = np.eye(6, 8, dtype=np.float32)
+    cache.insert(emb[:4], np.arange(4, dtype=np.int32))
+    assert cache._next == 0                     # exactly full, wrapped to 0
+    cache.insert(emb[4:], np.arange(4, 6, dtype=np.int32))
+    assert cache._next == 2
+    # entries 0 and 1 were evicted (slots reused by 4 and 5)
+    hit, ans = cache.lookup(emb)
+    assert hit.tolist() == [False, False, True, True, True, True]
+    assert ans[2:].tolist() == [2, 3, 4, 5]
+
+
+def test_cache_hit_miss_accounting():
+    cache = CompletionCache(capacity=8, threshold=0.99)
+    emb = np.eye(3, 4, dtype=np.float32)
+    hit, _ = cache.lookup(emb)                  # empty cache: all miss
+    assert not hit.any() and cache.misses == 3 and cache.hits == 0
+    cache.insert(emb, np.array([7, 8, 9], np.int32))
+    hit, ans = cache.lookup(emb)
+    assert hit.all() and ans.tolist() == [7, 8, 9]
+    assert cache.hits == 3 and cache.misses == 3
+    assert cache.hit_rate == pytest.approx(0.5)
+
+
+def test_cache_near_duplicate_threshold():
+    cache = CompletionCache(capacity=8, threshold=0.9)
+    base = _unit(np.ones((1, 16)))
+    near = _unit(np.ones((1, 16)) + 0.1 * np.eye(1, 16))     # sim ~ 1
+    far = _unit(np.eye(1, 16))                               # sim = 0.25
+    cache.insert(base, np.array([3], np.int32))
+    hit, ans = cache.lookup(near)
+    assert hit[0] and ans[0] == 3
+    hit, _ = cache.lookup(far)
+    assert not hit[0]
+
+
+# ---------------------------------------------------------------------------
+# the single cascade executor
+# ---------------------------------------------------------------------------
+
+
+def test_execute_cascade_batches_all_calls():
+    """answer/cost and scorer calls are chunked to batch_size."""
+    n, bs = 50, 16
+    sizes = {"invoke": [], "score": []}
+
+    def invoke(q):
+        sizes["invoke"].append(len(q))
+        return np.zeros(len(q), np.int32), np.ones(len(q))
+
+    def scorer(q, a, j):
+        sizes["score"].append(len(q))
+        return np.zeros(len(q))            # reject all -> everything escalates
+
+    tiers = [CascadeTier("a", invoke), CascadeTier("b", invoke)]
+    res = execute_cascade(tiers, [0.5], scorer, np.arange(n), batch_size=bs)
+    assert max(sizes["invoke"]) <= bs and max(sizes["score"]) <= bs
+    assert sum(sizes["score"]) == n            # only tier 0 is scored
+    assert res["tier_counts"] == [n, n]
+    assert res["cost"].sum() == pytest.approx(2 * n)
+
+
+def test_execute_cascade_threshold_count_mismatch():
+    t = CascadeTier("a", lambda q: (np.zeros(len(q)), np.zeros(len(q))))
+    with pytest.raises(ValueError, match="thresholds"):
+        execute_cascade([t, t], [], lambda q, a, j: None, np.arange(3))
+
+
+def test_replay_backend_matches_market_accuracy():
+    rng = np.random.default_rng(0)
+    n, k = 300, 3
+    correct = (rng.uniform(size=(n, k)) < [0.6, 0.7, 0.9]).astype(np.float32)
+    cost = np.array([1.0, 3.0, 10.0])[None] * np.ones((n, 1), np.float32)
+    data = MarketData([f"t{i}" for i in range(k)], jnp.asarray(correct),
+                      jnp.asarray(cost), jnp.ones(n, jnp.int32),
+                      jnp.ones(n, jnp.int32), jnp.zeros(n))
+    scores = simulate_scores(data, seed=1)
+    m = evaluate_offline(Cascade((0, 2), (0.0,)), data, scores)
+    # tau=0 accepts everything at tier 0
+    assert m["acc"] == pytest.approx(float(correct[:, 0].mean()))
+    assert m["avg_cost"] == pytest.approx(1.0)
+    assert m["stop_fracs"] == [1.0, 0.0]
+    tiers = replay_tiers(data, (0, 2))
+    assert tiers[0].name == "t0" and tiers[1].name == "t2"
+
+
+# ---------------------------------------------------------------------------
+# router guard rail
+# ---------------------------------------------------------------------------
+
+
+def test_grid_eval_rejects_long_lists():
+    rng = np.random.default_rng(2)
+    n, k = 64, 5
+    data = MarketData([f"t{i}" for i in range(k)],
+                      jnp.asarray(rng.uniform(size=(n, k)) < 0.7, jnp.float32),
+                      jnp.ones((n, k), jnp.float32), jnp.ones(n, jnp.int32),
+                      jnp.ones(n, jnp.int32), jnp.zeros(n))
+    scores = simulate_scores(data, seed=3)
+    grid = jnp.linspace(0.0, 1.0, 4)
+    with pytest.raises(ValueError, match="m=4"):
+        _grid_eval((0, 1, 2, 3), data, scores, grid)
+    with pytest.raises(ValueError, match="length 2 or 3"):
+        _grid_eval((0,), data, scores, grid)
+    # m in {2, 3} still works
+    acc, cost = _grid_eval((0, 1), data, scores, grid)
+    assert acc.shape == (4,)
+
+
+def test_learn_cascade_m4_fails_loudly():
+    rng = np.random.default_rng(4)
+    n, k = 128, 5
+    correct = (rng.uniform(size=(n, k)) <
+               np.linspace(0.5, 0.9, k)).astype(np.float32)
+    data = MarketData([f"t{i}" for i in range(k)], jnp.asarray(correct),
+                      jnp.ones((n, k), jnp.float32), jnp.ones(n, jnp.int32),
+                      jnp.ones(n, jnp.int32), jnp.zeros(n))
+    scores = simulate_scores(data, seed=5)
+    with pytest.raises(ValueError, match="cascade lists"):
+        learn_cascade(data, scores, 10.0,
+                      RouterConfig(m=4, top_lists=2, sample=64))
+
+
+# ---------------------------------------------------------------------------
+# the 3-strategy pipeline end-to-end on a 2-tier toy marketplace
+# ---------------------------------------------------------------------------
+
+
+def _toy_pipeline(with_cache=True, with_prompts=True):
+    """2-tier toy marketplace: row-leading token parity decides difficulty.
+
+    cheap tier answers 0, pricey answers 1; even-leading queries are
+    'easy' (scorer accepts at tier 0), odd-leading escalate.
+    """
+    cheap = TierSpec("cheap", lambda t: np.zeros(len(t), np.int32),
+                     ApiCost(10.0, 10.0, 0.0),
+                     prompt=PromptSpec((0,), 100, 40) if with_prompts
+                     else None)
+    pricey = TierSpec("pricey", lambda t: np.ones(len(t), np.int32),
+                      ApiCost(100.0, 100.0, 0.0),
+                      prompt=PromptSpec((0, 1), 100, 40) if with_prompts
+                      else None)
+
+    def scorer(t, ans):
+        return np.where(t[:, 0] % 2 == 0, 0.9, 0.1)
+
+    def embed(tokens):
+        # deterministic one-hot on the leading token: exact-repeat cache
+        e = np.zeros((len(tokens), 64), np.float32)
+        e[np.arange(len(tokens)), tokens[:, 0] % 64] = 1.0
+        return e
+
+    cache = CompletionCache(capacity=32, threshold=0.99) if with_cache else None
+    return ServingPipeline(
+        tiers=[cheap, pricey], thresholds=[0.5], scorer=scorer,
+        cache=cache, embed=embed if with_cache else None,
+        full_prompt_tokens=840, pad_token=-1, batch_size=8)
+
+
+def test_pipeline_end_to_end_routing_cost_and_telemetry():
+    pipe = _toy_pipeline()
+    n = 24
+    toks = np.arange(n * 4, dtype=np.int32).reshape(n, 4)
+    toks[:, 0] = np.arange(n)            # half even (easy) / half odd
+    easy = toks[:, 0] % 2 == 0
+    res = pipe.serve(toks)
+    assert isinstance(res, ServeResult)
+    # routing: easy stop at tier 0 with answer 0, hard escalate to tier 1
+    assert (res.answers[easy] == 0).all() and (res.answers[~easy] == 1).all()
+    assert (res.stopped_at[easy] == 0).all()
+    assert (res.stopped_at[~easy] == 1).all()
+    assert res.tier_counts == [n, n // 2]
+    assert res.tier_names == ["cheap", "pricey"]
+    # first pass: empty cache, all miss
+    assert res.cache_hits == 0 and res.cache_misses == n
+    assert res.cache_hit_rate == 0.0
+    # prompt-adapted cost accounting: query tokens=4, cheap prefix 140,
+    # pricey prefix 240, n_out=1
+    cheap_cost = (4 + 140 + 1) * 10.0 / 1e7
+    pricey_cost = (4 + 240 + 1) * 100.0 / 1e7
+    assert res.cost[easy].mean() == pytest.approx(cheap_cost)
+    assert res.cost[~easy].mean() == pytest.approx(cheap_cost + pricey_cost)
+    # baseline: every query to the pricey tier with the FULL prompt
+    assert res.baseline_cost == pytest.approx(n * (4 + 840 + 1) * 100.0 / 1e7)
+    assert 0.0 < res.savings_frac < 1.0
+    # prompt telemetry: tier0 saved 700/query on n, tier1 600 on n/2
+    assert res.prompt_tokens_saved == n * 700 + (n // 2) * 600
+    assert set(res.latency) == {"embed", "cache", "cascade", "insert",
+                                "total"}
+
+
+def test_pipeline_cache_absorbs_repeats():
+    pipe = _toy_pipeline()
+    toks = np.arange(16 * 4, dtype=np.int32).reshape(16, 4)
+    toks[:, 0] = np.arange(16)
+    first = pipe.serve(toks)
+    again = pipe.serve(toks)
+    # every repeat is a cache hit: zero cost, answers preserved, no tier
+    # traffic
+    assert again.cache_hits == 16 and again.cache_misses == 0
+    assert again.cache_hit_rate == 1.0
+    assert again.cost.sum() == 0.0
+    assert (again.answers == first.answers).all()
+    assert (again.stopped_at == -1).all()
+    assert again.tier_counts == [0, 0]
+    assert again.savings_frac == pytest.approx(1.0)
+
+
+def test_pipeline_without_cache_or_prompts():
+    pipe = _toy_pipeline(with_cache=False, with_prompts=False)
+    toks = np.arange(8 * 4, dtype=np.int32).reshape(8, 4)
+    toks[:, 0] = np.arange(8)
+    res = pipe.serve(toks)
+    assert res.cache_hits == 0 and res.cache_misses == 8
+    assert res.prompt_tokens_saved == 0
+    # unadapted: both tiers billed with the full 840-token prefix
+    assert res.cost[0] == pytest.approx((4 + 840 + 1) * 10.0 / 1e7)
+
+
+def test_pipeline_baseline_uses_marketplace_top_tier():
+    """Savings baseline must come from the marketplace top tier even when
+    the learned cascade (budget fallback) doesn't end there."""
+    cheap_only = ServingPipeline(
+        tiers=[TierSpec("cheap", lambda t: np.zeros(len(t), np.int32),
+                        ApiCost(10.0, 10.0, 0.0))],
+        thresholds=[], scorer=None, full_prompt_tokens=100, pad_token=-1,
+        baseline_price=ApiCost(1000.0, 1000.0, 0.0))
+    toks = np.zeros((5, 4), np.int32)
+    res = cheap_only.serve(toks)
+    assert res.baseline_cost == pytest.approx(5 * (4 + 100 + 1) * 1000 / 1e7)
+    assert res.savings_frac > 0.9        # vs ~0 against the cheap tier
+
+
+def test_run_online_accepts_ragged_queries():
+    from repro.core.cascade import run_online
+
+    queries = [[1, 2], [3, 4, 5], [6]]
+
+    def api(qs):
+        return [len(q) for q in qs], [0.1] * len(qs)
+
+    res = run_online(Cascade((0,), ()), queries, [api], scorer=None)
+    assert res["answers"] == [2, 3, 1]
+    assert res["stopped_at"].tolist() == [0, 0, 0]
+
+
+def test_pipeline_requires_embed_with_cache():
+    with pytest.raises(ValueError, match="embed"):
+        ServingPipeline(tiers=[], thresholds=[], scorer=None,
+                        cache=CompletionCache())

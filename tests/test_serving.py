@@ -1,12 +1,16 @@
-"""Serving engine: generation correctness + cascade server accounting."""
+"""Serving engine: generation correctness (incl. bucketed prefill
+exactness), engine pool sharing, cascade server accounting."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs.registry import ARCHS
+from repro.core.cost import ApiCost
 from repro.models import transformer as T
-from repro.serving.engine import CascadeServer, GenerationEngine, Tier
+from repro.serving.engine import (CascadeServer, EnginePool,
+                                  GenerationEngine, Tier, bucket_size,
+                                  generation_tier)
 
 
 def test_generation_engine_greedy_matches_manual():
@@ -22,6 +26,101 @@ def test_generation_engine_greedy_matches_manual():
                           max_len=20)
     nxt = jnp.argmax(lg[:, -1], -1)
     assert (np.asarray(nxt) == out[:, 0]).all()
+
+
+def test_bucket_size():
+    assert bucket_size(1, 8) == 8
+    assert bucket_size(8, 8) == 8
+    assert bucket_size(9, 8) == 16
+    assert bucket_size(100, 16) == 128
+
+
+def test_bucketed_prefill_exact_and_reuses_compilation():
+    """Odd batch/seq shapes pad into buckets, stay bit-exact vs the
+    manual unpadded chain, and shape changes inside a bucket don't
+    recompile."""
+    cfg = ARCHS["gemma3-1b"].reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = GenerationEngine(cfg, params)
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (3, 13), 0,
+                                         cfg.vocab))
+    out = eng.generate(toks, n_new=5)
+    assert out.shape == (3, 5)
+
+    lg, cache = T.prefill(params, {"tokens": jnp.asarray(toks)}, cfg,
+                          max_len=18)
+    nxt = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
+    ref = [np.asarray(nxt)]
+    for i in range(4):
+        logits, cache = T.decode_step(params, cache, nxt, jnp.int32(13 + i),
+                                      cfg)
+        nxt = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        ref.append(np.asarray(nxt))
+    assert (np.concatenate(ref, axis=1) == out).all()
+
+    assert eng.compile_stats["prefill_compiles"] == 1
+    # different (batch, seq) inside the same buckets: reuse, no recompile
+    eng.generate(toks[:2, :11], n_new=5)
+    eng.generate(toks[:1, :16], n_new=4)
+    assert eng.compile_stats["prefill_compiles"] == 1
+    assert eng.compile_stats["prefill_calls"] == 3
+
+
+def test_engine_pool_shares_engines_and_stats():
+    cfg = ARCHS["gemma3-1b"].reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    pool = EnginePool(max_new_tokens=4)
+    e1 = pool.get(cfg, params)
+    e2 = pool.get(cfg, params)
+    assert e1 is e2 and len(pool) == 1
+    # same arch, different trained weights -> must NOT share an engine
+    params_b = T.init_params(jax.random.PRNGKey(9), cfg)
+    e3 = pool.get(cfg, params_b)
+    assert e3 is not e1 and len(pool) == 2
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(3), (2, 12), 0,
+                                         cfg.vocab))
+    e1.generate(toks)
+    assert pool.compile_stats["prefill_calls"] == 1
+
+
+def test_generation_tier_answer_and_cost():
+    cfg = ARCHS["gemma3-1b"].reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = GenerationEngine(cfg, params)
+    tier = generation_tier("gen", eng, ApiCost(10.0, 20.0, 0.0),
+                           decode_answer=lambda g: g[:, 0] % 7, n_new=2)
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(4), (3, 12), 0,
+                                         cfg.vocab))
+    ans = tier.answer(toks)
+    assert ans.shape == (3,) and (ans < 7).all()
+    cost = tier.cost(toks)
+    assert cost == pytest.approx(np.full(3, (12 * 1.0 + 2 * 2.0) / 1e6))
+
+
+def test_pipeline_with_pooled_generation_tier():
+    """The unified pipeline driving a generation-backed tier from the
+    shared engine pool (cascade escalation path ends on a real model)."""
+    from repro.serving.pipeline import ServingPipeline, TierSpec
+
+    cfg = ARCHS["gemma3-1b"].reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    pool = EnginePool(max_new_tokens=2)
+    gen = generation_tier("gen-top", pool.get(cfg, params),
+                          ApiCost(100.0, 100.0, 0.0),
+                          decode_answer=lambda g: g[:, 0] % 3, n_new=2)
+    cheap = TierSpec("cheap", lambda t: np.zeros(len(t), np.int32),
+                     ApiCost(1.0, 1.0, 0.0))
+    top = TierSpec(gen.name, gen.answer, ApiCost(100.0, 100.0, 0.0), n_out=2)
+    pipe = ServingPipeline(
+        tiers=[cheap, top], thresholds=[0.5],
+        scorer=lambda t, a: np.where(np.arange(len(t)) % 2 == 0, 0.9, 0.1),
+        batch_size=4)
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(5), (6, 12), 0,
+                                         cfg.vocab))
+    res = pipe.serve(toks)
+    assert res.tier_counts[0] == 6 and res.tier_counts[1] > 0
+    assert (res.answers[res.stopped_at == 1] < 3).all()
+    assert pool.compile_stats["prefill_calls"] > 0
 
 
 def test_cascade_server_routing_and_cost():
