@@ -35,6 +35,7 @@ def main() -> None:
         ("table3_savings", bench_paper.bench_table3_savings),
         ("fig5_tradeoff", bench_paper.bench_fig5_tradeoff),
         ("serving_pipeline", bench_serving.bench_pipeline_throughput),
+        ("continuous_batching", bench_serving.bench_continuous_batching),
         ("bucketed_prefill", bench_serving.bench_bucketed_prefill),
     ]
     for name, fn in paper_benches:

@@ -10,6 +10,8 @@ request batches tier-by-tier with compaction. A second pass over a
 repetition-heavy stream shows the completion cache absorbing traffic.
 
 Run: PYTHONPATH=src python examples/cascade_serving.py [--requests 400]
+     PYTHONPATH=src python examples/cascade_serving.py --stream \\
+         [--rate 500]     # continuous batching over a Poisson trace
 """
 import argparse
 
@@ -23,6 +25,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=400)
     ap.add_argument("--train-queries", type=int, default=400)
+    ap.add_argument("--stream", action="store_true",
+                    help="also replay a Poisson arrival trace through "
+                         "the continuous batcher (async ingress)")
+    ap.add_argument("--rate", type=float, default=500.0,
+                    help="stream mode: mean arrival rate (requests/s)")
     args = ap.parse_args()
 
     # small 3-tier marketplace so the example runs in minutes on CPU
@@ -46,6 +53,17 @@ def main():
     print(res2.summary())
     print(f"accuracy {acc2:.3f}; avg cost ${res2.cost.mean():.6f} "
           f"({100 * res2.savings_frac:.0f}% cheaper than top-tier-only)")
+
+    if args.stream:
+        from repro.serving.ingress import poisson_arrivals
+
+        print("== continuous batching over a Poisson arrival trace ==")
+        arrivals = poisson_arrivals(args.requests, args.rate, seed=9)
+        res3 = pipe.serve_stream(test.tokens, arrivals, max_chunk=32)
+        acc3 = float((res3.answers == test.labels).mean())
+        print(res3.summary())
+        print(f"accuracy {acc3:.3f}; trace span {arrivals[-1]:.2f}s, "
+              f"drained in {res3.latency['total']:.2f}s")
 
 
 if __name__ == "__main__":

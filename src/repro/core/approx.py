@@ -24,8 +24,10 @@ _EMBED_JIT: dict = {}
 
 def _embed_fn(cfg: ModelConfig):
     """Per-config cached jitted embedder — the cache stage runs on every
-    served batch, so it must not re-jit (and retrace) per call."""
-    fn = _EMBED_JIT.get(cfg.name)
+    served batch, so it must not re-jit (and retrace) per call. Keyed by
+    the (frozen) config itself, not its name: configs sharing a name
+    with different hyperparameters must not reuse each other's graph."""
+    fn = _EMBED_JIT.get(cfg)
     if fn is None:
 
         @jax.jit
@@ -38,7 +40,7 @@ def _embed_fn(cfg: ModelConfig):
             h = apply_norm(params["final_norm"], x, cfg).mean(1)
             return h / (jnp.linalg.norm(h, axis=-1, keepdims=True) + 1e-6)
 
-        _EMBED_JIT[cfg.name] = fn
+        _EMBED_JIT[cfg] = fn
     return fn
 
 

@@ -5,7 +5,10 @@ There is exactly ONE cascade-execution implementation in this repo:
 tier j with every still-pending query, score the answers, accept the
 reliable ones, re-batch the rest to tier j+1 — and every answer, cost
 and scorer call is chunked to ``batch_size`` so no tier ever sees an
-unbounded batch.
+unbounded batch. The per-tier chunk step itself is ``tier_step``
+(invoke + score + accept on one chunk), which the continuous batcher
+(``repro.serving.ingress``) reuses so the online admission loop and the
+offline executor share one compaction implementation.
 
 The executor is parameterized by backend through ``CascadeTier``:
 
@@ -64,6 +67,28 @@ class CascadeTier:
     invoke: Callable
 
 
+def tier_step(tier: CascadeTier, chunk, j: int, *, scorer: Callable,
+              threshold: float | None, last: bool):
+    """One compaction step on ONE chunk: invoke tier j, score, accept.
+
+    This is the single per-tier chunk implementation shared by the
+    offline executor (``execute_cascade``) and the continuous batcher
+    (``repro.serving.ingress``) — both paths route every tier call
+    through here, so the accept rule can never drift between them.
+
+    Returns ``(answers (b,), costs (b,) float64, accept (b,) bool)``;
+    the last tier accepts everything (``threshold`` is ignored).
+    """
+    a, c = tier.invoke(chunk)
+    a = np.asarray(a)
+    c = np.asarray(c, np.float64)
+    if last:
+        accept = np.ones(len(chunk), bool)
+    else:
+        accept = np.asarray(scorer(chunk, a, j)) >= threshold
+    return a, c, accept
+
+
 def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
                     scorer: Callable, queries, *,
                     batch_size: int = 256) -> dict:
@@ -96,22 +121,19 @@ def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
             continue
         qs = queries[pending]
         b = len(pending)
-        ans_chunks, cost_chunks, score_chunks = [], [], []
+        ans_chunks, cost_chunks, accept_chunks = [], [], []
         last = j == m - 1
         for i in range(0, b, batch_size):
             chunk = qs[i:i + batch_size]
-            a, c = tier.invoke(chunk)
-            a = np.asarray(a)
+            a, c, acc = tier_step(tier, chunk, j, scorer=scorer,
+                                  threshold=None if last else thresholds[j],
+                                  last=last)
             ans_chunks.append(a)
-            cost_chunks.append(np.asarray(c, np.float64))
-            if not last:
-                score_chunks.append(np.asarray(scorer(chunk, a, j)))
+            cost_chunks.append(c)
+            accept_chunks.append(acc)
         ans = np.concatenate(ans_chunks)
         cost[pending] += np.concatenate(cost_chunks)
-        if last:
-            accept = np.ones(b, bool)
-        else:
-            accept = np.concatenate(score_chunks) >= thresholds[j]
+        accept = np.concatenate(accept_chunks)
         done = pending[accept]
         if ans.dtype == object or ans.ndim != 1:
             for i_local, i_global in zip(np.flatnonzero(accept), done):

@@ -3,6 +3,8 @@ adaptation + cascade) over a batched request stream.
 
 Demo (CPU):
   PYTHONPATH=src python -m repro.launch.serve --requests 200
+  PYTHONPATH=src python -m repro.launch.serve --requests 200 \\
+      --stream --rate 500        # continuous batching over a Poisson trace
 
 Thin CLI over ``repro.serving.build_pipeline`` — this is the entry point
 a real deployment would point at the production mesh (tiers sharded with
@@ -12,10 +14,10 @@ from __future__ import annotations
 
 import argparse
 
-
 from repro.core.router import RouterConfig
 from repro.data import synthetic
 from repro.serving import BuildConfig, build_pipeline
+from repro.serving.ingress import poisson_arrivals
 
 
 def main():
@@ -29,6 +31,13 @@ def main():
     ap.add_argument("--train-steps", type=int, default=150)
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--no-prompt-adaptation", action="store_true")
+    ap.add_argument("--stream", action="store_true",
+                    help="replay a Poisson arrival trace through the "
+                         "continuous batcher instead of one closed batch")
+    ap.add_argument("--rate", type=float, default=500.0,
+                    help="stream mode: mean arrival rate (requests/s)")
+    ap.add_argument("--max-chunk", type=int, default=32,
+                    help="stream mode: max requests per tier chunk")
     args = ap.parse_args()
 
     pipe, _ = build_pipeline(BuildConfig(
@@ -39,7 +48,14 @@ def main():
         router=RouterConfig(top_lists=10, sample=256)))
 
     test = synthetic.sample(args.task, args.requests, seed=77)
-    res = pipe.serve(test.tokens)
+    if args.stream:
+        arrivals = poisson_arrivals(args.requests, args.rate, seed=77)
+        print(f"== streaming {args.requests} requests over "
+              f"{arrivals[-1]:.2f}s (Poisson, {args.rate:.0f}/s) ==")
+        res = pipe.serve_stream(test.tokens, arrivals,
+                                max_chunk=args.max_chunk)
+    else:
+        res = pipe.serve(test.tokens)
     acc = float((res.answers == test.labels).mean())
     print(res.summary())
     print(f"accuracy {acc:.3f}; avg cost ${res.cost.mean():.6f}/query "

@@ -54,7 +54,7 @@ def classifier_score(params, tokens, cfg: ModelConfig):
     return jax.nn.sigmoid(logits[:, 0])
 
 
-_JITTED: dict[str, Callable] = {}
+_JITTED: dict[ModelConfig, Callable] = {}
 
 
 def jitted_logits(cfg: ModelConfig) -> Callable:
@@ -62,10 +62,12 @@ def jitted_logits(cfg: ModelConfig) -> Callable:
 
     Serving-hot-path callers must use this instead of wrapping a fresh
     ``jax.jit(partial(...))`` per call — a new wrapper object misses
-    jax's jit cache and retraces on every batch.
+    jax's jit cache and retraces on every batch. Keyed by the (frozen)
+    config itself, not its name: two configs may share a name with
+    different hyperparameters and must not reuse each other's graph.
     """
-    fn = _JITTED.get(cfg.name)
+    fn = _JITTED.get(cfg)
     if fn is None:
         fn = jax.jit(functools.partial(classifier_logits, cfg=cfg))
-        _JITTED[cfg.name] = fn
+        _JITTED[cfg] = fn
     return fn

@@ -17,10 +17,17 @@ Modules
               so compiled variants stay O(log range)), a shared
               ``EnginePool``, ``Tier``/``generation_tier`` adapters, and
               the ``CascadeServer`` facade.
-``pipeline``  ``ServingPipeline`` (the three-stage request path) and the
-              ``ServeResult`` telemetry record: per-tier compaction
-              counts, cache hit rate, per-stage latency, prompt tokens
-              saved, and cost vs. the top-tier baseline.
+``pipeline``  ``ServingPipeline`` (the three-stage request path; batch
+              ``serve`` plus continuous-batching ``serve_stream`` /
+              ``aserve``) and the ``ServeResult`` telemetry record:
+              per-tier compaction counts, cache hit rate, per-stage
+              latency, prompt tokens saved, cost vs. the top-tier
+              baseline, and (stream path) per-request latency.
+``ingress``   async ingress with continuous batching: ``IngressQueue``
+              (arrival-ordered admission, optional per-request asyncio
+              futures) and ``ContinuousBatcher`` (packs waiting requests
+              of a tier into its next chunk while earlier chunks decode,
+              through the shared ``core.cascade.tier_step``).
 ``builder``   ``build_pipeline(BuildConfig)`` — train tiers, collect
               offline data, train the scorer, select prompts, learn the
               cascade, assemble the pipeline. ``repro.launch.serve`` and
@@ -43,6 +50,12 @@ classifier, a ``generation_tier`` over a pooled ``GenerationEngine``, or
 a remote API client).
 """
 from repro.serving.builder import BuildConfig, build_pipeline  # noqa: F401
+from repro.serving.ingress import (  # noqa: F401
+    ContinuousBatcher,
+    IngressQueue,
+    RequestState,
+    poisson_arrivals,
+)
 from repro.serving.engine import (  # noqa: F401
     CascadeServer,
     EnginePool,

@@ -19,9 +19,11 @@ Exactness of the bucketing (all verified by tests/test_serving.py):
     stacks whose ring cache never truncates the padded prompt; engines
     fall back to exact prompt shapes for SSM/hybrid stacks or when the
     sliding window is smaller than the padded prompt.
-With ``temperature > 0`` sampled tokens are seed-reproducible per bucket
-shape (the noise tensor follows the padded shape), greedy decoding is
-bit-exact regardless of bucketing.
+With ``temperature > 0`` every generated token — including the
+post-prefill one, sampled from the prefill logits — goes through the
+keyed categorical path and is seed-reproducible per bucket shape (the
+noise tensor follows the padded shape); greedy decoding is bit-exact
+regardless of bucketing.
 
 ``CascadeServer`` is the serving facade over the repo's single cascade
 executor (``repro.core.cascade.execute_cascade``); the full three-strategy
@@ -106,8 +108,11 @@ class GenerationEngine:
     def generate(self, tokens: np.ndarray, n_new: int | None = None,
                  seed: int = 0) -> np.ndarray:
         """tokens (B, S) -> generated (B, n_new)."""
-        n_new = n_new or self.max_new_tokens
+        if n_new is None:                  # NOT `or`: an explicit 0 is 0
+            n_new = self.max_new_tokens
         b, s = tokens.shape
+        if n_new <= 0:
+            return np.zeros((b, 0), np.int32)
         b_b = bucket_size(b, self.batch_floor)
         s_b = bucket_size(s, self.seq_floor)
         if not self._seq_paddable(s_b):
@@ -122,9 +127,17 @@ class GenerationEngine:
         fn = self._prefill_fn((b_b, s_b, max_len))
         logits, cache = fn(self.params, jnp.asarray(toks),
                            jnp.int32(s - 1))
-        nxt = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-        out = [np.asarray(nxt)]
         rkey = jax.random.PRNGKey(seed)
+        last_logits = logits[:, -1]
+        if self.temperature > 0:
+            # the post-prefill token goes through the same keyed
+            # categorical path as every later token — not argmax
+            rkey, sub = jax.random.split(rkey)
+            nxt = jax.random.categorical(sub, last_logits / self.temperature)
+        else:
+            nxt = jnp.argmax(last_logits, -1)
+        nxt = nxt[:, None].astype(jnp.int32)
+        out = [np.asarray(nxt)]
         for i in range(n_new - 1):
             rkey, sub = jax.random.split(rkey)
             nxt, cache = self._decode(self.params, cache, nxt,

@@ -17,6 +17,15 @@ A token batch flows through three stages:
 Fresh answers are inserted back into the cache, and every request batch
 returns a ``ServeResult`` telemetry record: per-tier counts, cache hit
 rate, per-stage latency, and cost against the always-top-tier baseline.
+
+Two request paths share these stages:
+
+  * ``serve``        — batch-at-a-time: one closed token batch through
+    all three stages;
+  * ``serve_stream`` / ``aserve`` — continuous batching over an arrival
+    trace (``repro.serving.ingress``): cache lookup runs per-admission,
+    tier chunks are packed from whatever is waiting, and per-request
+    latency telemetry lands in ``ServeResult.ingress``.
 """
 from __future__ import annotations
 
@@ -24,12 +33,44 @@ import dataclasses
 import time
 from typing import Callable, Sequence
 
+import jax
 import numpy as np
 
 from repro.core.approx import CompletionCache
 from repro.core.cascade import CascadeTier, execute_cascade
 from repro.core.cost import ApiCost
 from repro.core.prompt import PromptSpec
+
+
+def _merge_answers(n: int, parts: Sequence[tuple]) -> np.ndarray:
+    """Scatter ``(indices, values)`` parts into one (n,) answers array,
+    preserving the values' dtype: int cache hits merged with int cascade
+    answers densify to an integer array, string/object generation answers
+    stay as they came from the executor instead of being forced through
+    ``np.int32`` (which crashed on strings and silently truncated
+    floats)."""
+    if n == 0:
+        return np.zeros(0, np.int32)
+    out = np.empty(n, dtype=object)
+    for idx, vals in parts:
+        idx = np.asarray(idx).ravel()
+        vals = np.asarray(vals)
+        if vals.dtype == object or vals.ndim != 1:
+            for i_local, i_global in enumerate(idx):
+                out[i_global] = vals[i_local]
+        else:
+            out[idx] = vals
+    try:                                     # densify when answers are scalar
+        # unbox numpy scalars first so both fill branches above densify
+        # to the same dtype (fancy assignment into an object array boxes
+        # to Python scalars; per-element assignment keeps np scalars)
+        dense = np.array([x.item() if isinstance(x, np.generic) else x
+                          for x in out])
+        if dense.ndim == 1 and dense.dtype != object:
+            return dense
+    except ValueError:                       # heterogeneous answer objects
+        pass
+    return out
 
 
 @dataclasses.dataclass
@@ -62,6 +103,9 @@ class ServeResult:
     prompt_tokens_saved: int     # adapted vs full prompt, summed over calls
     baseline_cost: float         # top tier + full prompt for every query
     latency: dict                # per-stage seconds
+    # continuous-batching telemetry (ingress path only): per-request
+    # latency/queue-wait arrays, chunks per tier, chunk occupancy
+    ingress: dict | None = None
 
     @property
     def n(self) -> int:
@@ -83,13 +127,20 @@ class ServeResult:
                         self.latency.items())
         tiers = ", ".join(f"{nm}: {c}" for nm, c in
                           zip(self.tier_names, self.tier_counts))
+        extra = ""
+        if self.ingress is not None and len(self.ingress["request_latency"]):
+            rl = self.ingress["request_latency"]
+            extra = (f" | per-request p50 {np.percentile(rl, 50) * 1e3:.0f}ms"
+                     f" p95 {np.percentile(rl, 95) * 1e3:.0f}ms over "
+                     f"{self.ingress['n_chunks']} chunks (occupancy "
+                     f"{self.ingress['chunk_occupancy']:.2f})")
         return (
             f"served {self.n} queries | cache hit rate "
             f"{self.cache_hit_rate:.2f} ({self.cache_hits} hits) | "
             f"tier compaction [{tiers}] | prompt tokens saved "
             f"{self.prompt_tokens_saved} | cost ${self.cost.sum():.6f} vs "
             f"${self.baseline_cost:.6f} top-tier baseline "
-            f"({100 * self.savings_frac:.0f}% saved) | {lat}")
+            f"({100 * self.savings_frac:.0f}% saved) | {lat}{extra}")
 
 
 @dataclasses.dataclass
@@ -115,6 +166,13 @@ class ServingPipeline:
             raise ValueError("a completion cache needs an embed function "
                              "(reuse the scorer encoder, see builder)")
 
+    @staticmethod
+    def _block(x):
+        """Force pending async JAX work at a stage boundary — jax
+        dispatch is asynchronous, so without a sync the *next* stage's
+        timer pays for this stage's compute. No-op on numpy."""
+        return jax.block_until_ready(x)
+
     # -- stage 2: exact per-tier cost with the adapted prompt --------------
     def _query_tokens(self, tokens: np.ndarray) -> np.ndarray:
         return np.asarray((tokens != self.pad_token).sum(-1), np.int64)
@@ -138,10 +196,43 @@ class ServingPipeline:
             n_q + self.full_prompt_tokens,
             np.full_like(n_q, n_out))).sum())
 
+    # -- pieces shared with the continuous batcher (serving.ingress) -------
+    def _cascade_tiers(self) -> list[CascadeTier]:
+        """The live tiers as cascade stages: one invoke = answer + the
+        exact adapted-prompt cost for the same chunk."""
+        return [CascadeTier(
+                    s.name,
+                    lambda q, s=s: (s.answer(q), self._tier_cost(s, q)))
+                for s in self.tiers]
+
+    def _pos_scorer(self, q, a, _j):
+        return self.scorer(q, a)
+
+    def _prompt_saved(self, tier_counts: Sequence[int]) -> int:
+        saved = 0
+        for spec, c in zip(self.tiers, tier_counts):
+            if spec.prompt is not None:
+                saved += c * (self.full_prompt_tokens - spec.prompt.n_tokens)
+        return int(saved)
+
+    def _cache_insert(self, emb_rows: np.ndarray, answers) -> bool:
+        """Insert fresh answers — the cache is int-keyed, so non-integer
+        (string/object generation) answers are skipped rather than
+        crashed on or silently truncated."""
+        a = np.asarray(answers)
+        if a.dtype == object:
+            try:
+                a = np.array(a.tolist())
+            except ValueError:
+                return False
+        if a.ndim != 1 or not np.issubdtype(a.dtype, np.integer):
+            return False
+        self.cache.insert(emb_rows, a)
+        return True
+
     def serve(self, tokens: np.ndarray) -> ServeResult:
-        t0 = time.time()
+        t0 = time.perf_counter()
         n = tokens.shape[0]
-        answers = np.zeros(n, np.int32)
         cost = np.zeros(n, np.float64)
         stopped_at = np.full(n, -1, np.int32)
         latency: dict = {}
@@ -149,52 +240,78 @@ class ServingPipeline:
         # stage 1: completion cache
         hits = 0
         emb = None
+        hit_idx = np.zeros(0, np.int64)
+        hit_ans = np.zeros(0, np.int32)
         miss = np.arange(n)
         if self.cache is not None:
-            t = time.time()
-            emb = self.embed(tokens)
-            latency["embed"] = time.time() - t
-            t = time.time()
+            t = time.perf_counter()
+            emb = np.asarray(self._block(self.embed(tokens)))
+            latency["embed"] = time.perf_counter() - t
+            t = time.perf_counter()
             hit_mask, cached = self.cache.lookup(emb)
-            answers[hit_mask] = cached[hit_mask]
-            hits = int(hit_mask.sum())
+            hit_idx = np.flatnonzero(hit_mask)
+            hit_ans = cached[hit_idx]
+            hits = len(hit_idx)
             miss = np.flatnonzero(~hit_mask)
-            latency["cache"] = time.time() - t
+            latency["cache"] = time.perf_counter() - t
 
         # stages 2+3: adapted prompts + cascade over the misses
-        t = time.time()
+        t = time.perf_counter()
         tier_counts = [0] * len(self.tiers)
-        prompt_saved = 0
+        res_ans = np.zeros(0, np.int32)
         if len(miss):
-            ct = [CascadeTier(
-                      s.name,
-                      lambda q, s=s: (s.answer(q), self._tier_cost(s, q)))
-                  for s in self.tiers]
-            res = execute_cascade(ct, self.thresholds,
-                                  lambda q, a, _j: self.scorer(q, a),
-                                  tokens[miss], batch_size=self.batch_size)
-            answers[miss] = np.asarray(res["answers"]).astype(np.int32)
+            res = execute_cascade(self._cascade_tiers(), self.thresholds,
+                                  self._pos_scorer, tokens[miss],
+                                  batch_size=self.batch_size)
+            res_ans = np.asarray(res["answers"])
             cost[miss] = res["cost"]
             stopped_at[miss] = res["stopped_at"]
             tier_counts = res["tier_counts"]
-            for spec, c in zip(self.tiers, tier_counts):
-                if spec.prompt is not None:
-                    prompt_saved += c * (self.full_prompt_tokens
-                                         - spec.prompt.n_tokens)
-        latency["cascade"] = time.time() - t
+        latency["cascade"] = time.perf_counter() - t
+        answers = _merge_answers(n, [(hit_idx, hit_ans), (miss, res_ans)])
 
-        # write fresh answers back into the cache
+        # write fresh answers back into the cache (int-keyed; skip others)
         if self.cache is not None and len(miss):
-            t = time.time()
-            self.cache.insert(emb[miss], answers[miss])
-            latency["insert"] = time.time() - t
+            t = time.perf_counter()
+            self._cache_insert(emb[miss], res_ans)
+            latency["insert"] = time.perf_counter() - t
 
-        latency["total"] = time.time() - t0
+        latency["total"] = time.perf_counter() - t0
         return ServeResult(
             answers=answers, cost=cost, stopped_at=stopped_at,
             tier_counts=list(tier_counts),
             tier_names=[s.name for s in self.tiers],
             cache_hits=hits, cache_misses=len(miss),
-            prompt_tokens_saved=int(prompt_saved),
+            prompt_tokens_saved=self._prompt_saved(tier_counts),
             baseline_cost=self._baseline_cost(tokens),
             latency=latency)
+
+    # -- continuous-batching entry points (see repro.serving.ingress) ------
+    def serve_stream(self, tokens: np.ndarray, arrivals=None, *,
+                     max_chunk: int | None = None,
+                     holdback: float = 0.02) -> ServeResult:
+        """Replay an arrival trace through the continuous batcher:
+        row i of ``tokens`` becomes visible at offset ``arrivals[i]``
+        seconds (all at t=0 when None). Cache lookup and prompt
+        accounting run per-admission; answers come back in submission
+        order. For a fixed request set under greedy decoding this is
+        bit-identical to ``serve`` (tests/test_ingress.py)."""
+        from repro.serving.ingress import ContinuousBatcher
+        return ContinuousBatcher(self, max_chunk=max_chunk,
+                                 holdback=holdback).run_trace(
+            tokens, arrivals)
+
+    async def aserve(self, tokens: np.ndarray, arrivals=None, *,
+                     max_chunk: int | None = None,
+                     holdback: float = 0.02) -> ServeResult:
+        """Async flavour of ``serve_stream`` — cooperates with other
+        coroutines while idle. For live producer/consumer streams build
+        an ``IngressQueue`` and drive ``ContinuousBatcher.serve_async``
+        directly (per-request futures resolve as answers land)."""
+        from repro.serving.ingress import ContinuousBatcher, IngressQueue
+        batcher = ContinuousBatcher(self, max_chunk=max_chunk,
+                                    holdback=holdback)
+        queue = IngressQueue()
+        queue.submit_burst(tokens, arrivals)
+        queue.close()
+        return await batcher.serve_async(queue)

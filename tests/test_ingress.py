@@ -1,0 +1,319 @@
+"""Continuous-batching ingress: equivalence with the batch path
+(bit-identical answers/costs under greedy decoding), the shared
+``tier_step`` compaction step, admission-during-decode, per-request
+futures, and stream telemetry."""
+import asyncio
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.approx import CompletionCache
+from repro.core.cascade import CascadeTier, execute_cascade, tier_step
+from repro.core.cost import ApiCost
+from repro.core.prompt import PromptSpec
+from repro.serving.ingress import (ContinuousBatcher, IngressQueue,
+                                   RequestState)
+from repro.serving.pipeline import ServingPipeline, TierSpec
+
+
+def _toy_pipeline(with_cache=True, batch_size=8, tier_sleep=0.0):
+    """2-tier toy marketplace with row-wise tiers/scorer/embeds: even
+    leading token accepts at tier 0, odd escalates (mirrors
+    tests/test_pipeline.py so serve-vs-stream comparisons line up)."""
+
+    def mk_answer(v):
+        def answer(t):
+            if tier_sleep:
+                time.sleep(tier_sleep)
+            return np.full(len(t), v, np.int32)
+        return answer
+
+    cheap = TierSpec("cheap", mk_answer(0), ApiCost(10.0, 10.0, 0.0),
+                     prompt=PromptSpec((0,), 100, 40))
+    pricey = TierSpec("pricey", mk_answer(1), ApiCost(100.0, 100.0, 0.0),
+                      prompt=PromptSpec((0, 1), 100, 40))
+
+    def scorer(t, ans):
+        return np.where(t[:, 0] % 2 == 0, 0.9, 0.1)
+
+    def embed(tokens):
+        e = np.zeros((len(tokens), 64), np.float32)
+        e[np.arange(len(tokens)), tokens[:, 0] % 64] = 1.0
+        return e
+
+    cache = CompletionCache(capacity=64, threshold=0.99) if with_cache \
+        else None
+    return ServingPipeline(
+        tiers=[cheap, pricey], thresholds=[0.5], scorer=scorer,
+        cache=cache, embed=embed if with_cache else None,
+        full_prompt_tokens=840, pad_token=-1, batch_size=batch_size)
+
+
+def _tokens(n):
+    toks = np.arange(n * 4, dtype=np.int32).reshape(n, 4)
+    toks[:, 0] = np.arange(n)          # distinct, half even / half odd
+    return toks
+
+
+def _assert_equivalent(a, b):
+    """Bit-identical ServeResults (the tentpole guarantee)."""
+    assert np.array_equal(a.answers, b.answers)
+    assert a.answers.dtype == b.answers.dtype
+    assert (a.cost == b.cost).all()            # bit-identical float64
+    assert np.array_equal(a.stopped_at, b.stopped_at)
+    assert a.tier_counts == b.tier_counts
+    assert (a.cache_hits, a.cache_misses) == (b.cache_hits, b.cache_misses)
+    assert a.prompt_tokens_saved == b.prompt_tokens_saved
+    assert a.baseline_cost == b.baseline_cost
+
+
+# ---------------------------------------------------------------------------
+# the shared per-tier chunk step
+# ---------------------------------------------------------------------------
+
+
+def test_tier_step_matches_executor():
+    """Chunk-by-chunk tier_step reproduces execute_cascade exactly —
+    one compaction implementation, two drivers."""
+    n, bs = 20, 8
+    tier = CascadeTier("t", lambda q: (q % 3, np.full(len(q), 2.0)))
+
+    def scorer(q, a, j):
+        return (q % 2 == 0).astype(float)
+
+    queries = np.arange(n)
+    res = execute_cascade([tier, tier], [0.5], scorer, queries,
+                          batch_size=bs)
+    ans, cost, acc = [], [], []
+    for i in range(0, n, bs):
+        a, c, m = tier_step(tier, queries[i:i + bs], 0, scorer=scorer,
+                            threshold=0.5, last=False)
+        ans.append(a), cost.append(c), acc.append(m)
+    acc = np.concatenate(acc)
+    assert (np.concatenate(ans)[acc]
+            == np.asarray(res["answers"])[res["stopped_at"] == 0]).all()
+    assert acc.sum() == res["accepted_counts"][0]
+    # last tier accepts everything regardless of threshold
+    _, _, m = tier_step(tier, queries[:4], 1, scorer=scorer,
+                        threshold=None, last=True)
+    assert m.all()
+
+
+# ---------------------------------------------------------------------------
+# equivalence with ServingPipeline.serve
+# ---------------------------------------------------------------------------
+
+
+def test_stream_equivalent_to_serve_no_cache():
+    toks = _tokens(24)
+    a = _toy_pipeline(with_cache=False).serve(toks)
+    b = _toy_pipeline(with_cache=False).serve_stream(toks)
+    _assert_equivalent(a, b)
+
+
+def test_stream_equivalent_to_serve_with_cache():
+    toks = _tokens(24)
+    pipe_a, pipe_b = _toy_pipeline(), _toy_pipeline()
+    _assert_equivalent(pipe_a.serve(toks), pipe_b.serve_stream(toks))
+    # the stream populated the cache exactly like serve: a second pass
+    # through EITHER path is all hits
+    again = pipe_b.serve_stream(toks)
+    assert again.cache_hits == 24 and again.cost.sum() == 0.0
+    assert (again.stopped_at == -1).all()
+
+
+def test_stream_equivalent_under_staggered_arrivals():
+    """Arrival pattern must not change what is answered or billed."""
+    toks = _tokens(30)
+    a = _toy_pipeline().serve(toks)
+    b = _toy_pipeline().serve_stream(
+        toks, np.linspace(0.0, 0.05, 30), max_chunk=4)
+    _assert_equivalent(a, b)
+
+
+def test_aserve_equivalent_to_serve():
+    toks = _tokens(16)
+    a = _toy_pipeline().serve(toks)
+    b = asyncio.run(_toy_pipeline().aserve(toks))
+    _assert_equivalent(a, b)
+    assert b.ingress is not None
+    assert len(b.ingress["request_latency"]) == 16
+
+
+def test_stream_preserves_answer_dtype():
+    """Generation-style string answers survive the stream path too."""
+    tier = TierSpec("gen", lambda t: np.array([f"a{x}" for x in t[:, 0]]),
+                    ApiCost(1.0, 1.0, 0.0))
+    mk = lambda: ServingPipeline(tiers=[tier], thresholds=[], scorer=None,
+                                 full_prompt_tokens=10, pad_token=-1)
+    toks = _tokens(6)
+    a, b = mk().serve(toks), mk().serve_stream(toks)
+    assert a.answers.tolist() == [f"a{i}" for i in range(6)]
+    assert np.array_equal(a.answers, b.answers)
+    assert a.answers.dtype == b.answers.dtype
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching semantics
+# ---------------------------------------------------------------------------
+
+
+def test_ingress_queue_ordering_and_close():
+    async def go():
+        q = IngressQueue()
+        toks = _tokens(3)
+        q.submit(toks[0], arrival=0.5)
+        q.submit(toks[1], arrival=0.0)
+        q.submit(toks[2], arrival=0.0)
+        assert len(q) == 3 and q.next_arrival() == 0.0
+        due = q.due(0.1)
+        assert [r.rid for r in due] == [1, 2]      # ties pop in rid order
+        assert q.due(0.4) == []
+        assert [r.rid for r in q.due(1.0)] == [0]
+        q.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            q.submit(toks[0])
+    asyncio.run(go())
+
+
+def test_late_duplicate_hits_cache_populated_mid_stream():
+    """The one deliberate divergence from serve: a duplicate arriving
+    after its twin completed is answered from the cache."""
+    pipe = _toy_pipeline()
+    batcher = ContinuousBatcher(pipe, max_chunk=8)
+    toks = _tokens(8)
+    queue = IngressQueue()
+    queue.submit_burst(toks)
+    # drain wave 1 manually (deterministic: no wall-clock involved)
+    batcher.admit(queue.due(0.0), 0.0)
+    while batcher.has_work():
+        batcher.step(batcher._pick_tier(0.0, drain=True), lambda: 0.0)
+    assert batcher.cache_hits == 0
+    # wave 2: same queries again -> all cache hits, no new tier traffic
+    counts_before = list(batcher.tier_counts)
+    batcher.admit([RequestState(rid=8 + i, tokens=t)
+                   for i, t in enumerate(toks)], 1.0)
+    assert batcher.cache_hits == 8
+    assert batcher.tier_counts == counts_before
+    res = batcher.result(1.0)
+    assert (res.answers[:8] == res.answers[8:]).all()
+
+
+def test_admission_during_decode_packs_later_arrivals():
+    """Requests that arrive while an earlier chunk is decoding join the
+    tier's next chunk instead of waiting for a closed batch."""
+    pipe = _toy_pipeline(with_cache=False, tier_sleep=0.03)
+    toks = _tokens(8)
+    # 4 requests at t=0, 4 more arriving while chunk 1 sleeps (30ms)
+    arrivals = np.array([0.0] * 4 + [0.005] * 4)
+    res = ContinuousBatcher(pipe, max_chunk=8, holdback=0.0).run_trace(
+        toks, arrivals)
+    assert res.ingress["chunks_per_tier"][0] == 2      # 4-row, then 4-row
+    assert res.n == 8 and (res.stopped_at >= 0).all()
+    a = _toy_pipeline(with_cache=False).serve(toks)
+    assert np.array_equal(a.answers, res.answers)
+    assert (a.cost == res.cost).all()
+
+
+def test_holdback_fills_partial_chunks():
+    """With a holdback window, trickling arrivals coalesce into fuller
+    chunks instead of dispatching one chunk per arrival."""
+    pipe = _toy_pipeline(with_cache=False)
+    toks = _tokens(8)
+    arrivals = np.linspace(0.0, 0.02, 8)     # 8 single-request arrivals
+    res = ContinuousBatcher(pipe, max_chunk=8, holdback=10.0).run_trace(
+        toks, arrivals)
+    # everything coalesced: one chunk per tier, full occupancy at tier 0
+    assert res.ingress["chunks_per_tier"] == [1, 1]
+    a = _toy_pipeline(with_cache=False).serve(toks)
+    assert np.array_equal(a.answers, res.answers)
+
+
+def test_aserve_futures_resolve_per_request():
+    """Live producer/consumer: per-request futures resolve as answers
+    land, before the stream as a whole is done."""
+
+    async def go():
+        pipe = _toy_pipeline(with_cache=False)
+        toks = _tokens(8)
+        queue = IngressQueue()
+        batcher = ContinuousBatcher(pipe, max_chunk=4, holdback=0.0)
+        task = asyncio.ensure_future(batcher.serve_async(queue))
+        first = queue.submit_burst(toks[:4], with_future=True)
+        r0 = await asyncio.wait_for(first[0].future, timeout=5.0)
+        assert r0.answer == 0 and r0.stopped_at == 0
+        # stream still open: submit a second wave, then close to drain
+        second = queue.submit_burst(toks[4:], with_future=True)
+        queue.close()
+        res = await asyncio.wait_for(task, timeout=5.0)
+        assert all(r.future.done() for r in first + second)
+        assert res.n == 8
+        return res
+
+    res = asyncio.run(go())
+    assert (res.answers[:: 2] == 0).all() and (res.answers[1:: 2] == 1).all()
+
+
+def test_stream_telemetry_and_result_guard():
+    pipe = _toy_pipeline(with_cache=False)
+    toks = _tokens(12)
+    batcher = ContinuousBatcher(pipe, max_chunk=4)
+    res = batcher.run_trace(toks, np.linspace(0.0, 0.01, 12))
+    ing = res.ingress
+    assert len(ing["request_latency"]) == 12
+    assert (ing["request_latency"] >= 0).all()
+    assert (ing["queue_wait"] >= 0).all()
+    assert 0 < ing["chunk_occupancy"] <= 1.0
+    assert ing["n_chunks"] == sum(ing["chunks_per_tier"])
+    assert set(res.latency) == {"embed", "cache", "cascade", "insert",
+                                "total"}
+    # result() refuses to fold a stream with requests still in flight
+    b2 = ContinuousBatcher(pipe, max_chunk=4)
+    b2.admit([RequestState(rid=0, tokens=toks[0])], 0.0)
+    with pytest.raises(RuntimeError, match="in flight"):
+        b2.result(0.0)
+
+
+def test_batcher_rejects_bad_max_chunk():
+    with pytest.raises(ValueError, match="max_chunk"):
+        ContinuousBatcher(_toy_pipeline(with_cache=False), max_chunk=0)
+
+
+def test_submit_burst_rejects_mismatched_arrivals():
+    q = IngressQueue()
+    with pytest.raises(ValueError, match="arrival times"):
+        q.submit_burst(_tokens(4), np.zeros(3))
+
+
+def test_submit_rejects_mixed_token_widths():
+    """One stream = one token width (chunks are stacked); a clear error
+    beats a ValueError from np.stack deep inside the batcher."""
+    q = IngressQueue()
+    q.submit(np.arange(5))
+    with pytest.raises(ValueError, match="width"):
+        q.submit(np.arange(7))
+
+
+def test_stream_pads_embed_and_tier_shapes_to_pow2():
+    """Arbitrary burst/chunk sizes must reach jitted embed/scorer/tier
+    callables padded to power-of-two row counts (otherwise every
+    distinct stream size costs an XLA recompile mid-stream)."""
+    pipe = _toy_pipeline()
+    seen = {"embed": set(), "tier": set()}
+    inner_embed, inner_answer = pipe.embed, pipe.tiers[0].answer
+    pipe.embed = lambda t: (seen["embed"].add(len(t)),
+                            inner_embed(t))[1]
+    pipe.tiers[0].answer = lambda t: (seen["tier"].add(len(t)),
+                                      inner_answer(t))[1]
+    toks = _tokens(23)                 # odd sizes at every level
+    # admissions of 1..4 rows, chunks of whatever accumulated
+    res = ContinuousBatcher(pipe, max_chunk=8, holdback=0.0).run_trace(
+        toks, np.linspace(0.0, 0.01, 23))
+    assert res.n == 23
+    pow2 = {1, 2, 4, 8, 16, 32}
+    assert seen["embed"] <= pow2 and seen["tier"] <= pow2
+    # and the padding stayed invisible: same results as serve
+    a = _toy_pipeline().serve(toks)
+    assert np.array_equal(a.answers, res.answers)
+    assert (a.cost == res.cost).all()

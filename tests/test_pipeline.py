@@ -55,6 +55,37 @@ def test_cache_hit_miss_accounting():
     assert cache.hit_rate == pytest.approx(0.5)
 
 
+def test_cache_insert_batch_larger_than_capacity():
+    """A single insert bigger than the ring must keep the NEWEST entries
+    (wraparound self-overwrite) and leave ``_next`` pointing at the
+    oldest surviving slot."""
+    cache = CompletionCache(capacity=4, threshold=0.99)
+    emb = np.eye(9, 12, dtype=np.float32)
+    cache.insert(emb, np.arange(9, dtype=np.int32))
+    assert cache._next == 1                     # (0 + 9) % 4
+    hit, ans = cache.lookup(emb)
+    # only the newest capacity-many entries (5..8) survive
+    assert hit.tolist() == [False] * 5 + [True] * 4
+    assert ans[5:].tolist() == [5, 6, 7, 8]
+    # the next insert overwrites the oldest survivor (entry 5), not a
+    # newer one
+    cache.insert(_unit(np.ones((1, 12))), np.array([99], np.int32))
+    hit, _ = cache.lookup(emb)
+    assert hit.tolist() == [False] * 6 + [True] * 3
+
+
+def test_cache_lookup_miss_counting_before_any_insert():
+    cache = CompletionCache(capacity=4, threshold=0.9)
+    emb = np.eye(5, 8, dtype=np.float32)
+    hit, ans = cache.lookup(emb)
+    assert not hit.any()
+    assert (ans == 0).all() and ans.dtype == np.int32
+    assert cache.misses == 5 and cache.hits == 0
+    assert cache.hit_rate == 0.0
+    cache.lookup(emb[:2])                       # still empty: keep counting
+    assert cache.misses == 7 and cache.hits == 0
+
+
 def test_cache_near_duplicate_threshold():
     cache = CompletionCache(capacity=8, threshold=0.9)
     base = _unit(np.ones((1, 16)))
@@ -248,6 +279,87 @@ def test_pipeline_without_cache_or_prompts():
     assert res.prompt_tokens_saved == 0
     # unadapted: both tiers billed with the full 840-token prefix
     assert res.cost[0] == pytest.approx((4 + 840 + 1) * 10.0 / 1e7)
+
+
+def test_pipeline_preserves_string_answers():
+    """Regression: the pipeline forced answers through np.int32, which
+    crashed on generation tiers returning strings; the executor's
+    answer dtype must survive end-to-end."""
+    tier = TierSpec("gen", lambda t: np.array([f"ans{x}" for x in t[:, 0]]),
+                    ApiCost(1.0, 1.0, 0.0))
+    pipe = ServingPipeline(tiers=[tier], thresholds=[], scorer=None,
+                           full_prompt_tokens=10, pad_token=-1)
+    toks = np.arange(4 * 4, dtype=np.int32).reshape(4, 4)
+    toks[:, 0] = np.arange(4)
+    res = pipe.serve(toks)
+    assert res.answers.tolist() == ["ans0", "ans1", "ans2", "ans3"]
+    assert res.answers.dtype.kind == "U"
+    assert (res.cost > 0).all()
+
+
+def test_pipeline_string_answers_skip_int_keyed_cache():
+    """Non-integer answers must not be silently truncated into the
+    int-keyed cache: insertion is skipped, lookups keep missing."""
+
+    def embed(tokens):
+        e = np.zeros((len(tokens), 16), np.float32)
+        e[np.arange(len(tokens)), tokens[:, 0] % 16] = 1.0
+        return e
+
+    tier = TierSpec("gen", lambda t: np.array([f"s{x}" for x in t[:, 0]]),
+                    ApiCost(1.0, 1.0, 0.0))
+    cache = CompletionCache(capacity=8, threshold=0.99)
+    pipe = ServingPipeline(tiers=[tier], thresholds=[], scorer=None,
+                           cache=cache, embed=embed,
+                           full_prompt_tokens=10, pad_token=-1)
+    toks = np.arange(3 * 4, dtype=np.int32).reshape(3, 4)
+    toks[:, 0] = np.arange(3)
+    res = pipe.serve(toks)
+    assert res.answers.tolist() == ["s0", "s1", "s2"]
+    assert cache._emb is None                   # nothing was inserted
+    again = pipe.serve(toks)                    # repeats still miss
+    assert again.cache_hits == 0
+    assert again.answers.tolist() == ["s0", "s1", "s2"]
+
+
+def test_pipeline_mixed_cache_hits_and_int_answers_densify():
+    """Int cache hits merged with int cascade answers stay one dense
+    integer array (no object fallout from the dtype-preserving merge)."""
+    pipe = _toy_pipeline()
+    toks = np.arange(8 * 4, dtype=np.int32).reshape(8, 4)
+    toks[:, 0] = np.arange(8)
+    pipe.serve(toks[:4])                        # warm: first 4 cached
+    res = pipe.serve(toks)                      # 4 hits + 4 fresh
+    assert res.cache_hits == 4 and res.cache_misses == 4
+    assert np.issubdtype(res.answers.dtype, np.integer)
+    easy = toks[:, 0] % 2 == 0
+    assert (res.answers[easy] == 0).all() and (res.answers[~easy] == 1).all()
+
+
+def test_pipeline_stage_latency_syncs_jax_embed():
+    """The embed stage timer must charge async jax dispatch to the embed
+    stage (block_until_ready at the boundary), not to a later stage."""
+    import jax.numpy as jnp_
+
+    def lazy_embed(tokens):
+        e = np.zeros((len(tokens), 16), np.float32)
+        e[np.arange(len(tokens)), tokens[:, 0] % 16] = 1.0
+        return jnp_.asarray(e) * 1.0            # a real device array
+
+    cheap = TierSpec("cheap", lambda t: np.zeros(len(t), np.int32),
+                     ApiCost(10.0, 10.0, 0.0))
+    pipe = ServingPipeline(tiers=[cheap], thresholds=[], scorer=None,
+                           cache=CompletionCache(capacity=8, threshold=0.99),
+                           embed=lazy_embed, full_prompt_tokens=10,
+                           pad_token=-1)
+    toks = np.arange(4 * 4, dtype=np.int32).reshape(4, 4)
+    toks[:, 0] = np.arange(4)
+    res = pipe.serve(toks)
+    assert set(res.latency) == {"embed", "cache", "cascade", "insert",
+                                "total"}
+    assert res.cache_misses == 4
+    again = pipe.serve(toks)
+    assert again.cache_hits == 4                # jax embeddings round-trip
 
 
 def test_pipeline_baseline_uses_marketplace_top_tier():

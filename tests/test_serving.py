@@ -66,6 +66,47 @@ def test_bucketed_prefill_exact_and_reuses_compilation():
     assert eng.compile_stats["prefill_calls"] == 3
 
 
+def test_generate_n_new_zero_and_none():
+    """Regression: ``n_new or max_new_tokens`` turned an explicit 0 into
+    a full max_new_tokens generation; 0 must mean 0."""
+    cfg = ARCHS["gemma3-1b"].reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = GenerationEngine(cfg, params, max_new_tokens=4)
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(6), (3, 12), 0,
+                                         cfg.vocab))
+    out = eng.generate(toks, n_new=0)
+    assert out.shape == (3, 0) and out.dtype == np.int32
+    assert eng.compile_stats["prefill_calls"] == 0     # no model work
+    assert eng.generate(toks).shape == (3, 4)          # None -> default
+    assert eng.generate(toks, n_new=2).shape == (3, 2)
+
+
+def test_sampled_first_token_uses_keyed_categorical():
+    """Regression: with temperature > 0 the post-prefill token was
+    always argmax; it must be sampled from the prefill logits with the
+    same keyed path as later tokens (seed-reproducible)."""
+    cfg = ARCHS["gemma3-1b"].reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = GenerationEngine(cfg, params, temperature=1.0)
+    b, s, seed = 2, 16, 7
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(8), (b, s), 0,
+                                         cfg.vocab))
+    out = eng.generate(toks, n_new=2, seed=seed)
+    # manual reference on the engine's padded bucket shapes (batch 8,
+    # seq 16, cache 32): prefill logits -> keyed categorical
+    toks_p = np.concatenate([toks, np.repeat(toks[-1:], 8 - b, 0)])
+    lg, _ = T.prefill(params, {"tokens": jnp.asarray(toks_p)}, cfg,
+                      max_len=32, last_index=jnp.int32(s - 1))
+    _, sub = jax.random.split(jax.random.PRNGKey(seed))
+    first = np.asarray(jax.random.categorical(sub, lg[:, -1]))[:b]
+    assert (out[:, 0] == first).all()
+    # same seed reproduces; greedy engines are untouched by the fix
+    assert (eng.generate(toks, n_new=2, seed=seed) == out).all()
+    greedy = GenerationEngine(cfg, params)
+    ref = np.asarray(jnp.argmax(lg[:, -1], -1))[:b]
+    assert (greedy.generate(toks, n_new=1)[:, 0] == ref).all()
+
+
 def test_engine_pool_shares_engines_and_stats():
     cfg = ARCHS["gemma3-1b"].reduced()
     params = T.init_params(jax.random.PRNGKey(0), cfg)
