@@ -36,6 +36,8 @@ def main() -> None:
         ("fig5_tradeoff", bench_paper.bench_fig5_tradeoff),
         ("serving_pipeline", bench_serving.bench_pipeline_throughput),
         ("continuous_batching", bench_serving.bench_continuous_batching),
+        ("parallel_tiers", bench_serving.bench_parallel_tiers),
+        ("overload_shedding", bench_serving.bench_overload_shedding),
         ("bucketed_prefill", bench_serving.bench_bucketed_prefill),
     ]
     for name, fn in paper_benches:

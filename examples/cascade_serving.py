@@ -58,6 +58,8 @@ def main():
         from repro.serving.ingress import poisson_arrivals
 
         print("== continuous batching over a Poisson arrival trace ==")
+        print("   (parallel tier scheduler: tiers decode concurrently; "
+              "see examples/slo_streaming.py for deadlines/overload)")
         arrivals = poisson_arrivals(args.requests, args.rate, seed=9)
         res3 = pipe.serve_stream(test.tokens, arrivals, max_chunk=32)
         acc3 = float((res3.answers == test.labels).mean())

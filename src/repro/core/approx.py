@@ -55,16 +55,38 @@ def embed_queries(params, tokens, cfg: ModelConfig, batch: int = 512):
 
 @dataclasses.dataclass
 class CompletionCache:
+    """Fixed-capacity (embedding, answer) store with pluggable eviction.
+
+    ``policy="fifo"`` keeps the original ring buffer (oldest *insert*
+    evicted first); ``policy="lru"`` evicts the least-recently-*used*
+    entry — a lookup hit refreshes its entry, so hot queries survive a
+    skewed stream that would cycle them out of the ring.
+
+    ``min_score`` is a score-confidence floor: ``insert`` drops entries
+    whose accept-time reliability score falls below it, so answers the
+    scorer distrusted are never served to future near-duplicates. NaN
+    scores (the cascade's last tier answers without scoring) are
+    treated as trusted.
+    """
+
     capacity: int = 4096
     threshold: float = 0.97
+    policy: str = "fifo"            # "fifo" ring | "lru"
+    min_score: float | None = None  # score-confidence floor for inserts
 
     def __post_init__(self):
+        if self.policy not in ("fifo", "lru"):
+            raise ValueError(f"unknown eviction policy {self.policy!r}; "
+                             "expected 'fifo' or 'lru'")
         self._emb = None            # (cap, d)
         self._ans = None            # (cap,)
         self._valid = None
-        self._next = 0
+        self._next = 0              # fifo ring head
+        self._used = None           # (cap,) last-use tick (lru)
+        self._tick = 0
         self.hits = 0
         self.misses = 0
+        self.skipped_low_score = 0  # inserts dropped by the floor
 
     def lookup(self, emb: np.ndarray):
         """emb (n, d) -> (hit_mask (n,), answers (n,))."""
@@ -77,21 +99,51 @@ class CompletionCache:
         best = sims.argmax(1)
         best_sim = sims[np.arange(n), best]
         hit = best_sim >= self.threshold
+        if self.policy == "lru" and hit.any():
+            slots = best[hit]                # refresh hit entries; a slot
+            self._used[slots] = self._tick + np.arange(len(slots))
+            self._tick += len(slots)         # hit twice keeps the later tick
         self.hits += int(hit.sum())
         self.misses += int((~hit).sum())
         return hit, self._ans[best].astype(np.int32)
 
-    def insert(self, emb: np.ndarray, answers: np.ndarray):
-        n, d = emb.shape
+    def insert(self, emb: np.ndarray, answers: np.ndarray, scores=None):
+        """Insert entries; ``scores`` (optional, (n,)) are accept-time
+        reliability scores checked against the ``min_score`` floor."""
+        emb = np.asarray(emb)
+        answers = np.asarray(answers)
+        if self.min_score is not None and scores is not None:
+            s = np.asarray(scores, np.float64)
+            keep = np.isnan(s) | (s >= self.min_score)
+            self.skipped_low_score += int((~keep).sum())
+            if not keep.all():
+                emb, answers = emb[keep], answers[keep]
+        n = len(emb)
+        if n == 0:
+            return
         if self._emb is None:
+            d = emb.shape[1]
             self._emb = np.zeros((self.capacity, d), emb.dtype)
             self._ans = np.zeros(self.capacity, np.int32)
             self._valid = np.zeros(self.capacity, bool)
-        idx = (self._next + np.arange(n)) % self.capacity
+            self._used = np.zeros(self.capacity, np.int64)
+        if self.policy == "fifo":
+            # ring semantics: a batch larger than the ring self-overwrites
+            # so the NEWEST entries survive and _next keeps advancing
+            idx = (self._next + np.arange(n)) % self.capacity
+            self._next = int((self._next + n) % self.capacity)
+        else:
+            if n > self.capacity:            # keep the newest, like the ring
+                emb, answers = emb[-self.capacity:], answers[-self.capacity:]
+                n = self.capacity
+            # victims: empty slots first, then least-recently-used
+            prio = np.where(self._valid, self._used, -1)
+            idx = np.argsort(prio, kind="stable")[:n]
         self._emb[idx] = emb
         self._ans[idx] = answers
         self._valid[idx] = True
-        self._next = int((self._next + n) % self.capacity)
+        self._used[idx] = self._tick + np.arange(n)
+        self._tick += n
 
     @property
     def hit_rate(self):

@@ -68,25 +68,44 @@ class CascadeTier:
 
 
 def tier_step(tier: CascadeTier, chunk, j: int, *, scorer: Callable,
-              threshold: float | None, last: bool):
+              threshold: float | None, last: bool, scorer_lock=None):
     """One compaction step on ONE chunk: invoke tier j, score, accept.
 
     This is the single per-tier chunk implementation shared by the
-    offline executor (``execute_cascade``) and the continuous batcher
-    (``repro.serving.ingress``) — both paths route every tier call
+    offline executor (``execute_cascade``), the continuous batcher
+    (``repro.serving.ingress``) and the parallel tier scheduler
+    (``repro.serving.sched``) — every path routes every tier call
     through here, so the accept rule can never drift between them.
 
-    Returns ``(answers (b,), costs (b,) float64, accept (b,) bool)``;
-    the last tier accepts everything (``threshold`` is ignored).
+    Returns ``(answers (b,), costs (b,) float64, scores (b,) float64,
+    accept (b,) bool)``; ``scores`` are the accept-time reliability
+    scores, NaN where the scorer was never consulted — the last tier
+    accepts everything without scoring (``threshold`` is ignored).
+
+    Concurrency contract (relied on by ``repro.serving.sched``):
+    ``tier_step`` itself keeps no state, so it is safe to run on
+    multiple threads provided the *caller* guarantees (a) each tier's
+    ``invoke`` is entered by at most one thread at a time — the parallel
+    scheduler gives every tier its own worker, so a tier backend
+    (e.g. a ``GenerationEngine``) never sees concurrent calls — and
+    (b) a ``scorer`` shared across tiers is either thread-safe or
+    serialized by passing a ``scorer_lock`` (any context manager).
     """
     a, c = tier.invoke(chunk)
     a = np.asarray(a)
     c = np.asarray(c, np.float64)
     if last:
+        s = np.full(len(chunk), np.nan)
         accept = np.ones(len(chunk), bool)
     else:
-        accept = np.asarray(scorer(chunk, a, j)) >= threshold
-    return a, c, accept
+        if scorer_lock is not None:
+            with scorer_lock:
+                raw = scorer(chunk, a, j)
+        else:
+            raw = scorer(chunk, a, j)
+        s = np.asarray(raw, np.float64)
+        accept = s >= threshold
+    return a, c, s, accept
 
 
 def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
@@ -100,7 +119,9 @@ def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
 
     All tier and scorer calls are chunked to ``batch_size``. Returns
     dict(answers, cost, stopped_at (cascade position, -1 = unanswered),
-    tier_counts (pending per tier), accepted_counts).
+    scores (accept-time reliability score, NaN where the scorer was
+    never consulted — cache-confidence consumers use this), tier_counts
+    (pending per tier), accepted_counts).
     """
     queries = np.asarray(queries)
     n = queries.shape[0]
@@ -111,6 +132,7 @@ def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
     answers = np.empty(n, dtype=object)
     cost = np.zeros(n, np.float64)
     stopped_at = np.full(n, -1, np.int32)
+    scores = np.full(n, np.nan)
     pending = np.arange(n)
     tier_counts: list[int] = []
     accepted_counts: list[int] = []
@@ -121,20 +143,22 @@ def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
             continue
         qs = queries[pending]
         b = len(pending)
-        ans_chunks, cost_chunks, accept_chunks = [], [], []
+        ans_chunks, cost_chunks, score_chunks, accept_chunks = [], [], [], []
         last = j == m - 1
         for i in range(0, b, batch_size):
             chunk = qs[i:i + batch_size]
-            a, c, acc = tier_step(tier, chunk, j, scorer=scorer,
-                                  threshold=None if last else thresholds[j],
-                                  last=last)
+            a, c, s, acc = tier_step(
+                tier, chunk, j, scorer=scorer,
+                threshold=None if last else thresholds[j], last=last)
             ans_chunks.append(a)
             cost_chunks.append(c)
+            score_chunks.append(s)
             accept_chunks.append(acc)
         ans = np.concatenate(ans_chunks)
         cost[pending] += np.concatenate(cost_chunks)
         accept = np.concatenate(accept_chunks)
         done = pending[accept]
+        scores[done] = np.concatenate(score_chunks)[accept]
         if ans.dtype == object or ans.ndim != 1:
             for i_local, i_global in zip(np.flatnonzero(accept), done):
                 answers[i_global] = ans[i_local]
@@ -152,6 +176,7 @@ def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
         "answers": answers_arr,
         "cost": cost,
         "stopped_at": stopped_at,
+        "scores": scores,
         "tier_counts": tier_counts,
         "accepted_counts": accepted_counts,
     }

@@ -4,7 +4,9 @@ adaptation + cascade) over a batched request stream.
 Demo (CPU):
   PYTHONPATH=src python -m repro.launch.serve --requests 200
   PYTHONPATH=src python -m repro.launch.serve --requests 200 \\
-      --stream --rate 500        # continuous batching over a Poisson trace
+      --stream --rate 500        # parallel tier scheduler, Poisson trace
+  PYTHONPATH=src python -m repro.launch.serve --requests 200 --stream \\
+      --deadline-ms 100 --queue-cap 64 --overload degrade   # SLO mode
 
 Thin CLI over ``repro.serving.build_pipeline`` — this is the entry point
 a real deployment would point at the production mesh (tiers sharded with
@@ -33,12 +35,37 @@ def main():
     ap.add_argument("--no-prompt-adaptation", action="store_true")
     ap.add_argument("--stream", action="store_true",
                     help="replay a Poisson arrival trace through the "
-                         "continuous batcher instead of one closed batch")
+                         "streaming path instead of one closed batch")
     ap.add_argument("--rate", type=float, default=500.0,
                     help="stream mode: mean arrival rate (requests/s)")
     ap.add_argument("--max-chunk", type=int, default=32,
                     help="stream mode: max requests per tier chunk")
+    ap.add_argument("--serial", action="store_true",
+                    help="stream mode: serial continuous batcher instead "
+                         "of the parallel SLO-aware tier scheduler")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="stream mode: per-request latency SLO; partial "
+                         "chunks ship when the head-of-line request "
+                         "would miss it")
+    ap.add_argument("--holdback-ms", type=float, default=20.0,
+                    help="stream mode: max wait for chunk fill")
+    ap.add_argument("--queue-cap", type=int, default=None,
+                    help="stream mode: bounded per-tier wait queue "
+                         "(enables backpressure/shedding)")
+    ap.add_argument("--overload", default="reject",
+                    choices=["reject", "degrade"],
+                    help="stream mode: policy once the queue cap is hit — "
+                         "shed arrivals, or answer them from the cheapest "
+                         "tier unconditionally")
     args = ap.parse_args()
+    if args.serial and (args.deadline_ms is not None
+                        or args.queue_cap is not None
+                        or args.overload != "reject"):
+        ap.error("--deadline-ms/--queue-cap/--overload need the "
+                 "parallel scheduler; drop --serial")
+    if args.overload != "reject" and args.queue_cap is None:
+        ap.error("--overload degrade only acts on a bounded queue; "
+                 "set --queue-cap")
 
     pipe, _ = build_pipeline(BuildConfig(
         task=args.task, tiers=tuple(args.tiers.split(",")),
@@ -50,15 +77,35 @@ def main():
     test = synthetic.sample(args.task, args.requests, seed=77)
     if args.stream:
         arrivals = poisson_arrivals(args.requests, args.rate, seed=77)
+        mode = ("serial continuous batcher" if args.serial
+                else "parallel SLO scheduler")
         print(f"== streaming {args.requests} requests over "
-              f"{arrivals[-1]:.2f}s (Poisson, {args.rate:.0f}/s) ==")
-        res = pipe.serve_stream(test.tokens, arrivals,
-                                max_chunk=args.max_chunk)
+              f"{arrivals[-1]:.2f}s (Poisson, {args.rate:.0f}/s; "
+              f"{mode}) ==")
+        if args.serial:
+            res = pipe.serve_stream(test.tokens, arrivals,
+                                    max_chunk=args.max_chunk,
+                                    holdback=args.holdback_ms / 1e3,
+                                    parallel=False)
+        else:
+            from repro.serving.sched import SLOConfig
+            slo = SLOConfig(
+                deadline_s=(None if args.deadline_ms is None
+                            else args.deadline_ms / 1e3),
+                max_holdback_s=args.holdback_ms / 1e3,
+                queue_cap=args.queue_cap, overload=args.overload)
+            res = pipe.serve_stream(test.tokens, arrivals,
+                                    max_chunk=args.max_chunk, slo=slo)
     else:
         res = pipe.serve(test.tokens)
-    acc = float((res.answers == test.labels).mean())
+    served = res.stopped_at != -2
+    n_served = int(served.sum())
+    acc = (float((res.answers[served] == test.labels[served]).mean())
+           if n_served else float("nan"))
+    avg_cost = float(res.cost[served].mean()) if n_served else 0.0
     print(res.summary())
-    print(f"accuracy {acc:.3f}; avg cost ${res.cost.mean():.6f}/query "
+    print(f"accuracy {acc:.3f} over {n_served} served; "
+          f"avg cost ${avg_cost:.6f}/served query "
           f"({100 * res.savings_frac:.0f}% below top-tier-only)")
 
 

@@ -28,6 +28,12 @@ Modules
               futures) and ``ContinuousBatcher`` (packs waiting requests
               of a tier into its next chunk while earlier chunks decode,
               through the shared ``core.cascade.tier_step``).
+``sched``     SLO-aware parallel tier scheduling: ``TierScheduler`` (one
+              worker thread per tier — chunks decode concurrently),
+              ``SLOConfig`` (deadlines, adaptive holdback, bounded
+              queues, reject/degrade overload policies) and per-tier
+              EWMA service-time estimators. The default executor behind
+              ``serve_stream``/``aserve``.
 ``builder``   ``build_pipeline(BuildConfig)`` — train tiers, collect
               offline data, train the scorer, select prompts, learn the
               cascade, assemble the pipeline. ``repro.launch.serve`` and
@@ -55,6 +61,10 @@ from repro.serving.ingress import (  # noqa: F401
     IngressQueue,
     RequestState,
     poisson_arrivals,
+)
+from repro.serving.sched import (  # noqa: F401
+    SLOConfig,
+    TierScheduler,
 )
 from repro.serving.engine import (  # noqa: F401
     CascadeServer,

@@ -36,6 +36,14 @@ same padded-bucket compute as full ones, so occupancy IS throughput.
 Within a tier, requests are served FIFO. Chunks reuse the bucketed
 ``GenerationEngine`` shapes, so mixed-size chunks stay O(log) compiles.
 
+``ContinuousBatcher`` dispatches one chunk at a time on ONE thread: it
+is the serial reference implementation (and benchmark baseline) for the
+SLO-aware parallel scheduler in ``repro.serving.sched``, which runs the
+same admission stages and the same ``tier_step`` with one worker per
+tier, deadline-driven holdback, and bounded-queue backpressure.
+``serve_stream``/``aserve`` default to the parallel scheduler;
+``parallel=False`` selects this batcher.
+
 Equivalence guarantee (tested in tests/test_ingress.py): for a fixed
 request set under greedy decoding — row-wise tier ``answer``/``scorer``
 callables, which all repo tiers are — the continuous path returns
@@ -64,8 +72,93 @@ from repro.core.cascade import tier_step
 def poisson_arrivals(n: int, rate: float, seed: int = 0) -> np.ndarray:
     """n arrival offsets (seconds) of a Poisson process at ``rate``/s —
     the shared trace generator for the stream CLI, example and bench."""
+    if n < 0:
+        raise ValueError(f"n must be >= 0, got {n}")
+    if rate <= 0:
+        raise ValueError(f"rate must be > 0 requests/s, got {rate}")
     rng = np.random.default_rng(seed)
     return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def pad_pow2_rows(toks: np.ndarray) -> tuple[np.ndarray, int]:
+    """Pad a burst/chunk to the next power-of-two row count by
+    replicating the last row. Streams produce arbitrary batch sizes;
+    jitted embed/scorer callables would otherwise recompile per
+    distinct size, charging multi-second XLA compiles to per-request
+    latency mid-stream. Row-wise callables make the padding exact —
+    the filler rows are sliced off every output. Returns
+    ``(padded, original_row_count)``."""
+    b = len(toks)
+    b_pad = 1
+    while b_pad < b:
+        b_pad *= 2
+    if b_pad == b:
+        return toks, b
+    return np.concatenate([toks, np.repeat(toks[-1:], b_pad - b, 0)]), b
+
+
+def stage1_lookup(pipeline, reqs, cache_lock=None):
+    """The admission stage both stream backends share: stack the burst's
+    token rows, embed them (pow2-padded), and probe the completion
+    cache. Returns ``(hit_mask, cached_answers, emb, embed_s, cache_s)``
+    — ``emb`` is None when the pipeline has no cache. ``cache_lock``
+    serializes the lookup against concurrent inserts (the parallel
+    scheduler's workers); the embed call itself needs no lock (only the
+    admission thread runs it)."""
+    toks = np.stack([r.tokens for r in reqs])
+    hit_mask = np.zeros(len(reqs), bool)
+    cached = emb = None
+    embed_s = cache_s = 0.0
+    if pipeline.cache is not None:
+        padded, b = pad_pow2_rows(toks)
+        t0 = time.perf_counter()
+        emb = np.asarray(pipeline._block(pipeline.embed(padded)))[:b]
+        embed_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        if cache_lock is not None:
+            with cache_lock:
+                hit_mask, cached = pipeline.cache.lookup(emb)
+        else:
+            hit_mask, cached = pipeline.cache.lookup(emb)
+        cache_s = time.perf_counter() - t0
+    return hit_mask, cached, emb, embed_s, cache_s
+
+
+def fold_stream_result(pipeline, requests: Sequence[RequestState], *,
+                       tier_counts: Sequence[int], cache_hits: int,
+                       cache_misses: int, latency: dict, total_s: float,
+                       ingress: dict):
+    """Fold a finished stream into a ``ServeResult`` bit-compatible with
+    ``ServingPipeline.serve`` (answers/cost/stopped_at indexed by
+    submission order) — shared by the serial ``ContinuousBatcher`` and
+    the parallel ``repro.serving.sched.TierScheduler``. Requests shed by
+    an overload policy appear with ``answer None`` / ``stopped_at -2`` /
+    zero cost."""
+    from repro.serving.pipeline import ServeResult, _merge_answers
+
+    reqs = sorted(requests, key=lambda r: r.rid)
+    undone = [r for r in reqs if not r.done]
+    if undone:
+        raise RuntimeError(f"{len(undone)} requests still in flight")
+    n = len(reqs)
+    cost = np.asarray([r.cost for r in reqs], np.float64)
+    stopped = np.asarray([r.stopped_at for r in reqs], np.int32)
+    vals = np.empty(n, dtype=object)          # keeps array answers intact
+    for i, r in enumerate(reqs):
+        vals[i] = r.answer
+    answers = _merge_answers(n, [(np.arange(n), vals)])
+    toks = (np.stack([r.tokens for r in reqs]) if n
+            else np.zeros((0, 1), np.int32))
+    lat = dict(latency)
+    lat["total"] = total_s
+    return ServeResult(
+        answers=answers, cost=cost, stopped_at=stopped,
+        tier_counts=list(tier_counts),
+        tier_names=[s.name for s in pipeline.tiers],
+        cache_hits=cache_hits, cache_misses=cache_misses,
+        prompt_tokens_saved=pipeline._prompt_saved(tier_counts),
+        baseline_cost=pipeline._baseline_cost(toks) if n else 0.0,
+        latency=lat, ingress=ingress)
 
 
 @dataclasses.dataclass
@@ -79,6 +172,10 @@ class RequestState:
     answer: object = None
     cost: float = 0.0
     stopped_at: int = -1            # cascade position; -1 = cache hit
+    score: float = float("nan")     # accept-time reliability score
+    deadline: float | None = None   # absolute SLO deadline (stream clock)
+    shed: bool = False              # dropped by the overload policy
+    degraded: bool = False          # pinned to the cheapest tier (overload)
     t_admitted: float | None = None
     t_done: float | None = None
     t_enqueued: float = 0.0         # entered the current tier's wait queue
@@ -118,7 +215,11 @@ class IngressQueue:
         self.closed = False
 
     def submit(self, tokens, arrival: float = 0.0, *,
-               with_future: bool = False) -> RequestState:
+               with_future: bool = False,
+               deadline: float | None = None) -> RequestState:
+        """``deadline`` is an absolute SLO deadline on the stream clock
+        (seconds); the scheduler's ``SLOConfig.deadline_s`` supplies a
+        per-request default when None."""
         if self.closed:
             raise RuntimeError("queue is closed")
         tokens = np.asarray(tokens)
@@ -132,7 +233,7 @@ class IngressQueue:
                 f"token width {tokens.shape[-1]} != stream width "
                 f"{self._width}; right-pad queries to a common width")
         r = RequestState(rid=self._n, tokens=tokens,
-                         arrival=float(arrival))
+                         arrival=float(arrival), deadline=deadline)
         if with_future:
             r.future = asyncio.get_running_loop().create_future()
         heapq.heappush(self._heap, (r.arrival, r.rid, r))
@@ -204,21 +305,7 @@ class ContinuousBatcher:
         self.latency = {"embed": 0.0, "cache": 0.0, "cascade": 0.0,
                         "insert": 0.0}
 
-    @staticmethod
-    def _pad_rows(toks: np.ndarray) -> tuple[np.ndarray, int]:
-        """Pad a burst/chunk to the next power-of-two row count by
-        replicating the last row. Streams produce arbitrary batch sizes;
-        jitted embed/scorer callables would otherwise recompile per
-        distinct size, charging multi-second XLA compiles to per-request
-        latency mid-stream. Row-wise callables make the padding exact —
-        the filler rows are sliced off every output."""
-        b = len(toks)
-        b_pad = 1
-        while b_pad < b:
-            b_pad *= 2
-        if b_pad == b:
-            return toks, b
-        return np.concatenate([toks, np.repeat(toks[-1:], b_pad - b, 0)]), b
+    _pad_rows = staticmethod(pad_pow2_rows)   # compat alias
 
     # -- admission: per-burst cache lookup ---------------------------------
     def admit(self, reqs: Sequence[RequestState], now: float):
@@ -226,18 +313,10 @@ class ContinuousBatcher:
         finish immediately, misses enter tier 0's wait queue."""
         if not reqs:
             return
-        pipe = self.pipeline
-        toks = np.stack([r.tokens for r in reqs])
-        hit_mask = np.zeros(len(reqs), bool)
-        cached = emb = None
-        if pipe.cache is not None:
-            padded, b = self._pad_rows(toks)
-            t0 = time.perf_counter()
-            emb = np.asarray(pipe._block(pipe.embed(padded)))[:b]
-            self.latency["embed"] += time.perf_counter() - t0
-            t0 = time.perf_counter()
-            hit_mask, cached = pipe.cache.lookup(emb)
-            self.latency["cache"] += time.perf_counter() - t0
+        hit_mask, cached, emb, embed_s, cache_s = stage1_lookup(
+            self.pipeline, reqs)
+        self.latency["embed"] += embed_s
+        self.latency["cache"] += cache_s
         self.cache_hits += int(hit_mask.sum())
         self.cache_misses += int((~hit_mask).sum())
         for i, r in enumerate(reqs):
@@ -298,14 +377,14 @@ class ContinuousBatcher:
         finished by this chunk."""
         q = self._waiting[j]
         batch = [q.popleft() for _ in range(min(self.max_chunk, len(q)))]
-        toks, b = self._pad_rows(np.stack([r.tokens for r in batch]))
+        toks, b = pad_pow2_rows(np.stack([r.tokens for r in batch]))
         pipe = self.pipeline
         last = j == len(self._tiers) - 1
         t0 = time.perf_counter()
-        ans, cost, accept = tier_step(
+        ans, cost, scores, accept = tier_step(
             self._tiers[j], toks, j, scorer=pipe._pos_scorer,
             threshold=None if last else pipe.thresholds[j], last=last)
-        ans, cost, accept = ans[:b], cost[:b], accept[:b]
+        ans, cost, scores, accept = ans[:b], cost[:b], scores[:b], accept[:b]
         self.latency["cascade"] += time.perf_counter() - t0
         self.chunks_per_tier[j] += 1
         self._fill.append(len(batch) / self.max_chunk)
@@ -316,6 +395,7 @@ class ContinuousBatcher:
             r.cost += float(cost[i])
             if accept[i]:
                 r.answer = ans[i]
+                r.score = float(scores[i])
                 r.stopped_at = j
                 self._finish(r, now)
                 finished.append(r)
@@ -324,7 +404,8 @@ class ContinuousBatcher:
         if pipe.cache is not None and finished:
             t0 = time.perf_counter()
             pipe._cache_insert(np.stack([r.emb for r in finished]),
-                               np.asarray([r.answer for r in finished]))
+                               np.asarray([r.answer for r in finished]),
+                               np.asarray([r.score for r in finished]))
             for r in finished:              # the embedding served its
                 r.emb = None                # purpose; don't retain it
             self.latency["insert"] += time.perf_counter() - t0
@@ -417,29 +498,7 @@ class ContinuousBatcher:
         """Fold the finished stream into a ``ServeResult`` bit-compatible
         with ``ServingPipeline.serve`` (answers/cost/stopped_at indexed
         by submission order)."""
-        from repro.serving.pipeline import ServeResult, _merge_answers
-
-        pipe = self.pipeline
-        reqs = sorted(self._requests, key=lambda r: r.rid)
-        undone = [r for r in reqs if not r.done]
-        if undone:
-            raise RuntimeError(f"{len(undone)} requests still in flight")
-        n = len(reqs)
-        cost = np.asarray([r.cost for r in reqs], np.float64)
-        stopped = np.asarray([r.stopped_at for r in reqs], np.int32)
-        vals = np.empty(n, dtype=object)      # keeps array answers intact
-        for i, r in enumerate(reqs):
-            vals[i] = r.answer
-        answers = _merge_answers(n, [(np.arange(n), vals)])
-        toks = (np.stack([r.tokens for r in reqs]) if n
-                else np.zeros((0, 1), np.int32))
-        lat = dict(self.latency)
-        lat["total"] = total_s
-        return ServeResult(
-            answers=answers, cost=cost, stopped_at=stopped,
-            tier_counts=list(self.tier_counts),
-            tier_names=[s.name for s in pipe.tiers],
+        return fold_stream_result(
+            self.pipeline, self._requests, tier_counts=self.tier_counts,
             cache_hits=self.cache_hits, cache_misses=self.cache_misses,
-            prompt_tokens_saved=pipe._prompt_saved(self.tier_counts),
-            baseline_cost=pipe._baseline_cost(toks) if n else 0.0,
-            latency=lat, ingress=self.stats())
+            latency=self.latency, total_s=total_s, ingress=self.stats())

@@ -103,8 +103,10 @@ class ServeResult:
     prompt_tokens_saved: int     # adapted vs full prompt, summed over calls
     baseline_cost: float         # top tier + full prompt for every query
     latency: dict                # per-stage seconds
-    # continuous-batching telemetry (ingress path only): per-request
-    # latency/queue-wait arrays, chunks per tier, chunk occupancy
+    # streaming telemetry (stream paths only): per-request latency and
+    # queue-wait arrays, chunks per tier, chunk occupancy; the parallel
+    # scheduler adds per-tier utilization/EWMA estimates, deadline-hit
+    # rate, shed/degraded counts and queue peaks
     ingress: dict | None = None
 
     @property
@@ -134,6 +136,16 @@ class ServeResult:
                      f" p95 {np.percentile(rl, 95) * 1e3:.0f}ms over "
                      f"{self.ingress['n_chunks']} chunks (occupancy "
                      f"{self.ingress['chunk_occupancy']:.2f})")
+        if self.ingress is not None and "tier_utilization" in self.ingress:
+            util = ", ".join(f"{u:.2f}" for u in
+                             self.ingress["tier_utilization"])
+            extra += f" | tier util [{util}]"
+            dhr = self.ingress.get("deadline_hit_rate")
+            if dhr is not None:
+                extra += f" | deadline hit rate {dhr:.2f}"
+            if self.ingress.get("shed") or self.ingress.get("degraded"):
+                extra += (f" | overload: {self.ingress['shed']} shed, "
+                          f"{self.ingress['degraded']} degraded")
         return (
             f"served {self.n} queries | cache hit rate "
             f"{self.cache_hit_rate:.2f} ({self.cache_hits} hits) | "
@@ -215,10 +227,12 @@ class ServingPipeline:
                 saved += c * (self.full_prompt_tokens - spec.prompt.n_tokens)
         return int(saved)
 
-    def _cache_insert(self, emb_rows: np.ndarray, answers) -> bool:
+    def _cache_insert(self, emb_rows: np.ndarray, answers,
+                      scores=None) -> bool:
         """Insert fresh answers — the cache is int-keyed, so non-integer
         (string/object generation) answers are skipped rather than
-        crashed on or silently truncated."""
+        crashed on or silently truncated. ``scores`` (accept-time
+        reliability) feed the cache's ``min_score`` confidence floor."""
         a = np.asarray(answers)
         if a.dtype == object:
             try:
@@ -227,7 +241,7 @@ class ServingPipeline:
                 return False
         if a.ndim != 1 or not np.issubdtype(a.dtype, np.integer):
             return False
-        self.cache.insert(emb_rows, a)
+        self.cache.insert(emb_rows, a, scores)
         return True
 
     def serve(self, tokens: np.ndarray) -> ServeResult:
@@ -273,7 +287,7 @@ class ServingPipeline:
         # write fresh answers back into the cache (int-keyed; skip others)
         if self.cache is not None and len(miss):
             t = time.perf_counter()
-            self._cache_insert(emb[miss], res_ans)
+            self._cache_insert(emb[miss], res_ans, res["scores"])
             latency["insert"] = time.perf_counter() - t
 
         latency["total"] = time.perf_counter() - t0
@@ -286,32 +300,61 @@ class ServingPipeline:
             baseline_cost=self._baseline_cost(tokens),
             latency=latency)
 
-    # -- continuous-batching entry points (see repro.serving.ingress) ------
+    # -- continuous-batching entry points (ingress + sched subsystems) -----
+    def _stream_backend(self, max_chunk, holdback, parallel, slo):
+        """The stream path's executor: the parallel SLO-aware tier
+        scheduler (default) or the serial continuous batcher
+        (``parallel=False`` — the reference implementation the
+        scheduler is benchmarked against). ``holdback`` and ``slo`` are
+        mutually exclusive: an ``SLOConfig`` carries its own
+        ``max_holdback_s``, so a separately-passed window would be
+        silently dropped."""
+        if holdback is not None and slo is not None:
+            raise ValueError("pass either holdback= or slo= (SLOConfig "
+                             "carries its own max_holdback_s), not both")
+        if parallel:
+            from repro.serving.sched import SLOConfig, TierScheduler
+            if slo is None:
+                slo = SLOConfig(max_holdback_s=0.02 if holdback is None
+                                else holdback)
+            return TierScheduler(self, max_chunk=max_chunk, slo=slo)
+        from repro.serving.ingress import ContinuousBatcher
+        if slo is not None:
+            raise ValueError("SLO config needs the parallel scheduler "
+                             "(parallel=True)")
+        return ContinuousBatcher(self, max_chunk=max_chunk,
+                                 holdback=0.02 if holdback is None
+                                 else holdback)
+
     def serve_stream(self, tokens: np.ndarray, arrivals=None, *,
                      max_chunk: int | None = None,
-                     holdback: float = 0.02) -> ServeResult:
-        """Replay an arrival trace through the continuous batcher:
-        row i of ``tokens`` becomes visible at offset ``arrivals[i]``
-        seconds (all at t=0 when None). Cache lookup and prompt
-        accounting run per-admission; answers come back in submission
-        order. For a fixed request set under greedy decoding this is
-        bit-identical to ``serve`` (tests/test_ingress.py)."""
-        from repro.serving.ingress import ContinuousBatcher
-        return ContinuousBatcher(self, max_chunk=max_chunk,
-                                 holdback=holdback).run_trace(
-            tokens, arrivals)
+                     holdback: float | None = None,
+                     parallel: bool = True, slo=None) -> ServeResult:
+        """Replay an arrival trace through the streaming path: row i of
+        ``tokens`` becomes visible at offset ``arrivals[i]`` seconds
+        (all at t=0 when None). Cache lookup and prompt accounting run
+        per-admission; answers come back in submission order. By default
+        tiers decode concurrently under the SLO-aware scheduler
+        (``repro.serving.sched``; pass ``slo=SLOConfig(...)`` for
+        deadlines/backpressure); ``parallel=False`` selects the serial
+        ``ContinuousBatcher``. For a fixed request set under greedy
+        decoding both paths are bit-identical to ``serve``
+        (tests/test_ingress.py, tests/test_sched.py)."""
+        return self._stream_backend(max_chunk, holdback, parallel,
+                                    slo).run_trace(tokens, arrivals)
 
     async def aserve(self, tokens: np.ndarray, arrivals=None, *,
                      max_chunk: int | None = None,
-                     holdback: float = 0.02) -> ServeResult:
+                     holdback: float | None = None,
+                     parallel: bool = True, slo=None) -> ServeResult:
         """Async flavour of ``serve_stream`` — cooperates with other
         coroutines while idle. For live producer/consumer streams build
-        an ``IngressQueue`` and drive ``ContinuousBatcher.serve_async``
-        directly (per-request futures resolve as answers land)."""
-        from repro.serving.ingress import ContinuousBatcher, IngressQueue
-        batcher = ContinuousBatcher(self, max_chunk=max_chunk,
-                                    holdback=holdback)
+        an ``IngressQueue`` and drive ``TierScheduler.serve_async`` (or
+        ``ContinuousBatcher.serve_async``) directly — per-request
+        futures resolve as answers land."""
+        from repro.serving.ingress import IngressQueue
+        backend = self._stream_backend(max_chunk, holdback, parallel, slo)
         queue = IngressQueue()
         queue.submit_burst(tokens, arrivals)
         queue.close()
-        return await batcher.serve_async(queue)
+        return await backend.serve_async(queue)

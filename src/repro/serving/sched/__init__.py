@@ -1,0 +1,25 @@
+"""``repro.serving.sched`` — SLO-aware parallel tier scheduling.
+
+The layer between async ingress (``repro.serving.ingress``) and the
+cascade step (``repro.core.cascade.tier_step``):
+
+``scheduler``  ``TierScheduler`` — one worker thread per cascade tier,
+               concurrent chunk decoding, adaptive holdback, bounded
+               queues with overload shedding/degradation.
+``policy``     ``SLOConfig`` (deadlines, holdback cap, queue caps,
+               overload policy) and the pure decision functions
+               (``holdback_timeout``, ``admit_decision``).
+``estimator``  per-tier EWMA service-time / queue-delay estimators and
+               utilization counters feeding the policy.
+
+``ServingPipeline.serve_stream`` / ``aserve`` run on this scheduler by
+default (``parallel=False`` selects the serial ``ContinuousBatcher``).
+"""
+from repro.serving.sched.estimator import Ewma, TierEstimator  # noqa: F401
+from repro.serving.sched.policy import (  # noqa: F401
+    OVERLOAD_POLICIES,
+    SLOConfig,
+    admit_decision,
+    holdback_timeout,
+)
+from repro.serving.sched.scheduler import TierScheduler  # noqa: F401

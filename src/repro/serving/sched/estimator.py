@@ -1,0 +1,79 @@
+"""Per-tier load estimation for the SLO-aware scheduler.
+
+The scheduler's admission and holdback decisions (``sched.policy``) need
+two online estimates per tier:
+
+  * **service time** — seconds one chunk takes on this tier, an EWMA
+    over observed chunk wall times. Chunks reuse the bucketed
+    ``GenerationEngine`` shapes, so chunk service time is close to flat
+    in occupancy and a scalar EWMA tracks it well.
+  * **queue delay** — seconds a request waits in this tier's queue
+    before riding a chunk, an EWMA over observed waits.
+
+Both are EWMAs rather than windowed means: service time drifts (jit
+warmup, host load, tier models swapped under the pipeline) and the
+holdback decision must follow the drift within a few chunks.
+"""
+from __future__ import annotations
+
+
+class Ewma:
+    """Exponentially-weighted moving average; the first sample seeds it."""
+
+    def __init__(self, alpha: float = 0.25):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.alpha = float(alpha)
+        self._v = 0.0
+        self.n = 0
+
+    def update(self, x: float) -> float:
+        x = float(x)
+        self._v = x if self.n == 0 else \
+            self.alpha * x + (1.0 - self.alpha) * self._v
+        self.n += 1
+        return self._v
+
+    @property
+    def value(self) -> float:
+        return self._v
+
+
+class TierEstimator:
+    """Service-time / queue-delay estimators plus utilization counters
+    for ONE tier. Mutated only under the scheduler's lock."""
+
+    def __init__(self, alpha: float = 0.25):
+        self.service = Ewma(alpha)        # seconds per chunk
+        self.queue_delay = Ewma(alpha)    # seconds waiting in the queue
+        self.busy_s = 0.0                 # total seconds inside chunks
+        self.chunks = 0
+        self.rows = 0                     # requests served over all chunks
+
+    def observe_chunk(self, seconds: float, rows: int):
+        self.service.update(seconds)
+        self.busy_s += float(seconds)
+        self.chunks += 1
+        self.rows += int(rows)
+
+    def observe_wait(self, seconds: float):
+        self.queue_delay.update(seconds)
+
+    def predicted_service(self, default: float = 0.0) -> float:
+        """Expected seconds for the next chunk — ``default`` before any
+        chunk has been observed (a cold tier predicts optimistically, so
+        the first dispatch is driven by the holdback cap instead)."""
+        return self.service.value if self.service.n else float(default)
+
+    def utilization(self, total_s: float) -> float:
+        """Fraction of the stream's wall clock this tier spent decoding."""
+        return self.busy_s / total_s if total_s > 0 else 0.0
+
+    def snapshot(self) -> dict:
+        return {
+            "service_ewma_s": self.service.value,
+            "queue_delay_ewma_s": self.queue_delay.value,
+            "busy_s": self.busy_s,
+            "chunks": self.chunks,
+            "rows": self.rows,
+        }

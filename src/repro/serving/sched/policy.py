@@ -1,0 +1,104 @@
+"""Admission and dispatch policy for the SLO-aware tier scheduler.
+
+Three decisions live here, kept separate from the worker machinery in
+``sched.scheduler`` so they stay unit-testable without threads:
+
+  * **adaptive holdback** (``holdback_timeout``) — how long a tier may
+    keep holding a partial chunk hoping for more fill. The fixed
+    ``holdback`` window of the serial batcher becomes deadline-driven:
+    ship when the head-of-line request's predicted completion
+    (now + safety x EWMA service time) would miss its deadline, capped
+    by ``max_holdback_s`` for requests without deadlines.
+  * **admission under overload** (``admit_decision``) — bounded-queue
+    backpressure. When tier 0's wait queue hits ``queue_cap`` the
+    overload policy decides: ``"reject"`` sheds the arrival outright;
+    ``"degrade"`` admits it pinned to the cheapest tier (its answer is
+    accepted regardless of score — the paper's cost/accuracy dial
+    applied to load: under pressure you trade accuracy, not
+    availability), shedding only past a hard 2x cap.
+  * **per-request deadlines** (``SLOConfig.deadline_for``) — an
+    explicit per-request deadline wins; otherwise ``deadline_s`` sets
+    one relative to arrival; otherwise no deadline (pure fill-driven
+    dispatch, like the serial batcher).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+OVERLOAD_POLICIES = ("reject", "degrade")
+
+#: admission verdicts
+ADMIT, DEGRADE, SHED = "admit", "degrade", "shed"
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOConfig:
+    """Service-level objectives for one stream."""
+
+    #: default per-request deadline, seconds after arrival (None = no SLO)
+    deadline_s: float | None = None
+    #: cap on how long a partial chunk may wait for fill (the serial
+    #: batcher's fixed window becomes this upper bound)
+    max_holdback_s: float = 0.02
+    #: margin multiplied onto the predicted service time when testing a
+    #: deadline — absorbs EWMA underestimates and queueing jitter
+    service_safety: float = 1.25
+    #: cold-start service-time guess (seconds) before the first chunk of
+    #: a tier is observed
+    init_service_s: float = 0.0
+    #: bounded per-tier wait queue; None = unbounded (no backpressure)
+    queue_cap: int | None = None
+    #: what to do with arrivals once tier 0's queue is full
+    overload: str = "reject"
+
+    def __post_init__(self):
+        if self.overload not in OVERLOAD_POLICIES:
+            raise ValueError(f"unknown overload policy {self.overload!r}; "
+                             f"expected one of {OVERLOAD_POLICIES}")
+        if self.queue_cap is not None and self.queue_cap < 1:
+            raise ValueError(f"queue_cap must be >= 1, got {self.queue_cap}")
+        if self.overload != "reject" and self.queue_cap is None:
+            raise ValueError(
+                f"overload={self.overload!r} never triggers without a "
+                "queue_cap: set one (bounded queues are what admission "
+                "decisions are made against)")
+        if self.max_holdback_s < 0:
+            raise ValueError("max_holdback_s must be >= 0")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError("deadline_s must be > 0")
+        if self.service_safety <= 0:
+            raise ValueError("service_safety must be > 0")
+
+    def deadline_for(self, arrival: float,
+                     explicit: float | None = None) -> float | None:
+        """Absolute deadline (stream clock) for a request arriving at
+        ``arrival``; an explicit per-request deadline wins."""
+        if explicit is not None:
+            return float(explicit)
+        if self.deadline_s is None:
+            return None
+        return float(arrival) + self.deadline_s
+
+
+def holdback_timeout(head, est, now: float, slo: SLOConfig) -> float:
+    """Seconds tier ``head.tier_pos`` may keep holding its partial chunk
+    before dispatching, given the head-of-line request and the tier's
+    estimator. ``<= 0`` means ship NOW: either the head has aged past
+    ``max_holdback_s``, or its predicted completion
+    (now + safety x EWMA service) would miss its deadline."""
+    t_age = head.t_enqueued + slo.max_holdback_s - now
+    if head.deadline is None:
+        return t_age
+    est_s = slo.service_safety * est.predicted_service(slo.init_service_s)
+    t_slo = head.deadline - est_s - now
+    return min(t_age, t_slo)
+
+
+def admit_decision(queue_len: int, slo: SLOConfig) -> str:
+    """Admission verdict for one arrival given tier 0's queue length."""
+    cap = slo.queue_cap
+    if cap is None or queue_len < cap:
+        return ADMIT
+    if slo.overload == "degrade" and queue_len < 2 * cap:
+        return DEGRADE
+    return SHED

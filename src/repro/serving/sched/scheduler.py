@@ -1,0 +1,410 @@
+"""SLO-aware parallel tier scheduler: concurrent per-tier workers over
+the shared cascade step.
+
+The serial ``ContinuousBatcher`` (``repro.serving.ingress``) dispatches
+one chunk at a time on one thread: while tier 0 decodes, tier 1 sits
+idle even when its queue could fill a chunk. This module replaces that
+dispatch loop with one **worker thread per cascade tier**, all driving
+the same ``repro.core.cascade.tier_step`` — so with >= 2 tiers backed by
+real models, chunks decode concurrently and the cascade's wall clock
+approaches the busiest tier's, not the sum of all tiers'.
+
+Layering (the new layer sits between ingress and the cascade executor):
+
+    IngressQueue  ->  TierScheduler (admission + per-tier workers)
+                           |  tier_step (shared compaction step)
+                           v
+                      per-tier wait queues, escalation j -> j+1
+
+Scheduling policy (``sched.policy``):
+
+  * **adaptive holdback** — a tier ships a partial chunk when the
+    head-of-line request's predicted completion (now + safety x EWMA
+    service time, ``sched.estimator``) would miss its deadline, when the
+    head has aged past ``max_holdback_s``, or when nothing upstream can
+    ever top the chunk up (drain). Full chunks ship immediately.
+  * **bounded queues + backpressure** — with ``queue_cap`` set,
+    escalation into a full downstream queue blocks that tier's worker
+    (escalations flow strictly forward, so blocking cannot deadlock);
+    the stall propagates upstream until admission applies the overload
+    policy: ``reject`` sheds arrivals, ``degrade`` pins them to the
+    cheapest tier (answer accepted regardless of score — the paper's
+    cost/accuracy dial applied to load).
+
+Concurrency contract (see ``tier_step``): each tier's ``invoke`` is
+only ever entered by that tier's worker, so tier backends (e.g. a
+``GenerationEngine``) need no internal locking — but two ``TierSpec``
+entries must not share one stateful backend object. The pipeline's
+shared scorer is serialized with a lock; completion-cache lookups
+(admission thread) and inserts (workers) share another.
+
+Equivalence guarantee (tests/test_sched.py, tests/test_ingress.py): for
+a fixed request set under greedy decoding — row-wise tier ``answer``/
+``scorer`` callables, which all repo tiers are — the parallel scheduler
+returns bit-identical answers and per-request costs to
+``ServingPipeline.serve``: a request's cost is still its own row-wise
+``ApiCost`` terms summed in ascending tier order on float64, regardless
+of which chunks it rode or what was decoding concurrently.
+"""
+from __future__ import annotations
+
+import asyncio
+import collections
+import threading
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.cascade import tier_step
+from repro.serving.ingress import (IngressQueue, RequestState,
+                                   fold_stream_result, pad_pow2_rows,
+                                   stage1_lookup)
+from repro.serving.sched.estimator import TierEstimator
+from repro.serving.sched.policy import (ADMIT, DEGRADE, SLOConfig,
+                                        admit_decision, holdback_timeout)
+
+
+class TierScheduler:
+    """Parallel, SLO-aware scheduler over a ``ServingPipeline``.
+
+    One scheduler serves one stream and is then consumed (``result()``);
+    build a fresh one per trace. Drop-in for ``ContinuousBatcher``:
+    ``run_trace(tokens, arrivals)`` replays a closed trace,
+    ``serve_async(queue)`` drives a live (possibly still-open)
+    ``IngressQueue`` with per-request futures.
+    """
+
+    #: cap on idle waits so time-based triggers (holdback expiry,
+    #: deadline pressure, late arrivals) are never missed for long
+    IDLE_POLL = 0.02
+
+    def __init__(self, pipeline, max_chunk: int | None = None,
+                 slo: SLOConfig | None = None):
+        self.pipeline = pipeline
+        self.slo = slo or SLOConfig()
+        self.max_chunk = int(pipeline.batch_size if max_chunk is None
+                             else max_chunk)
+        if self.max_chunk < 1:
+            raise ValueError("max_chunk must be >= 1")
+        m = len(pipeline.tiers)
+        if m == 0:
+            raise ValueError("pipeline has no tiers")
+        self._tiers = pipeline._cascade_tiers()
+
+        # one lock + condition guards every field below; chunk compute,
+        # embedding and cache traffic all happen OUTSIDE it
+        self._mu = threading.Lock()
+        self._cv = threading.Condition(self._mu)
+        self._scorer_mu = threading.Lock()   # shared scorer (tier_step)
+        self._cache_mu = threading.Lock()    # lookup (admission) vs insert
+
+        self._waiting: list[collections.deque] = [collections.deque()
+                                                  for _ in range(m)]
+        self._busy = [0] * m            # rows inside a running chunk
+        self._inflight = 0              # admitted, not yet finished
+        self._ingress_drained = False   # no further arrivals possible
+        self._stop = False
+        self._error: BaseException | None = None
+        self._threads: list[threading.Thread] = []
+        self._clock = None
+
+        # telemetry (all under _mu)
+        self._requests: list[RequestState] = []
+        self.tier_counts = [0] * m
+        self.chunks_per_tier = [0] * m
+        self._fill: list[float] = []
+        self.queue_peak = [0] * m
+        self.estimators = [TierEstimator() for _ in range(m)]
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.shed_count = 0
+        self.degraded_count = 0
+        self.deadline_hits = 0
+        self.deadline_total = 0
+        self.latency = {"embed": 0.0, "cache": 0.0, "cascade": 0.0,
+                        "insert": 0.0}
+
+    # -- admission (driver thread) -----------------------------------------
+    def _admit(self, reqs: Sequence[RequestState], now: float):
+        """Stage-1 a burst of arrivals: embed + cache lookup outside the
+        lock; then, under it, resolve hits, apply the overload policy,
+        and queue the admitted misses on tier 0."""
+        if not reqs:
+            return
+        hit_mask, cached, emb, embed_s, cache_s = stage1_lookup(
+            self.pipeline, reqs, cache_lock=self._cache_mu)
+        with self._cv:
+            self.latency["embed"] += embed_s
+            self.latency["cache"] += cache_s
+            self.cache_hits += int(hit_mask.sum())
+            self.cache_misses += int((~hit_mask).sum())
+            for i, r in enumerate(reqs):
+                r.t_admitted = now
+                r.deadline = self.slo.deadline_for(r.arrival, r.deadline)
+                self._requests.append(r)
+                self._inflight += 1
+                if hit_mask[i]:
+                    r.answer = cached[i]
+                    r.stopped_at = -1
+                    self._finish_locked(r, now)
+                    continue
+                verdict = admit_decision(len(self._waiting[0]), self.slo)
+                if verdict == ADMIT or verdict == DEGRADE:
+                    if verdict == DEGRADE:
+                        r.degraded = True
+                        self.degraded_count += 1
+                    if emb is not None:     # only queued misses keep the
+                        r.emb = emb[i]      # embedding (insert-on-finish);
+                    self._enqueue_locked(r, 0, now)
+                else:                       # shed: nothing to insert, so
+                    r.shed = True           # don't pin the row for the
+                    r.stopped_at = -2       # scheduler's lifetime
+                    self.shed_count += 1
+                    self._finish_locked(r, now)
+            self._cv.notify_all()
+
+    def _enqueue_locked(self, r: RequestState, j: int, now: float):
+        r.tier_pos = j
+        r.t_enqueued = now
+        self.tier_counts[j] += 1
+        q = self._waiting[j]
+        q.append(r)
+        if len(q) > self.queue_peak[j]:
+            self.queue_peak[j] = len(q)
+
+    def _finish_locked(self, r: RequestState, now: float):
+        r.t_done = now
+        self._inflight -= 1
+        if r.deadline is not None and not r.shed:
+            self.deadline_total += 1
+            if now <= r.deadline:
+                self.deadline_hits += 1
+        if r.future is not None:
+            # workers are plain threads: hand resolution to the loop
+            r.future.get_loop().call_soon_threadsafe(
+                lambda f=r.future, rr=r: f.done() or f.set_result(rr))
+
+    # -- dispatch decision (under _mu) -------------------------------------
+    def _upstream_quiet(self, j: int) -> bool:
+        """Nothing can ever flow into tier j again: ingress is drained
+        and every earlier tier is empty and idle."""
+        if not self._ingress_drained:
+            return False
+        return all(not self._waiting[i] and self._busy[i] == 0
+                   for i in range(j))
+
+    def _next_chunk_locked(self, j: int, now: float):
+        """(batch, wait_s): the chunk tier j should run now, or the
+        seconds to wait before re-deciding (None = nothing queued)."""
+        q = self._waiting[j]
+        if not q:
+            return None, None
+        if len(q) >= self.max_chunk:
+            return self._pop_locked(j, now), 0.0
+        wait = holdback_timeout(q[0], self.estimators[j], now, self.slo)
+        if wait <= 0.0 or self._upstream_quiet(j):
+            return self._pop_locked(j, now), 0.0
+        return None, wait
+
+    def _pop_locked(self, j: int, now: float) -> list[RequestState]:
+        q = self._waiting[j]
+        batch = [q.popleft() for _ in range(min(self.max_chunk, len(q)))]
+        for r in batch:
+            self.estimators[j].observe_wait(now - r.t_enqueued)
+        self._busy[j] += len(batch)
+        self._cv.notify_all()       # wake workers blocked on a full queue
+        return batch
+
+    # -- the per-tier worker ----------------------------------------------
+    def _run_chunk(self, j: int, batch: list[RequestState]):
+        """Execute one chunk on tier j (no scheduler lock held)."""
+        pipe = self.pipeline
+        clock = self._clock
+        last = j == len(self._tiers) - 1
+        toks, b = pad_pow2_rows(np.stack([r.tokens for r in batch]))
+        t0 = time.perf_counter()
+        ans, cost, scores, accept = tier_step(
+            self._tiers[j], toks, j, scorer=pipe._pos_scorer,
+            threshold=None if last else pipe.thresholds[j], last=last,
+            scorer_lock=self._scorer_mu)
+        ans, cost, scores, accept = (ans[:b], cost[:b], scores[:b],
+                                     accept[:b])
+        chunk_s = time.perf_counter() - t0
+        now = clock()
+        finished, escalate, cacheable = [], [], []
+        for i, r in enumerate(batch):
+            r.n_chunks += 1
+            r.cost += float(cost[i])
+            # a degraded request takes the cheapest tier's answer even
+            # when the scorer would escalate it (overload trades
+            # accuracy, not availability)
+            if accept[i] or r.degraded:
+                r.answer = ans[i]
+                r.score = float(scores[i])
+                r.stopped_at = j
+                finished.append(r)
+                # never cache an answer the scorer rejected: a forced
+                # degraded answer would otherwise be served to future
+                # near-duplicates long after the overload has passed
+                if accept[i]:
+                    cacheable.append(r)
+            else:
+                escalate.append(r)
+        insert_s = 0.0
+        if pipe.cache is not None and cacheable:
+            t0 = time.perf_counter()
+            with self._cache_mu:
+                pipe._cache_insert(
+                    np.stack([r.emb for r in cacheable]),
+                    np.asarray([r.answer for r in cacheable]),
+                    np.asarray([r.score for r in cacheable]))
+            insert_s = time.perf_counter() - t0
+        for r in finished:                  # embedding served its purpose
+            r.emb = None
+        with self._cv:
+            self.estimators[j].observe_chunk(chunk_s, len(batch))
+            self.chunks_per_tier[j] += 1
+            self._fill.append(len(batch) / self.max_chunk)
+            self.latency["cascade"] += chunk_s   # summed busy time: with
+            self.latency["insert"] += insert_s   # parallel tiers this can
+            for r in finished:                   # exceed wall clock
+                self._finish_locked(r, now)
+            # bounded escalation: block (releasing the lock) while the
+            # downstream queue is full — strictly forward flow, so this
+            # backpressure cannot deadlock; _busy[j] stays raised until
+            # the handoff completes so drain detection holds off
+            cap = self.slo.queue_cap
+            for r in escalate:
+                while (cap is not None
+                       and len(self._waiting[j + 1]) >= cap
+                       and not self._stop):
+                    self._cv.notify_all()
+                    self._cv.wait(self.IDLE_POLL)
+                self._enqueue_locked(r, j + 1, clock())
+            self._busy[j] -= len(batch)
+            self._cv.notify_all()
+
+    def _worker(self, j: int):
+        clock = self._clock
+        try:
+            while True:
+                with self._cv:
+                    batch = None
+                    while batch is None:
+                        if self._stop:
+                            return
+                        batch, wait = self._next_chunk_locked(j, clock())
+                        if batch is None:
+                            timeout = (self.IDLE_POLL if wait is None else
+                                       min(max(wait, 1e-4), self.IDLE_POLL))
+                            self._cv.wait(timeout)
+                self._run_chunk(j, batch)
+        except BaseException as e:         # surface worker crashes to the
+            with self._cv:                 # driver instead of hanging it
+                self._error = e
+                self._stop = True
+                self._cv.notify_all()
+
+    # -- drivers -----------------------------------------------------------
+    def _start(self, clock):
+        if self._threads:
+            raise RuntimeError("scheduler already started; build a fresh "
+                               "TierScheduler per stream")
+        self._clock = clock
+        for j in range(len(self._tiers)):
+            t = threading.Thread(target=self._worker, args=(j,),
+                                 name=f"tier-worker-{j}", daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _shutdown(self):
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join(timeout=10.0)
+
+    async def serve_async(self, queue: IngressQueue, clock=None):
+        """Asyncio driver over an (optionally still-open) queue:
+        producers may keep submitting — with ``with_future=True`` each
+        request's future resolves the moment it finishes — until
+        ``queue.close()`` lets the stream drain. Returns the folded
+        ``ServeResult``."""
+        t_start = time.perf_counter()
+        if clock is None:
+            def clock() -> float:
+                return time.perf_counter() - t_start
+        self._start(clock)
+        try:
+            while True:
+                now = clock()
+                self._admit(queue.due(now), now)
+                drained = queue.closed and len(queue) == 0
+                with self._cv:
+                    self._ingress_drained = drained
+                    if self._error is not None:
+                        break
+                    if drained and self._inflight == 0:
+                        break
+                    self._cv.notify_all()
+                nxt = queue.next_arrival()
+                pause = (self.IDLE_POLL if nxt is None else
+                         min(max(nxt - clock(), 0.0), self.IDLE_POLL))
+                # always yield so producers run, even at pause=0
+                await asyncio.sleep(pause)
+        finally:
+            self._shutdown()
+        if self._error is not None:
+            raise self._error
+        return self.result(clock())
+
+    def run_trace(self, tokens: np.ndarray,
+                  arrivals: Sequence[float] | None = None):
+        """Synchronous trace replay: requests (rows of ``tokens``)
+        become visible at their ``arrivals`` offsets on a wall clock.
+        Returns the folded ``ServeResult`` (submission order)."""
+        queue = IngressQueue()
+        queue.submit_burst(tokens, arrivals)
+        queue.close()
+        return asyncio.run(self.serve_async(queue))
+
+    # -- folding into ServeResult ------------------------------------------
+    def stats(self, total_s: float) -> dict:
+        """Ingress + scheduler telemetry (superset of the serial
+        batcher's ``stats``): per-tier utilization and EWMA estimates,
+        deadline-hit rate, shed/degraded counts, queue peaks."""
+        served = [r for r in self._requests if r.done and not r.shed]
+        lat = np.asarray([r.latency for r in served], np.float64)
+        wait = np.asarray([r.queue_wait for r in served], np.float64)
+        return {
+            "request_latency": lat,
+            "queue_wait": wait,
+            "chunks_per_tier": list(self.chunks_per_tier),
+            "chunk_occupancy": float(np.mean(self._fill)) if self._fill
+            else 0.0,
+            "n_chunks": int(sum(self.chunks_per_tier)),
+            # scheduler extensions
+            "tier_utilization": [e.utilization(total_s)
+                                 for e in self.estimators],
+            "service_ewma_s": [e.service.value for e in self.estimators],
+            "queue_delay_ewma_s": [e.queue_delay.value
+                                   for e in self.estimators],
+            "deadline_hit_rate": (self.deadline_hits / self.deadline_total
+                                  if self.deadline_total else None),
+            "deadline_total": self.deadline_total,
+            "shed": self.shed_count,
+            "degraded": self.degraded_count,
+            "queue_peak": list(self.queue_peak),
+        }
+
+    def result(self, total_s: float):
+        """Fold the finished stream into a ``ServeResult`` bit-compatible
+        with ``ServingPipeline.serve`` (see the equivalence guarantee in
+        the module docstring); shed requests carry answer ``None``,
+        ``stopped_at -2`` and zero cost."""
+        return fold_stream_result(
+            self.pipeline, self._requests, tier_counts=self.tier_counts,
+            cache_hits=self.cache_hits, cache_misses=self.cache_misses,
+            latency=self.latency, total_s=total_s,
+            ingress=self.stats(total_s))

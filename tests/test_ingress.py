@@ -75,7 +75,7 @@ def _assert_equivalent(a, b):
 
 def test_tier_step_matches_executor():
     """Chunk-by-chunk tier_step reproduces execute_cascade exactly —
-    one compaction implementation, two drivers."""
+    one compaction implementation, three drivers."""
     n, bs = 20, 8
     tier = CascadeTier("t", lambda q: (q % 3, np.full(len(q), 2.0)))
 
@@ -85,19 +85,40 @@ def test_tier_step_matches_executor():
     queries = np.arange(n)
     res = execute_cascade([tier, tier], [0.5], scorer, queries,
                           batch_size=bs)
-    ans, cost, acc = [], [], []
+    ans, cost, sco, acc = [], [], [], []
     for i in range(0, n, bs):
-        a, c, m = tier_step(tier, queries[i:i + bs], 0, scorer=scorer,
-                            threshold=0.5, last=False)
-        ans.append(a), cost.append(c), acc.append(m)
+        a, c, s, m = tier_step(tier, queries[i:i + bs], 0, scorer=scorer,
+                               threshold=0.5, last=False)
+        ans.append(a), cost.append(c), sco.append(s), acc.append(m)
     acc = np.concatenate(acc)
     assert (np.concatenate(ans)[acc]
             == np.asarray(res["answers"])[res["stopped_at"] == 0]).all()
     assert acc.sum() == res["accepted_counts"][0]
-    # last tier accepts everything regardless of threshold
-    _, _, m = tier_step(tier, queries[:4], 1, scorer=scorer,
-                        threshold=None, last=True)
-    assert m.all()
+    # accept-time scores surface in both drivers (cache-floor consumers)
+    assert (np.concatenate(sco)[acc]
+            == res["scores"][res["stopped_at"] == 0]).all()
+    # last tier accepts everything regardless of threshold, unscored
+    _, _, s, m = tier_step(tier, queries[:4], 1, scorer=scorer,
+                           threshold=None, last=True)
+    assert m.all() and np.isnan(s).all()
+    assert np.isnan(res["scores"][res["stopped_at"] == 1]).all()
+
+
+def test_tier_step_scorer_lock_serializes():
+    """A shared scorer lock is honoured around the scorer call."""
+    import threading
+
+    lock = threading.Lock()
+    seen = []
+
+    def scorer(q, a, j):
+        seen.append(lock.locked())       # held while scoring
+        return np.ones(len(q))
+
+    tier = CascadeTier("t", lambda q: (q, np.ones(len(q))))
+    tier_step(tier, np.arange(4), 0, scorer=scorer, threshold=0.5,
+              last=False, scorer_lock=lock)
+    assert seen == [True] and not lock.locked()
 
 
 # ---------------------------------------------------------------------------
@@ -105,50 +126,63 @@ def test_tier_step_matches_executor():
 # ---------------------------------------------------------------------------
 
 
-def test_stream_equivalent_to_serve_no_cache():
+# both stream backends must uphold the guarantee: the serial batcher
+# (parallel=False) and the SLO tier scheduler (parallel=True, default)
+_BACKENDS = [False, True]
+
+
+@pytest.mark.parametrize("parallel", _BACKENDS)
+def test_stream_equivalent_to_serve_no_cache(parallel):
     toks = _tokens(24)
     a = _toy_pipeline(with_cache=False).serve(toks)
-    b = _toy_pipeline(with_cache=False).serve_stream(toks)
+    b = _toy_pipeline(with_cache=False).serve_stream(toks,
+                                                     parallel=parallel)
     _assert_equivalent(a, b)
 
 
-def test_stream_equivalent_to_serve_with_cache():
+@pytest.mark.parametrize("parallel", _BACKENDS)
+def test_stream_equivalent_to_serve_with_cache(parallel):
     toks = _tokens(24)
     pipe_a, pipe_b = _toy_pipeline(), _toy_pipeline()
-    _assert_equivalent(pipe_a.serve(toks), pipe_b.serve_stream(toks))
+    _assert_equivalent(pipe_a.serve(toks),
+                       pipe_b.serve_stream(toks, parallel=parallel))
     # the stream populated the cache exactly like serve: a second pass
     # through EITHER path is all hits
-    again = pipe_b.serve_stream(toks)
+    again = pipe_b.serve_stream(toks, parallel=parallel)
     assert again.cache_hits == 24 and again.cost.sum() == 0.0
     assert (again.stopped_at == -1).all()
 
 
-def test_stream_equivalent_under_staggered_arrivals():
+@pytest.mark.parametrize("parallel", _BACKENDS)
+def test_stream_equivalent_under_staggered_arrivals(parallel):
     """Arrival pattern must not change what is answered or billed."""
     toks = _tokens(30)
     a = _toy_pipeline().serve(toks)
     b = _toy_pipeline().serve_stream(
-        toks, np.linspace(0.0, 0.05, 30), max_chunk=4)
+        toks, np.linspace(0.0, 0.05, 30), max_chunk=4, parallel=parallel)
     _assert_equivalent(a, b)
 
 
-def test_aserve_equivalent_to_serve():
+@pytest.mark.parametrize("parallel", _BACKENDS)
+def test_aserve_equivalent_to_serve(parallel):
     toks = _tokens(16)
     a = _toy_pipeline().serve(toks)
-    b = asyncio.run(_toy_pipeline().aserve(toks))
+    b = asyncio.run(_toy_pipeline().aserve(toks, parallel=parallel))
     _assert_equivalent(a, b)
     assert b.ingress is not None
     assert len(b.ingress["request_latency"]) == 16
 
 
-def test_stream_preserves_answer_dtype():
-    """Generation-style string answers survive the stream path too."""
+@pytest.mark.parametrize("parallel", _BACKENDS)
+def test_stream_preserves_answer_dtype(parallel):
+    """Generation-style string answers survive the stream paths too."""
     tier = TierSpec("gen", lambda t: np.array([f"a{x}" for x in t[:, 0]]),
                     ApiCost(1.0, 1.0, 0.0))
     mk = lambda: ServingPipeline(tiers=[tier], thresholds=[], scorer=None,
                                  full_prompt_tokens=10, pad_token=-1)
     toks = _tokens(6)
-    a, b = mk().serve(toks), mk().serve_stream(toks)
+    a = mk().serve(toks)
+    b = mk().serve_stream(toks, parallel=parallel)
     assert a.answers.tolist() == [f"a{i}" for i in range(6)]
     assert np.array_equal(a.answers, b.answers)
     assert a.answers.dtype == b.answers.dtype
@@ -278,6 +312,22 @@ def test_stream_telemetry_and_result_guard():
 def test_batcher_rejects_bad_max_chunk():
     with pytest.raises(ValueError, match="max_chunk"):
         ContinuousBatcher(_toy_pipeline(with_cache=False), max_chunk=0)
+
+
+def test_poisson_arrivals_validates_inputs():
+    """rate <= 0 used to div-by-zero (or yield inf gaps) and n < 0
+    silently returned an empty trace; both now fail loudly."""
+    from repro.serving.ingress import poisson_arrivals
+
+    with pytest.raises(ValueError, match="rate"):
+        poisson_arrivals(10, 0.0)
+    with pytest.raises(ValueError, match="rate"):
+        poisson_arrivals(10, -5.0)
+    with pytest.raises(ValueError, match="n must be"):
+        poisson_arrivals(-1, 100.0)
+    assert len(poisson_arrivals(0, 100.0)) == 0      # empty trace is fine
+    arr = poisson_arrivals(50, 100.0, seed=3)
+    assert len(arr) == 50 and (np.diff(arr) >= 0).all()
 
 
 def test_submit_burst_rejects_mismatched_arrivals():

@@ -98,6 +98,89 @@ def test_cache_near_duplicate_threshold():
     assert not hit[0]
 
 
+def test_cache_lru_eviction_order():
+    """LRU evicts the least-recently-USED entry; a lookup hit refreshes
+    its entry where the FIFO ring would still cycle it out."""
+    cache = CompletionCache(capacity=4, threshold=0.99, policy="lru")
+    emb = np.eye(6, 8, dtype=np.float32)
+    cache.insert(emb[:4], np.arange(4, dtype=np.int32))
+    hit, _ = cache.lookup(emb[0:1])             # touch entry 0: now MRU
+    assert hit[0]
+    cache.insert(emb[4:5], np.array([4], np.int32))
+    # entry 1 (least recently used) was evicted — NOT entry 0
+    hit, _ = cache.lookup(emb[1:2])             # miss: no refresh
+    assert not hit[0]
+    hit, ans = cache.lookup(emb[0:1])           # survived, refreshed again
+    assert hit[0] and ans[0] == 0
+    # next victim is entry 2 (oldest untouched); 0/3/4 survive
+    cache.insert(emb[5:6], np.array([5], np.int32))
+    hit, _ = cache.lookup(emb[2:3])
+    assert not hit[0]
+    for i, want in [(0, 0), (3, 3), (4, 4), (5, 5)]:
+        hit, ans = cache.lookup(emb[i:i + 1])
+        assert hit[0] and ans[0] == want
+
+
+def test_cache_lru_fills_invalid_slots_first():
+    cache = CompletionCache(capacity=4, threshold=0.99, policy="lru")
+    emb = np.eye(4, 8, dtype=np.float32)
+    cache.insert(emb[:2], np.arange(2, dtype=np.int32))
+    cache.insert(emb[2:], np.arange(2, 4, dtype=np.int32))
+    hit, ans = cache.lookup(emb)                # nothing evicted yet
+    assert hit.all() and ans.tolist() == [0, 1, 2, 3]
+
+
+def test_cache_lru_insert_larger_than_capacity_keeps_newest():
+    cache = CompletionCache(capacity=4, threshold=0.99, policy="lru")
+    emb = np.eye(9, 12, dtype=np.float32)
+    cache.insert(emb, np.arange(9, dtype=np.int32))
+    hit, ans = cache.lookup(emb)
+    assert hit.tolist() == [False] * 5 + [True] * 4
+    assert ans[5:].tolist() == [5, 6, 7, 8]
+
+
+def test_cache_score_confidence_floor():
+    """Answers the scorer distrusted are never cached; NaN (unscored
+    last-tier answers) counts as trusted."""
+    cache = CompletionCache(capacity=8, threshold=0.99, min_score=0.5)
+    emb = np.eye(3, 8, dtype=np.float32)
+    cache.insert(emb, np.array([10, 11, 12], np.int32),
+                 scores=np.array([0.9, 0.2, np.nan]))
+    hit, ans = cache.lookup(emb)
+    assert hit.tolist() == [True, False, True]
+    assert ans[0] == 10 and ans[2] == 12
+    assert cache.skipped_low_score == 1
+    # without scores the floor cannot apply: entries are trusted
+    cache.insert(emb[1:2], np.array([11], np.int32))
+    hit, _ = cache.lookup(emb)
+    assert hit.all()
+
+
+def test_cache_rejects_unknown_policy():
+    with pytest.raises(ValueError, match="eviction policy"):
+        CompletionCache(policy="mru")
+
+
+def test_pipeline_serve_respects_cache_floor():
+    """End-to-end: with a floor above the scorer's accept scores, tier-0
+    answers are not cached, so repeats go back through the tiers."""
+    floor_cache = CompletionCache(capacity=32, threshold=0.99,
+                                  min_score=0.95)
+    pipe = _toy_pipeline()
+    pipe.cache = floor_cache
+    toks = np.arange(8 * 4, dtype=np.int32).reshape(8, 4)
+    toks[:, 0] = np.arange(8)
+    first = pipe.serve(toks)
+    assert first.cache_misses == 8
+    # tier-0 accepts score 0.9 < floor -> skipped; last-tier answers are
+    # unscored (NaN) -> trusted and cached
+    again = pipe.serve(toks)
+    easy = toks[:, 0] % 2 == 0
+    assert (again.stopped_at[easy] == 0).all()      # re-served by tiers
+    assert (again.stopped_at[~easy] == -1).all()    # hit the cache
+    assert floor_cache.skipped_low_score == 8       # 4 per pass
+
+
 # ---------------------------------------------------------------------------
 # the single cascade executor
 # ---------------------------------------------------------------------------
