@@ -22,7 +22,8 @@ def main() -> None:
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args()
 
-    from benchmarks import bench_kernels, bench_paper, bench_serving
+    from benchmarks import (bench_kernels, bench_paper, bench_serving,
+                            bench_strategy)
 
     t_all = time.time()
     results = {}
@@ -39,6 +40,8 @@ def main() -> None:
         ("parallel_tiers", bench_serving.bench_parallel_tiers),
         ("overload_shedding", bench_serving.bench_overload_shedding),
         ("bucketed_prefill", bench_serving.bench_bucketed_prefill),
+        ("contextual_routing", bench_strategy.bench_contextual_routing),
+        ("budget_governor", bench_strategy.bench_budget_governor),
     ]
     for name, fn in paper_benches:
         rows, derived, secs = fn()

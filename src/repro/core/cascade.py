@@ -110,12 +110,18 @@ def tier_step(tier: CascadeTier, chunk, j: int, *, scorer: Callable,
 
 def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
                     scorer: Callable, queries, *,
-                    batch_size: int = 256) -> dict:
+                    batch_size: int = 256, entry=None) -> dict:
     """THE cascade executor: tier-by-tier compaction over ``queries``.
 
     queries: (n, ...) array — rows are whatever the tier backend consumes
     (token matrices for live models, query indices for offline replay).
     scorer(queries_chunk, answers_chunk, tier_pos) -> scores in [0,1].
+
+    ``entry`` (optional, (n,) ints in [0, m)) gives each query's cascade
+    *entry position* (the contextual router, ``repro.serving.strategy``):
+    query i joins the pending set at tier ``entry[i]`` instead of tier 0,
+    never touching the tiers below it. ``entry=None`` keeps the classic
+    everything-enters-at-0 cascade bit-identically.
 
     All tier and scorer calls are chunked to ``batch_size``. Returns
     dict(answers, cost, stopped_at (cascade position, -1 = unanswered),
@@ -129,14 +135,27 @@ def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
     if len(thresholds) != m - 1:
         raise ValueError(f"need {m - 1} thresholds for {m} tiers, "
                          f"got {len(thresholds)}")
+    if entry is not None:
+        entry = np.asarray(entry, np.int64).ravel()
+        if entry.shape != (n,):
+            raise ValueError(f"entry must be ({n},), got {entry.shape}")
+        if len(entry) and (entry.min() < 0 or entry.max() >= m):
+            raise ValueError(f"entry positions must lie in [0, {m}); got "
+                             f"range [{entry.min()}, {entry.max()}]")
     answers = np.empty(n, dtype=object)
     cost = np.zeros(n, np.float64)
     stopped_at = np.full(n, -1, np.int32)
     scores = np.full(n, np.nan)
-    pending = np.arange(n)
+    pending = (np.arange(n) if entry is None
+               else np.flatnonzero(entry == 0))
     tier_counts: list[int] = []
     accepted_counts: list[int] = []
     for j, tier in enumerate(tiers):
+        if entry is not None and j > 0:
+            # late entrants join the survivors, in ascending row order
+            # (the same order a tier-0 entry would have seen them)
+            pending = np.sort(np.concatenate(
+                [pending, np.flatnonzero(entry == j)]))
         tier_counts.append(len(pending))
         if len(pending) == 0:
             accepted_counts.append(0)

@@ -7,6 +7,8 @@ Demo (CPU):
       --stream --rate 500        # parallel tier scheduler, Poisson trace
   PYTHONPATH=src python -m repro.launch.serve --requests 200 --stream \\
       --deadline-ms 100 --queue-cap 64 --overload degrade   # SLO mode
+  PYTHONPATH=src python -m repro.launch.serve --requests 200 \\
+      --contextual --budget-rate 3e-5     # entry routing + spend governor
 
 Thin CLI over ``repro.serving.build_pipeline`` — this is the entry point
 a real deployment would point at the production mesh (tiers sharded with
@@ -56,13 +58,31 @@ def main():
                     choices=["reject", "degrade"],
                     help="stream mode: policy once the queue cap is hit — "
                          "shed arrivals, or answer them from the cheapest "
-                         "tier unconditionally")
+                         "tier whose predicted score clears a reduced bar "
+                         "(tier 0 without --contextual)")
+    ap.add_argument("--contextual", action="store_true",
+                    help="train a contextual entry-tier router: each "
+                         "query enters the cascade at the cheapest tier "
+                         "whose predicted accept probability clears the "
+                         "entry bar")
+    ap.add_argument("--entry-bar", type=float, default=0.5,
+                    help="contextual mode: predicted-accept probability "
+                         "needed to enter a tier")
+    ap.add_argument("--budget-rate", type=float, default=None,
+                    help="target spend rate (USD/query): an online "
+                         "governor shifts the cascade thresholds and "
+                         "entry bar to hold it")
+    ap.add_argument("--governor-window", type=int, default=64,
+                    help="queries per governor controller update")
     args = ap.parse_args()
     if args.serial and (args.deadline_ms is not None
                         or args.queue_cap is not None
                         or args.overload != "reject"):
         ap.error("--deadline-ms/--queue-cap/--overload need the "
                  "parallel scheduler; drop --serial")
+    if args.serial and (args.contextual or args.budget_rate is not None):
+        ap.error("--contextual/--budget-rate run on the parallel "
+                 "scheduler; drop --serial")
     if args.overload != "reject" and args.queue_cap is None:
         ap.error("--overload degrade only acts on a bounded queue; "
                  "set --queue-cap")
@@ -72,6 +92,9 @@ def main():
         train_steps_cap=args.train_steps, budget_frac=args.budget_frac,
         enable_cache=not args.no_cache,
         enable_prompt_adaptation=not args.no_prompt_adaptation,
+        contextual=args.contextual, entry_bar=args.entry_bar,
+        budget_rate=args.budget_rate,
+        governor_window=args.governor_window,
         router=RouterConfig(top_lists=10, sample=256)))
 
     test = synthetic.sample(args.task, args.requests, seed=77)

@@ -34,10 +34,20 @@ Modules
               queues, reject/degrade overload policies) and per-tier
               EWMA service-time estimators. The default executor behind
               ``serve_stream``/``aserve``.
+``strategy``  contextual routing + online budget governance: a
+              ``ContextualRouter`` (jax MLP over the scorer-encoder
+              embeddings) predicts each query's cascade entry tier, a
+              ``BudgetGovernor`` holds realized $/query to a target by
+              shifting the thresholds/entry bar online, and cost-aware
+              overload degradation routes degraded arrivals to the
+              cheapest tier clearing a reduced predicted bar. Composed
+              as a ``ServingStrategy`` on ``pipeline.strategy``.
 ``builder``   ``build_pipeline(BuildConfig)`` — train tiers, collect
               offline data, train the scorer, select prompts, learn the
-              cascade, assemble the pipeline. ``repro.launch.serve`` and
-              ``examples/cascade_serving.py`` are thin wrappers over it.
+              cascade, assemble the pipeline (with ``contextual=True`` /
+              ``budget_rate=`` also the strategy layer).
+              ``repro.launch.serve`` and ``examples/cascade_serving.py``
+              are thin wrappers over it.
 
 Usage
 -----
@@ -65,6 +75,11 @@ from repro.serving.ingress import (  # noqa: F401
 from repro.serving.sched import (  # noqa: F401
     SLOConfig,
     TierScheduler,
+)
+from repro.serving.strategy import (  # noqa: F401
+    BudgetGovernor,
+    ContextualRouter,
+    ServingStrategy,
 )
 from repro.serving.engine import (  # noqa: F401
     CascadeServer,

@@ -29,11 +29,20 @@ import numpy as np
 from repro.core import neural_market as NM
 from repro.core import scorer as SC
 from repro.core.approx import CompletionCache, embed_queries
+from repro.core.joint import joint_prompt_cascade
 from repro.core.prompt import PromptSpec, select_prompt
 from repro.core.router import RouterConfig, learn_cascade
 from repro.core.simulate import MarketData
 from repro.data import synthetic
 from repro.serving.pipeline import ServingPipeline, TierSpec
+from repro.serving.strategy import (BudgetGovernor, ContextualRouter,
+                                    ServingStrategy, accept_labels,
+                                    train_entry_router)
+
+#: synthetic task -> the paper dataset whose prompt shape ``core.joint``
+#: models (prompt sizes, per-example token counts, Table-1 pricing)
+_JOINT_DATASET = {"headlines": "HEADLINES", "overruling": "OVERRULING",
+                  "qa": "COQA"}
 
 
 @dataclasses.dataclass
@@ -51,6 +60,23 @@ class BuildConfig:
     enable_prompt_adaptation: bool = True
     cache_capacity: int = 1024
     cache_threshold: float = 0.995
+    cache_policy: str = "fifo"          # "fifo" ring | "lru"
+    cache_min_score: float | None = None  # score-confidence insert floor
+    # joint prompt x cascade search (core.joint) instead of greedy
+    # per-tier prompt selection: one shared prompt size chosen jointly
+    # with the cascade under the budget
+    joint_search: bool = False
+    joint_prompt_sizes: tuple | None = None   # None = 0..n_shot
+    # contextual entry routing + online budget governance
+    # (repro.serving.strategy): train a per-query entry-tier router on
+    # the offline artifacts; optionally govern spend to budget_rate
+    contextual: bool = False
+    entry_bar: float = 0.5          # predicted-accept bar to enter a tier
+    degrade_relief: float = 0.5     # bar relief factor under overload
+    router_hidden: int = 64
+    router_steps: int = 300
+    budget_rate: float | None = None  # target USD/query (None = no governor)
+    governor_window: int = 64         # queries per governor update
     # unadapted few-shot prompt shape (paper's 8-shot HEADLINES scale)
     n_shot: int = 8
     tokens_per_example: int = 110
@@ -121,10 +147,30 @@ def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
                         for j in range(k)], axis=1)
     say(f"scorer AUC: {SC.auc(s_train.reshape(-1), y):.3f}")
 
-    # 3. prompt adaptation per tier
+    # 3. prompt adaptation: greedy per-tier selection, or the joint
+    #    prompt x cascade search (one shared prompt size chosen jointly
+    #    with the cascade, core.joint) behind cfg.joint_search
     full_tokens = cfg.base_tokens + cfg.n_shot * cfg.tokens_per_example
     prompts: list[PromptSpec | None] = [None] * k
-    if cfg.enable_prompt_adaptation:
+    router = cfg.router or RouterConfig(top_lists=10, sample=256)
+    joint_report = None
+    if cfg.joint_search:
+        say("== joint prompt x cascade search ==")
+        full_priced = _reprice(data, apis, prompts, full_tokens)
+        joint_budget = float(full_priced.cost[:, -1].mean()) * cfg.budget_frac
+        sizes = (cfg.joint_prompt_sizes if cfg.joint_prompt_sizes is not None
+                 else range(cfg.n_shot + 1))
+        best, rows = joint_prompt_cascade(
+            full_priced, jnp.asarray(s_train), _JOINT_DATASET[cfg.task],
+            joint_budget, cfg=router, prompt_sizes=sizes, seed=cfg.seed)
+        n_ex = int(best["n_examples"])
+        prompts = [PromptSpec(tuple(range(n_ex)), cfg.tokens_per_example,
+                              cfg.base_tokens) for _ in range(k)]
+        joint_report = {"n_examples": n_ex, "rows": rows,
+                        "budget": joint_budget}
+        say(f"  joint winner: {n_ex}/{cfg.n_shot} examples "
+            f"(acc {best['acc']:.3f} at ${best['avg_cost']:.6f}/query)")
+    elif cfg.enable_prompt_adaptation:
         say("== greedy prompt selection per tier ==")
         for j in range(k):
             spec, _ = _select_tier_prompt(cfg, j, float(accs[j]))
@@ -137,16 +183,43 @@ def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
     say("== learning the cascade ==")
     priced = _reprice(data, apis, prompts, full_tokens)
     budget = float(priced.cost[:, -1].mean()) * cfg.budget_frac
-    router = cfg.router or RouterConfig(top_lists=10, sample=256)
     cas, metrics = learn_cascade(priced, jnp.asarray(s_train), budget, router)
     say(f"cascade: {cas.describe(data.names)} "
         f"(train acc {metrics['acc']:.3f}, ${metrics['avg_cost']:.6f}/query)")
 
-    # 5. assemble the pipeline
+    # 5. contextual strategy: entry-tier router trained on the same
+    #    offline artifacts the cascade was learned from, plus an online
+    #    budget governor when a target spend rate is set
+    strategy = None
+    entry_router = governor = None
+    if cfg.contextual:
+        say("== training the contextual entry router ==")
+        emb_train = embed_queries(sp, train.tokens, cfg=SC.SCORER_CFG)
+        y = accept_labels(s_train, np.asarray(data.correct),
+                          cas.apis, cas.thresholds)
+        rp = train_entry_router(emb_train, y, hidden=cfg.router_hidden,
+                                steps=cfg.router_steps, seed=cfg.seed)
+        entry_router = ContextualRouter(rp, len(cas.apis))
+        ent = entry_router.entry_tiers(emb_train, cfg.entry_bar)
+        say(f"  entry-tier distribution (train): "
+            f"{np.bincount(ent, minlength=len(cas.apis)).tolist()}")
+    if cfg.budget_rate is not None:
+        governor = BudgetGovernor(cfg.budget_rate, cas.thresholds,
+                                  base_bar=cfg.entry_bar,
+                                  window=cfg.governor_window)
+    if entry_router is not None or governor is not None:
+        strategy = ServingStrategy(router=entry_router, governor=governor,
+                                   entry_bar=cfg.entry_bar,
+                                   degrade_relief=cfg.degrade_relief)
+
+    # 6. assemble the pipeline
     cache = embed = None
     if cfg.enable_cache:
         cache = CompletionCache(capacity=cfg.cache_capacity,
-                                threshold=cfg.cache_threshold)
+                                threshold=cfg.cache_threshold,
+                                policy=cfg.cache_policy,
+                                min_score=cfg.cache_min_score)
+    if cfg.enable_cache or entry_router is not None:
         embed = functools.partial(embed_queries, sp, cfg=SC.SCORER_CFG)
     tiers = [TierSpec(apis[i].name, apis[i].answer, apis[i].price,
                       prompt=prompts[i]) for i in cas.apis]
@@ -157,9 +230,11 @@ def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
         tiers=tiers, thresholds=cas.thresholds,
         scorer=lambda toks, ans: SC.score(sp, toks, ans),
         cache=cache, embed=embed, full_prompt_tokens=full_tokens,
-        pad_token=synthetic.PAD, baseline_price=apis[top].price)
+        pad_token=synthetic.PAD, baseline_price=apis[top].price,
+        strategy=strategy)
     report = {"apis": apis, "data": data, "priced": priced,
               "answers": answers, "scorer": sp, "scores": s_train,
               "cascade": cas, "metrics": metrics, "budget": budget,
-              "prompts": prompts, "full_prompt_tokens": full_tokens}
+              "prompts": prompts, "full_prompt_tokens": full_tokens,
+              "strategy": strategy, "joint": joint_report}
     return pipeline, report

@@ -97,11 +97,13 @@ def pad_pow2_rows(toks: np.ndarray) -> tuple[np.ndarray, int]:
     return np.concatenate([toks, np.repeat(toks[-1:], b_pad - b, 0)]), b
 
 
-def stage1_lookup(pipeline, reqs, cache_lock=None):
+def stage1_lookup(pipeline, reqs, cache_lock=None, need_emb=False):
     """The admission stage both stream backends share: stack the burst's
     token rows, embed them (pow2-padded), and probe the completion
     cache. Returns ``(hit_mask, cached_answers, emb, embed_s, cache_s)``
-    — ``emb`` is None when the pipeline has no cache. ``cache_lock``
+    — ``emb`` is None when the pipeline has no cache, unless
+    ``need_emb`` forces the embed anyway (the contextual router routes
+    on embeddings even for cache-less pipelines). ``cache_lock``
     serializes the lookup against concurrent inserts (the parallel
     scheduler's workers); the embed call itself needs no lock (only the
     admission thread runs it)."""
@@ -109,11 +111,12 @@ def stage1_lookup(pipeline, reqs, cache_lock=None):
     hit_mask = np.zeros(len(reqs), bool)
     cached = emb = None
     embed_s = cache_s = 0.0
-    if pipeline.cache is not None:
+    if pipeline.cache is not None or need_emb:
         padded, b = pad_pow2_rows(toks)
         t0 = time.perf_counter()
         emb = np.asarray(pipeline._block(pipeline.embed(padded)))[:b]
         embed_s = time.perf_counter() - t0
+    if pipeline.cache is not None:
         t0 = time.perf_counter()
         if cache_lock is not None:
             with cache_lock:
@@ -127,7 +130,7 @@ def stage1_lookup(pipeline, reqs, cache_lock=None):
 def fold_stream_result(pipeline, requests: Sequence[RequestState], *,
                        tier_counts: Sequence[int], cache_hits: int,
                        cache_misses: int, latency: dict, total_s: float,
-                       ingress: dict):
+                       ingress: dict, strategy: dict | None = None):
     """Fold a finished stream into a ``ServeResult`` bit-compatible with
     ``ServingPipeline.serve`` (answers/cost/stopped_at indexed by
     submission order) — shared by the serial ``ContinuousBatcher`` and
@@ -158,7 +161,7 @@ def fold_stream_result(pipeline, requests: Sequence[RequestState], *,
         cache_hits=cache_hits, cache_misses=cache_misses,
         prompt_tokens_saved=pipeline._prompt_saved(tier_counts),
         baseline_cost=pipeline._baseline_cost(toks) if n else 0.0,
-        latency=lat, ingress=ingress)
+        latency=lat, ingress=ingress, strategy=strategy)
 
 
 @dataclasses.dataclass
@@ -175,7 +178,9 @@ class RequestState:
     score: float = float("nan")     # accept-time reliability score
     deadline: float | None = None   # absolute SLO deadline (stream clock)
     shed: bool = False              # dropped by the overload policy
-    degraded: bool = False          # pinned to the cheapest tier (overload)
+    degraded: bool = False          # overload-degraded (reduced entry bar)
+    entry: int = 0                  # cascade entry position (router)
+    pred_accept: float | None = None  # router's accept prob at the entry
     t_admitted: float | None = None
     t_done: float | None = None
     t_enqueued: float = 0.0         # entered the current tier's wait queue

@@ -108,6 +108,11 @@ class ServeResult:
     # scheduler adds per-tier utilization/EWMA estimates, deadline-hit
     # rate, shed/degraded counts and queue peaks
     ingress: dict | None = None
+    # contextual-strategy telemetry (pipelines with a ServingStrategy):
+    # entry-tier histogram, realized spend rate, predicted-vs-realized
+    # accept rate, governor state + threshold trace — cumulative over
+    # the strategy's lifetime (it outlives individual batches/streams)
+    strategy: dict | None = None
 
     @property
     def n(self) -> int:
@@ -146,6 +151,14 @@ class ServeResult:
             if self.ingress.get("shed") or self.ingress.get("degraded"):
                 extra += (f" | overload: {self.ingress['shed']} shed, "
                           f"{self.ingress['degraded']} degraded")
+        if self.strategy is not None:
+            extra += (f" | entry tiers {self.strategy['entry_hist']} "
+                      f"(bar {self.strategy['entry_bar']:.2f}) | spend "
+                      f"${self.strategy['spend_rate']:.6f}/q")
+            gov = self.strategy.get("governor")
+            if gov is not None:
+                extra += (f" vs ${gov['budget_rate']:.6f} target "
+                          f"(shift {gov['shift']:+.3f})")
         return (
             f"served {self.n} queries | cache hit rate "
             f"{self.cache_hit_rate:.2f} ({self.cache_hits} hits) | "
@@ -172,11 +185,21 @@ class ServingPipeline:
     # must not default to whatever tier happens to be last in the cascade
     baseline_price: ApiCost | None = None
     baseline_n_out: int = 1
+    # contextual routing + budget governance (repro.serving.strategy):
+    # a ServingStrategy, or None for the classic fixed cascade — every
+    # serving path is bit-identical to the fixed cascade when unset
+    strategy: object | None = None
 
     def __post_init__(self):
         if self.cache is not None and self.embed is None:
             raise ValueError("a completion cache needs an embed function "
                              "(reuse the scorer encoder, see builder)")
+        if (self.strategy is not None
+                and getattr(self.strategy, "router", None) is not None
+                and self.embed is None):
+            raise ValueError("a contextual router routes on embeddings: "
+                             "give the pipeline an embed function (reuse "
+                             "the scorer encoder, see builder)")
 
     @staticmethod
     def _block(x):
@@ -269,14 +292,32 @@ class ServingPipeline:
             miss = np.flatnonzero(~hit_mask)
             latency["cache"] = time.perf_counter() - t
 
+        # stage 2.5: contextual entry routing (strategy layer) — the
+        # router predicts each miss's cascade entry position from the
+        # same embeddings the cache keys on; the governor supplies the
+        # current (budget-adjusted) thresholds
+        strat = self.strategy
+        entries = probs = None
+        thresholds = self.thresholds
+        if strat is not None:
+            thresholds = strat.thresholds(self.thresholds)
+            if getattr(strat, "router", None) is not None and len(miss):
+                if emb is None:             # no cache stage ran: embed now
+                    t = time.perf_counter()
+                    emb = np.asarray(self._block(self.embed(tokens)))
+                    latency["embed"] = time.perf_counter() - t
+                t = time.perf_counter()
+                entries, probs = strat.route(emb[miss])
+                latency["route"] = time.perf_counter() - t
+
         # stages 2+3: adapted prompts + cascade over the misses
         t = time.perf_counter()
         tier_counts = [0] * len(self.tiers)
         res_ans = np.zeros(0, np.int32)
         if len(miss):
-            res = execute_cascade(self._cascade_tiers(), self.thresholds,
+            res = execute_cascade(self._cascade_tiers(), thresholds,
                                   self._pos_scorer, tokens[miss],
-                                  batch_size=self.batch_size)
+                                  batch_size=self.batch_size, entry=entries)
             res_ans = np.asarray(res["answers"])
             cost[miss] = res["cost"]
             stopped_at[miss] = res["stopped_at"]
@@ -290,6 +331,16 @@ class ServingPipeline:
             self._cache_insert(emb[miss], res_ans, res["scores"])
             latency["insert"] = time.perf_counter() - t
 
+        # feed the strategy: cache hits are zero-cost served queries,
+        # misses carry entry/accept telemetry when the router routed them
+        strategy_snap = None
+        if strat is not None:
+            strat.observe_batch(cost[hit_idx])
+            if len(miss):
+                strat.observe_batch(cost[miss], entries,
+                                    stopped_at[miss], probs)
+            strategy_snap = strat.snapshot(len(self.tiers))
+
         latency["total"] = time.perf_counter() - t0
         return ServeResult(
             answers=answers, cost=cost, stopped_at=stopped_at,
@@ -298,7 +349,7 @@ class ServingPipeline:
             cache_hits=hits, cache_misses=len(miss),
             prompt_tokens_saved=self._prompt_saved(tier_counts),
             baseline_cost=self._baseline_cost(tokens),
-            latency=latency)
+            latency=latency, strategy=strategy_snap)
 
     # -- continuous-batching entry points (ingress + sched subsystems) -----
     def _stream_backend(self, max_chunk, holdback, parallel, slo):
@@ -322,6 +373,10 @@ class ServingPipeline:
         if slo is not None:
             raise ValueError("SLO config needs the parallel scheduler "
                              "(parallel=True)")
+        if self.strategy is not None:
+            raise ValueError("a contextual strategy runs on the parallel "
+                             "scheduler (parallel=True); the serial "
+                             "batcher is the fixed-cascade reference")
         return ContinuousBatcher(self, max_chunk=max_chunk,
                                  holdback=0.02 if holdback is None
                                  else holdback)

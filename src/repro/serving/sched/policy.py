@@ -10,12 +10,17 @@ Three decisions live here, kept separate from the worker machinery in
     (now + safety x EWMA service time) would miss its deadline, capped
     by ``max_holdback_s`` for requests without deadlines.
   * **admission under overload** (``admit_decision``) — bounded-queue
-    backpressure. When tier 0's wait queue hits ``queue_cap`` the
-    overload policy decides: ``"reject"`` sheds the arrival outright;
-    ``"degrade"`` admits it pinned to the cheapest tier (its answer is
-    accepted regardless of score — the paper's cost/accuracy dial
-    applied to load: under pressure you trade accuracy, not
-    availability), shedding only past a hard 2x cap.
+    backpressure. When the entry tier's wait queue hits ``queue_cap``
+    the overload policy decides: ``"reject"`` sheds the arrival
+    outright; ``"degrade"`` admits it at a degraded entry (the cheapest
+    tier by default; the cheapest tier clearing a reduced predicted-
+    accept bar when a contextual router is attached — its answer is
+    accepted regardless of score: the paper's cost/accuracy dial
+    applied to load), shedding only past a hard 2x cap. With
+    ``predictive_shed`` on, an arrival whose *predicted* completion
+    (EWMA queue delay + safety x EWMA service time) would already miss
+    its deadline is shed before the queue ever fills — queue length is
+    a lagging overload signal, the wait estimate is a leading one.
   * **per-request deadlines** (``SLOConfig.deadline_for``) — an
     explicit per-request deadline wins; otherwise ``deadline_s`` sets
     one relative to arrival; otherwise no deadline (pure fill-driven
@@ -48,8 +53,12 @@ class SLOConfig:
     init_service_s: float = 0.0
     #: bounded per-tier wait queue; None = unbounded (no backpressure)
     queue_cap: int | None = None
-    #: what to do with arrivals once tier 0's queue is full
+    #: what to do with arrivals once the entry tier's queue is full
     overload: str = "reject"
+    #: shed arrivals whose predicted completion (EWMA queue delay +
+    #: safety x EWMA service) would miss their deadline — leading-signal
+    #: shedding, acts before any queue fills (needs deadlines to bite)
+    predictive_shed: bool = False
 
     def __post_init__(self):
         if self.overload not in OVERLOAD_POLICIES:
@@ -94,8 +103,31 @@ def holdback_timeout(head, est, now: float, slo: SLOConfig) -> float:
     return min(t_age, t_slo)
 
 
-def admit_decision(queue_len: int, slo: SLOConfig) -> str:
-    """Admission verdict for one arrival given tier 0's queue length."""
+def admit_decision(queue_len: int, slo: SLOConfig, *, est=None,
+                   now: float | None = None,
+                   deadline: float | None = None) -> str:
+    """Admission verdict for one arrival given its entry tier's queue
+    length — and, with ``predictive_shed``, the tier's estimator: an
+    arrival predicted to finish past its deadline (now + EWMA queue
+    delay + safety x EWMA service time) is shed while the queue is
+    still short, instead of waiting for the lagging queue-length signal.
+    The estimator must have observed at least one chunk (a cold tier
+    never predictively sheds — the first dispatch trains it)."""
+    if (slo.predictive_shed and est is not None and now is not None
+            and deadline is not None and est.service.n):
+        wait = est.queue_delay.value
+        service = slo.service_safety * est.predicted_service(
+            slo.init_service_s)
+        if now + wait + service > deadline:
+            # under the 'degrade' contract (trade accuracy, not
+            # availability) a predicted miss on the *routed* tier may
+            # still be answerable in time on a cheaper one: degrade
+            # within the hard 2x bound instead of shedding outright
+            if slo.overload == "degrade":
+                cap = slo.queue_cap
+                return (DEGRADE if cap is None or queue_len < 2 * cap
+                        else SHED)
+            return SHED
     cap = slo.queue_cap
     if cap is None or queue_len < cap:
         return ADMIT

@@ -27,9 +27,17 @@ Scheduling policy (``sched.policy``):
     escalation into a full downstream queue blocks that tier's worker
     (escalations flow strictly forward, so blocking cannot deadlock);
     the stall propagates upstream until admission applies the overload
-    policy: ``reject`` sheds arrivals, ``degrade`` pins them to the
-    cheapest tier (answer accepted regardless of score — the paper's
-    cost/accuracy dial applied to load).
+    policy: ``reject`` sheds arrivals, ``degrade`` admits them at a
+    degraded entry — the cheapest tier whose *predicted* accept
+    probability clears a reduced bar when a contextual router is
+    attached, tier 0 otherwise — with the answer accepted regardless
+    of score (the paper's cost/accuracy dial applied to load).
+
+With a ``ServingStrategy`` on the pipeline (``repro.serving.strategy``)
+the scheduler additionally routes each admitted miss to its predicted
+entry tier, reads governor-adjusted thresholds at dispatch, and feeds
+every finished request's cost back to the governor; with no strategy
+every decision is bit-identical to the fixed cascade.
 
 Concurrency contract (see ``tier_step``): each tier's ``invoke`` is
 only ever entered by that tier's worker, so tier backends (e.g. a
@@ -91,6 +99,11 @@ class TierScheduler:
         if m == 0:
             raise ValueError("pipeline has no tiers")
         self._tiers = pipeline._cascade_tiers()
+        # contextual strategy (repro.serving.strategy): entry-tier
+        # routing at admission, governor-adjusted thresholds at
+        # dispatch, predicted-score degradation under overload; None
+        # keeps every decision bit-identical to the fixed cascade
+        self._strategy = pipeline.strategy
 
         # one lock + condition guards every field below; chunk compute,
         # embedding and cache traffic all happen OUTSIDE it
@@ -127,13 +140,24 @@ class TierScheduler:
 
     # -- admission (driver thread) -----------------------------------------
     def _admit(self, reqs: Sequence[RequestState], now: float):
-        """Stage-1 a burst of arrivals: embed + cache lookup outside the
-        lock; then, under it, resolve hits, apply the overload policy,
-        and queue the admitted misses on tier 0."""
+        """Stage-1 a burst of arrivals: embed + cache lookup (and, with
+        a contextual router, entry-tier prediction) outside the lock;
+        then, under it, resolve hits, apply the overload policy, and
+        queue each admitted miss on its entry tier (tier 0 without a
+        router — bit-identical to the fixed cascade)."""
         if not reqs:
             return
+        strat = self._strategy
+        routed = (strat is not None
+                  and getattr(strat, "router", None) is not None)
         hit_mask, cached, emb, embed_s, cache_s = stage1_lookup(
-            self.pipeline, reqs, cache_lock=self._cache_mu)
+            self.pipeline, reqs, cache_lock=self._cache_mu,
+            need_emb=routed)
+        entries = probs = None
+        if routed:
+            entries, probs = strat.route(emb)
+        m = len(self._tiers)
+        keep_emb = self.pipeline.cache is not None
         with self._cv:
             self.latency["embed"] += embed_s
             self.latency["cache"] += cache_s
@@ -149,14 +173,36 @@ class TierScheduler:
                     r.stopped_at = -1
                     self._finish_locked(r, now)
                     continue
-                verdict = admit_decision(len(self._waiting[0]), self.slo)
+                j0 = int(entries[i]) if entries is not None else 0
+                verdict = admit_decision(
+                    len(self._waiting[j0]), self.slo,
+                    est=self.estimators[j0], now=now, deadline=r.deadline)
                 if verdict == ADMIT or verdict == DEGRADE:
                     if verdict == DEGRADE:
+                        # cost-aware degradation: cheapest tier whose
+                        # predicted accept clears the reduced bar
+                        # (tier 0 without a router, as before). The
+                        # re-target must honour the hard 2x bound on
+                        # ITS queue too — degrading into a different
+                        # tier must not create an unbounded queue.
+                        j0 = (strat.degrade_entry(probs[i], m)
+                              if probs is not None else 0)
+                        cap = self.slo.queue_cap
+                        if (cap is not None
+                                and len(self._waiting[j0]) >= 2 * cap):
+                            r.shed = True
+                            r.stopped_at = -2
+                            self.shed_count += 1
+                            self._finish_locked(r, now)
+                            continue
                         r.degraded = True
                         self.degraded_count += 1
-                    if emb is not None:     # only queued misses keep the
+                    r.entry = j0
+                    if probs is not None:
+                        r.pred_accept = float(probs[i, j0])
+                    if keep_emb:            # only queued misses keep the
                         r.emb = emb[i]      # embedding (insert-on-finish);
-                    self._enqueue_locked(r, 0, now)
+                    self._enqueue_locked(r, j0, now)
                 else:                       # shed: nothing to insert, so
                     r.shed = True           # don't pin the row for the
                     r.stopped_at = -2       # scheduler's lifetime
@@ -180,6 +226,15 @@ class TierScheduler:
             self.deadline_total += 1
             if now <= r.deadline:
                 self.deadline_hits += 1
+        if self._strategy is not None and not r.shed:
+            if r.stopped_at == -1:          # cache hit: zero-cost serve
+                self._strategy.observe_request(r.cost)
+            elif r.degraded:                # forced accept: no signal for
+                self._strategy.observe_request(r.cost, entry=r.entry)
+            else:                           # the accept-rate telemetry
+                self._strategy.observe_request(
+                    r.cost, entry=r.entry, pred=r.pred_accept,
+                    accepted=(r.stopped_at == r.entry))
         if r.future is not None:
             # workers are plain threads: hand resolution to the loop
             r.future.get_loop().call_soon_threadsafe(
@@ -222,11 +277,16 @@ class TierScheduler:
         pipe = self.pipeline
         clock = self._clock
         last = j == len(self._tiers) - 1
+        # the governor retunes thresholds between windows: read the
+        # current set at dispatch (a plain tuple swap — racing an update
+        # just means this chunk uses the previous window's thresholds)
+        thresholds = (self._strategy.thresholds(pipe.thresholds)
+                      if self._strategy is not None else pipe.thresholds)
         toks, b = pad_pow2_rows(np.stack([r.tokens for r in batch]))
         t0 = time.perf_counter()
         ans, cost, scores, accept = tier_step(
             self._tiers[j], toks, j, scorer=pipe._pos_scorer,
-            threshold=None if last else pipe.thresholds[j], last=last,
+            threshold=None if last else thresholds[j], last=last,
             scorer_lock=self._scorer_mu)
         ans, cost, scores, accept = (ans[:b], cost[:b], scores[:b],
                                      accept[:b])
@@ -407,4 +467,6 @@ class TierScheduler:
             self.pipeline, self._requests, tier_counts=self.tier_counts,
             cache_hits=self.cache_hits, cache_misses=self.cache_misses,
             latency=self.latency, total_s=total_s,
-            ingress=self.stats(total_s))
+            ingress=self.stats(total_s),
+            strategy=(self._strategy.snapshot(len(self._tiers))
+                      if self._strategy is not None else None))

@@ -1,0 +1,155 @@
+"""``repro.serving.strategy`` — contextual routing + online budget
+governance: the decision layer between ingress and the cascade.
+
+FrugalGPT learns one static ``(L, tau)`` offline; every query then
+enters the cascade at tier 0 under thresholds frozen at build time. This
+package makes both decisions *per query* and *per window*:
+
+``router``    ``ContextualRouter`` — a small jax MLP over the
+              scorer-encoder embeddings predicting, per query, each
+              cascade position's accept probability; queries enter at
+              the cheapest position clearing the entry bar (hard
+              queries skip dead-weight cheap tiers entirely).
+``governor``  ``BudgetGovernor`` — an online dual controller tracking
+              realized $/query against a target spend rate, shifting
+              the cascade thresholds and the router's entry bar every
+              window so long-run cost stays on budget under traffic
+              drift.
+``degrade``   cost-aware overload degradation — degraded arrivals go to
+              the cheapest tier whose *predicted* accept probability
+              clears a reduced bar, replacing the unconditional
+              pin-to-tier-0.
+
+``ServingStrategy`` composes the three and is what a
+``ServingPipeline`` carries (``pipeline.strategy``); with it unset the
+serving paths are bit-identical to the fixed cascade. Built by
+``serving.builder.build_pipeline(BuildConfig(contextual=True, ...))``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.serving.strategy.degrade import degrade_entry  # noqa: F401
+from repro.serving.strategy.governor import BudgetGovernor  # noqa: F401
+from repro.serving.strategy.router import (  # noqa: F401
+    ContextualRouter,
+    accept_labels,
+    train_entry_router,
+)
+
+
+@dataclasses.dataclass
+class ServingStrategy:
+    """Router + governor + degradation policy for one pipeline.
+
+    Carries lifetime telemetry (entry-tier histogram, spend rate,
+    predicted-vs-realized accept counters) across everything served
+    through the owning pipeline. Mutation (``observe_request`` /
+    ``observe_batch``) must be serialized by the caller — the parallel
+    scheduler does it under its own lock, the batch path is
+    single-threaded.
+    """
+
+    router: ContextualRouter | None = None
+    governor: BudgetGovernor | None = None
+    entry_bar: float = 0.5              # static bar when no governor
+    degrade_relief: float = 0.5
+
+    def __post_init__(self):
+        if self.router is None and self.governor is None:
+            raise ValueError("a ServingStrategy needs a router and/or a "
+                             "governor; with neither it is a no-op — "
+                             "leave pipeline.strategy unset instead")
+        self._entry_hist: dict[int, int] = {}
+        self._cost_sum = 0.0
+        self._n_served = 0
+        self._pred_sum = 0.0
+        self._accept_sum = 0
+        self._accept_n = 0
+
+    # -- decisions ---------------------------------------------------------
+    def current_bar(self) -> float:
+        return (self.governor.entry_bar() if self.governor is not None
+                else self.entry_bar)
+
+    def thresholds(self, base) -> tuple:
+        return (self.governor.thresholds() if self.governor is not None
+                else tuple(base))
+
+    def route(self, emb: np.ndarray):
+        """(entry (n,) int32, probs (n, m) | None) for a batch of
+        embeddings; without a router everything enters at tier 0."""
+        n = len(emb)
+        if self.router is None:
+            return np.zeros(n, np.int32), None
+        probs = self.router.predict(emb)
+        return self.router.entry_tiers(emb, self.current_bar(),
+                                       probs=probs), probs
+
+    def degrade_entry(self, probs_row, n_tiers: int) -> int:
+        """Entry tier for one overload-degraded arrival."""
+        if self.router is None:
+            return degrade_entry(None, 0.0)
+        return degrade_entry(probs_row, self.current_bar(),
+                             self.degrade_relief, n_tiers)
+
+    # -- observation (caller-serialized) -----------------------------------
+    def observe_request(self, cost: float, entry: int | None = None,
+                        pred: float | None = None,
+                        accepted: bool | None = None):
+        """One served (non-shed) request: ``cost`` feeds the spend rate
+        and governor; ``entry`` the histogram; ``pred``/``accepted``
+        the predicted-vs-realized accept-rate telemetry (pass them only
+        for normally-routed requests — degraded requests force-accept,
+        and cache hits never entered the cascade)."""
+        self._cost_sum += float(cost)
+        self._n_served += 1
+        if self.governor is not None:
+            self.governor.observe(float(cost))
+        if entry is not None:
+            e = int(entry)
+            self._entry_hist[e] = self._entry_hist.get(e, 0) + 1
+        if pred is not None and accepted is not None:
+            self._pred_sum += float(pred)
+            self._accept_sum += int(bool(accepted))
+            self._accept_n += 1
+
+    def observe_batch(self, costs, entries=None, stopped_at=None,
+                      probs=None):
+        """Vectorized ``observe_request`` for the closed-batch path:
+        ``stopped_at == entries`` is the realized accept. With
+        ``entries=None`` only the costs are observed (cache hits, or a
+        governor-only strategy)."""
+        costs = np.asarray(costs, np.float64)
+        if entries is None:
+            for c in costs:
+                self.observe_request(float(c))
+            return
+        entries = np.asarray(entries)
+        stopped_at = np.asarray(stopped_at)
+        for i in range(len(costs)):
+            pred = (float(probs[i, entries[i]]) if probs is not None
+                    else None)
+            self.observe_request(
+                costs[i], entry=int(entries[i]), pred=pred,
+                accepted=(bool(stopped_at[i] == entries[i])
+                          if pred is not None else None))
+
+    # -- telemetry ---------------------------------------------------------
+    def snapshot(self, n_tiers: int) -> dict:
+        hist = [self._entry_hist.get(j, 0) for j in range(n_tiers)]
+        return {
+            "entry_hist": hist,
+            "n_routed": int(sum(hist)),
+            "spend_rate": (self._cost_sum / self._n_served
+                           if self._n_served else 0.0),
+            "entry_bar": self.current_bar(),
+            "predicted_accept_rate": (self._pred_sum / self._accept_n
+                                      if self._accept_n else None),
+            "realized_accept_rate": (self._accept_sum / self._accept_n
+                                     if self._accept_n else None),
+            "governor": (self.governor.snapshot()
+                         if self.governor is not None else None),
+        }

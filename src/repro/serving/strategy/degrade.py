@@ -1,0 +1,45 @@
+"""Cost-aware overload degradation.
+
+The scheduler's original ``degrade`` overload policy pinned every
+overflow arrival to tier 0 unconditionally — availability preserved, but
+a hard query gets the cheapest tier's (likely wrong) answer even when a
+mid-priced tier would have served it acceptably. With a contextual
+router available, overload can instead route each arrival to the
+*cheapest tier whose predicted accept probability clears a reduced bar*
+(the normal entry bar scaled by ``relief`` < 1): easy queries still land
+on tier 0, hard queries land on the cheapest tier the router believes in
+at the relaxed standard, and only the router's final-position fallback
+sends anything to the top tier under load.
+
+The degraded request's answer is still accepted regardless of its
+realized score — overload trades accuracy, not availability — and, as
+before, a forced answer is never inserted into the completion cache.
+
+Without a router (``probs is None``), this degrades — appropriately — to
+the legacy pin-to-tier-0 behaviour.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def degrade_entry(probs, bar: float, relief: float = 0.5,
+                  n_tiers: int = 1) -> int:
+    """Entry tier for ONE overload-degraded arrival.
+
+    probs: (m,) predicted accept probabilities from the contextual
+    router, or None (no router -> legacy tier 0). ``bar`` is the current
+    entry bar (governor-adjusted); ``relief`` in (0, 1] scales it down —
+    under overload a tier only needs to clear ``bar * relief``.
+    """
+    if probs is None:
+        return 0
+    if not 0.0 < relief <= 1.0:
+        raise ValueError(f"relief must be in (0, 1], got {relief}")
+    p = np.asarray(probs, np.float64).ravel()
+    if len(p) != n_tiers:
+        raise ValueError(f"got {len(p)} tier probabilities for "
+                         f"{n_tiers} tiers")
+    clears = p >= bar * relief
+    clears[-1] = True                    # final position catches everything
+    return int(np.argmax(clears))

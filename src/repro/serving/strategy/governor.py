@@ -1,0 +1,140 @@
+"""Online budget governor: dual-controller threshold adaptation.
+
+The builder learns ``(L, tau)`` offline under a *training-distribution*
+budget. Live traffic drifts — a harder query mix escalates more, and the
+fixed cascade quietly overspends (or underspends accuracy it could
+afford). The governor closes the loop: it tracks the realized $/query on
+the live stream and solves the budgeted-accuracy trade-off's dual
+problem online — a Lagrange-style multiplier ``lam`` integrates the
+window-level budget error, and a bounded monotone map turns it into one
+scalar *shift* applied to every control surface:
+
+  * cascade thresholds: ``tau_j - shift`` — a positive shift (spending
+    over target) lowers the accept bars, keeping more traffic on cheap
+    tiers; a negative shift raises them, converting spare budget into
+    accuracy;
+  * the contextual router's entry bar: ``bar - shift`` — the same dial
+    applied to where queries *enter* the cascade.
+
+Both updates happen once per ``window`` observed queries, so the
+controller reacts within a few windows of a drift and cannot thrash on
+single-query noise. ``shift`` saturates at ``max_shift`` (tanh), so a
+persistent infeasible target degrades gracefully instead of slamming
+every threshold to 0/1.
+
+The governor is deliberately dumb about *why* spend moved — traffic mix,
+tier pricing, cache hit-rate collapse all look the same through the
+realized rate, which is exactly what makes the control robust.
+
+Concurrency: mutate (``observe``) under one caller-side serialization
+domain — the parallel scheduler calls it under its own lock, the batch
+path is single-threaded. Reads (``thresholds``/``entry_bar``) return
+freshly-built tuples/floats and may race an update harmlessly.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class BudgetGovernor:
+    """Tracks realized $/query against ``budget_rate`` and shifts the
+    cascade thresholds + router entry bar to hold it."""
+
+    budget_rate: float                  # target USD per served query
+    base_thresholds: tuple              # the learned (offline) taus
+    base_bar: float = 0.5               # the router's entry bar
+    window: int = 64                    # queries per controller update
+    eta: float = 0.5                    # dual step size (per window)
+    max_shift: float = 0.35             # saturation of the threshold shift
+    lam_max: float = 4.0                # dual variable clip
+    trace_len: int = 256                # most recent windows kept in trace
+
+    def __post_init__(self):
+        if self.budget_rate <= 0:
+            raise ValueError(f"budget_rate must be > 0, got "
+                             f"{self.budget_rate}")
+        if self.window < 1:
+            raise ValueError(f"window must be >= 1, got {self.window}")
+        if not 0.0 < self.max_shift <= 1.0:
+            raise ValueError("max_shift must be in (0, 1]")
+        self.base_thresholds = tuple(float(t) for t in self.base_thresholds)
+        self.lam = 0.0
+        self.shift = 0.0
+        self._win_cost = 0.0
+        self._win_n = 0
+        self._total_cost = 0.0
+        self._total_n = 0
+        # one snapshot per window update; bounded — the governor
+        # outlives individual batches/streams, so an unbounded trace
+        # (and its per-snapshot copy) would grow with service lifetime
+        self.trace: collections.deque = collections.deque(
+            maxlen=self.trace_len)
+
+    # -- observation -------------------------------------------------------
+    def observe(self, cost: float, n: int = 1):
+        """Record ``n`` served queries costing ``cost`` USD in total;
+        runs a controller update whenever a window fills."""
+        self._win_cost += float(cost)
+        self._win_n += int(n)
+        self._total_cost += float(cost)
+        self._total_n += int(n)
+        while self._win_n >= self.window:
+            self._update()
+
+    def observe_many(self, costs) -> None:
+        costs = np.asarray(costs, np.float64)
+        if len(costs):
+            self.observe(float(costs.sum()), len(costs))
+
+    def _update(self):
+        """Consume ONE window's worth of observations (a batched observe
+        can span several windows — each gets its own dual step, at the
+        pool's average rate)."""
+        realized = self._win_cost / self._win_n
+        err = (realized - self.budget_rate) / self.budget_rate
+        self.lam = float(np.clip(self.lam + self.eta * err,
+                                 -self.lam_max, self.lam_max))
+        self.shift = float(self.max_shift * np.tanh(self.lam))
+        self.trace.append({
+            "n_seen": self._total_n,
+            "window_rate": realized,
+            "lam": self.lam,
+            "shift": self.shift,
+            "thresholds": self.thresholds(),
+        })
+        self._win_cost -= realized * self.window
+        self._win_n -= self.window
+        if self._win_n <= 0:
+            self._win_cost = 0.0
+            self._win_n = 0
+
+    # -- control surfaces --------------------------------------------------
+    def thresholds(self) -> tuple:
+        """Current cascade accept thresholds (len = m - 1)."""
+        return tuple(float(np.clip(t - self.shift, 0.0, 1.0))
+                     for t in self.base_thresholds)
+
+    def entry_bar(self) -> float:
+        """Current contextual-router entry bar."""
+        return float(np.clip(self.base_bar - self.shift, 0.0, 1.0))
+
+    # -- telemetry ---------------------------------------------------------
+    def realized_rate(self) -> float:
+        """Lifetime $/query over everything observed."""
+        return self._total_cost / self._total_n if self._total_n else 0.0
+
+    def snapshot(self) -> dict:
+        return {
+            "budget_rate": self.budget_rate,
+            "realized_rate": self.realized_rate(),
+            "n_observed": self._total_n,
+            "lam": self.lam,
+            "shift": self.shift,
+            "thresholds": self.thresholds(),
+            "entry_bar": self.entry_bar(),
+            "trace": list(self.trace),
+        }

@@ -1,0 +1,145 @@
+"""Contextual entry-tier routing: per-query cascade entry prediction.
+
+FrugalGPT's cascade enters every query at tier 0 and climbs until a
+score clears the tier's threshold. That is already adaptive *per query*
+— but only after paying for every tier below the stopping one. The
+contextual router closes that gap (Zhang et al., budget-constrained
+contextual cascade policy learning; Šakota et al., "fly-swat or
+cannon"): a small jax MLP over the scorer-encoder embeddings predicts,
+per query, the probability that each cascade position's answer would be
+*accepted* (score >= tau at non-final positions; correct at the final
+one). A query then enters at the cheapest position whose predicted
+accept probability clears the entry bar — easy queries still start at
+tier 0, hard queries skip the cheap tiers that were dead weight for
+them, and the skipped calls are pure cost savings.
+
+Training data is free: the builder already collects offline
+``MarketData`` plus per-(query, api) reliability scores to learn
+``(L, tau)``; the same matrices labelled against the learned thresholds
+supervise the router (``accept_labels``). The embedding is the same
+scorer-encoder embedding the completion cache keys on
+(``core.approx.embed_queries``) — no extra model.
+
+The entry bar is a runtime dial: the online budget governor
+(``strategy.governor``) nudges it together with the cascade thresholds
+to keep the realized spend rate on target.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training.optim import OptConfig, adamw_update, init_opt_state
+
+
+def _mlp_forward(params, emb):
+    """(n, d) embeddings -> (n, m) per-position accept logits."""
+    h = jax.nn.gelu(emb @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+@functools.cache
+def _jitted_forward():
+    """One jitted forward shared by every router instance — shapes are
+    part of the jit cache key, so routers of different widths coexist."""
+    return jax.jit(_mlp_forward)
+
+
+def init_router_params(key, d_in: int, n_tiers: int, hidden: int = 64):
+    k1, k2 = jax.random.split(key)
+    scale = 1.0 / np.sqrt(d_in)
+    return {
+        "w1": scale * jax.random.normal(k1, (d_in, hidden)),
+        "b1": jnp.zeros((hidden,)),
+        "w2": 0.02 * jax.random.normal(k2, (hidden, n_tiers)),
+        "b2": jnp.zeros((n_tiers,)),
+    }
+
+
+def accept_labels(scores: np.ndarray, correct: np.ndarray,
+                  apis, thresholds) -> np.ndarray:
+    """Supervision for the entry router from offline build artifacts.
+
+    scores (n, K): reliability scores g(q, a_k) on the marketplace;
+    correct (n, K): recorded correctness; apis/thresholds: the learned
+    cascade. Returns (n, m) 0/1 — column j says "tier j's answer would
+    be accepted": score >= tau_j at non-final positions, correctness at
+    the final position (which accepts unconditionally, so its label is
+    whether *entering there* would answer well).
+    """
+    scores = np.asarray(scores)
+    correct = np.asarray(correct)
+    m = len(apis)
+    y = np.zeros((scores.shape[0], m), np.float32)
+    for j, a in enumerate(apis):
+        if j < m - 1:
+            y[:, j] = (scores[:, a] >= thresholds[j]).astype(np.float32)
+        else:
+            y[:, j] = correct[:, a]
+    return y
+
+
+def train_entry_router(emb: np.ndarray, labels: np.ndarray, *,
+                       hidden: int = 64, steps: int = 300, batch: int = 256,
+                       lr: float = 3e-3, seed: int = 0) -> dict:
+    """Train the per-position accept predictor with BCE; returns params.
+
+    emb (n, d) scorer-encoder embeddings; labels (n, m) from
+    ``accept_labels``.
+    """
+    emb = jnp.asarray(emb, jnp.float32)
+    labels = jnp.asarray(labels, jnp.float32)
+    n, d = emb.shape
+    params = init_router_params(jax.random.PRNGKey(seed), d,
+                                labels.shape[1], hidden)
+    opt = OptConfig(lr=lr, warmup=10, total_steps=steps, weight_decay=1e-4)
+    state = init_opt_state(params)
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step_fn(params, state, x, y):
+        def loss_fn(p):
+            logit = _mlp_forward(p, x)
+            return jnp.mean(jnp.maximum(logit, 0) - logit * y
+                            + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, state, _ = adamw_update(opt, params, grads, state)
+        return params, state, loss
+
+    for _ in range(steps):
+        idx = rng.choice(n, size=min(batch, n), replace=False)
+        params, state, _ = step_fn(params, state, emb[idx], labels[idx])
+    return params
+
+
+@dataclasses.dataclass
+class ContextualRouter:
+    """Trained entry-tier predictor over scorer-encoder embeddings.
+
+    ``predict`` returns per-position accept probabilities; ``entry_tiers``
+    applies the entry rule: the cheapest (lowest) cascade position whose
+    predicted accept probability clears ``bar`` — the final position
+    catches everything (it accepts unconditionally at serve time).
+    """
+
+    params: dict
+    n_tiers: int
+
+    def predict(self, emb: np.ndarray) -> np.ndarray:
+        """emb (n, d) -> accept probabilities (n, m) float64."""
+        emb = np.atleast_2d(np.asarray(emb, np.float32))
+        logits = _jitted_forward()(self.params, jnp.asarray(emb))
+        return np.asarray(jax.nn.sigmoid(logits), np.float64)
+
+    def entry_tiers(self, emb: np.ndarray, bar: float,
+                    probs: np.ndarray | None = None) -> np.ndarray:
+        """(n,) int32 entry positions; pass ``probs`` to reuse a
+        ``predict`` result instead of re-running the forward."""
+        p = self.predict(emb) if probs is None else np.atleast_2d(probs)
+        clears = p >= bar
+        clears[:, -1] = True                   # final position catches all
+        return np.asarray(clears.argmax(1), np.int32)

@@ -1,0 +1,536 @@
+"""Contextual routing + online budget governor (repro.serving.strategy):
+router/governor/degrade units, cascade entry support, pipeline and
+scheduler integration, estimator-driven predictive shedding, the
+builder's strategy/joint/cache knobs, and core.router frontier /
+cost_to_match coverage."""
+import numpy as np
+import pytest
+
+from repro.core.cascade import CascadeTier, evaluate_offline, execute_cascade
+from repro.core.cost import ApiCost
+from repro.core.router import RouterConfig, cost_to_match, frontier
+from repro.core.simulate import simulate_market, simulate_scores, split_market
+from repro.serving.pipeline import ServingPipeline, TierSpec
+from repro.serving.sched import SLOConfig, TierScheduler, admit_decision
+from repro.serving.sched.estimator import TierEstimator
+from repro.serving.strategy import (BudgetGovernor, ContextualRouter,
+                                    ServingStrategy, accept_labels,
+                                    degrade_entry, train_entry_router)
+
+D = 8          # toy embedding width
+
+
+def _toy_router(n_tiers=2, seed=0, steps=250):
+    """Router trained on separable features: emb[0] > 0 => tier 0
+    accepts. Returns (router, sampler) where sampler(n) draws fresh
+    feature rows."""
+    rng = np.random.default_rng(seed)
+    emb = rng.normal(size=(600, D)).astype(np.float32)
+    labels = np.zeros((600, n_tiers), np.float32)
+    labels[:, 0] = emb[:, 0] > 0
+    for j in range(1, n_tiers):
+        labels[:, j] = 1.0
+    params = train_entry_router(emb, labels, steps=steps, seed=seed)
+    return ContextualRouter(params, n_tiers)
+
+
+# ---------------------------------------------------------------------------
+# router units
+# ---------------------------------------------------------------------------
+
+
+def test_router_learns_separable_accept():
+    router = _toy_router()
+    rng = np.random.default_rng(1)
+    emb = rng.normal(size=(400, D)).astype(np.float32)
+    probs = router.predict(emb)
+    assert probs.shape == (400, 2)
+    acc = ((probs[:, 0] > 0.5) == (emb[:, 0] > 0)).mean()
+    assert acc > 0.9, acc
+
+
+def test_router_entry_rule_and_bar_monotonicity():
+    router = _toy_router()
+    rng = np.random.default_rng(2)
+    emb = rng.normal(size=(200, D)).astype(np.float32)
+    lo = router.entry_tiers(emb, 0.1)
+    hi = router.entry_tiers(emb, 0.9)
+    # raising the bar can only push entries upward
+    assert (hi >= lo).all()
+    assert lo.dtype == np.int32
+    # the final position catches everything, even at bar > any prob
+    assert (router.entry_tiers(emb, 2.0) == 1).all()
+    # probs reuse path matches the fresh forward
+    probs = router.predict(emb)
+    assert np.array_equal(router.entry_tiers(emb, 0.5),
+                          router.entry_tiers(emb, 0.5, probs=probs))
+
+
+def test_accept_labels_from_build_artifacts():
+    scores = np.array([[0.9, 0.2, 0.5],
+                       [0.1, 0.8, 0.5]])
+    correct = np.array([[1.0, 0.0, 1.0],
+                        [0.0, 1.0, 0.0]])
+    # cascade over marketplace apis (2, 0) with tau_0 = 0.4
+    y = accept_labels(scores, correct, apis=(2, 0), thresholds=(0.4,))
+    # position 0: score of api 2 >= 0.4; position 1 (final): api 0 correct
+    assert y.tolist() == [[1.0, 1.0], [1.0, 0.0]]
+
+
+# ---------------------------------------------------------------------------
+# governor units
+# ---------------------------------------------------------------------------
+
+
+def test_governor_validation():
+    with pytest.raises(ValueError, match="budget_rate"):
+        BudgetGovernor(0.0, (0.5,))
+    with pytest.raises(ValueError, match="window"):
+        BudgetGovernor(1.0, (0.5,), window=0)
+    with pytest.raises(ValueError, match="max_shift"):
+        BudgetGovernor(1.0, (0.5,), max_shift=0.0)
+
+
+def test_governor_dual_updates_track_budget_error():
+    gov = BudgetGovernor(1.0, (0.6, 0.4), base_bar=0.5, window=10)
+    assert gov.thresholds() == (0.6, 0.4)      # starts at the base
+    for _ in range(30):
+        gov.observe(2.0)                       # 2x over budget
+    assert gov.shift > 0
+    thr = gov.thresholds()
+    assert thr[0] < 0.6 and thr[1] < 0.4       # cheaper: lower accept bars
+    assert gov.entry_bar() < 0.5               # and a lower entry bar
+    assert len(gov.trace) == 3                 # one snapshot per window
+    assert gov.trace[-1]["n_seen"] == 30
+    for _ in range(120):
+        gov.observe(0.1)                       # deep under budget
+    assert gov.shift < 0
+    assert gov.thresholds()[0] > 0.6           # spend spare budget on acc
+    # saturation: shift never exceeds max_shift, thresholds stay in [0,1]
+    assert abs(gov.shift) <= gov.max_shift + 1e-12
+    assert all(0.0 <= t <= 1.0 for t in gov.thresholds())
+
+
+def test_governor_window_batching_and_snapshot():
+    gov = BudgetGovernor(1.0, (0.5,), window=8)
+    gov.observe_many(np.full(20, 3.0))         # 2 full windows + remainder
+    assert len(gov.trace) == 2
+    snap = gov.snapshot()
+    assert snap["n_observed"] == 20
+    assert snap["realized_rate"] == pytest.approx(3.0)
+    assert snap["budget_rate"] == 1.0
+    assert len(snap["trace"]) == 2
+
+
+def test_governor_converges_on_controllable_cost():
+    """Closed loop against a synthetic dial: per-query cost rises with
+    the threshold (more escalation). The governor must settle the
+    realized rate within +/-10% of target."""
+    gov = BudgetGovernor(1.5, (0.6,), window=20, eta=0.6)
+    rng = np.random.default_rng(0)
+    total, n = 0.0, 0
+    for _ in range(60):                        # 60 windows
+        tau = gov.thresholds()[0]
+        costs = 0.5 + 3.0 * tau + 0.05 * rng.normal(size=20)
+        gov.observe_many(costs)
+        total += costs.sum()
+        n += 20
+    last = [w["window_rate"] for w in list(gov.trace)[-10:]]
+    assert abs(np.mean(last) - 1.5) / 1.5 < 0.1
+
+
+def test_governor_trace_is_bounded():
+    gov = BudgetGovernor(1.0, (0.5,), window=1, trace_len=16)
+    for _ in range(100):
+        gov.observe(1.0)
+    assert len(gov.trace) == 16            # bounded despite 100 windows
+    assert gov.trace[-1]["n_seen"] == 100
+    assert len(gov.snapshot()["trace"]) == 16
+
+
+# ---------------------------------------------------------------------------
+# cost-aware degradation
+# ---------------------------------------------------------------------------
+
+
+def test_degrade_entry_rule():
+    # no router: legacy pin to tier 0
+    assert degrade_entry(None, 0.5) == 0
+    # cheapest tier clearing the reduced bar (0.5 * 0.5 = 0.25)
+    assert degrade_entry(np.array([0.1, 0.3, 0.9]), 0.5, 0.5, 3) == 1
+    assert degrade_entry(np.array([0.3, 0.1, 0.9]), 0.5, 0.5, 3) == 0
+    # nothing clears: the final position catches it
+    assert degrade_entry(np.array([0.1, 0.1, 0.2]), 0.9, 0.5, 3) == 2
+    with pytest.raises(ValueError, match="relief"):
+        degrade_entry(np.array([0.5]), 0.5, 0.0, 1)
+    with pytest.raises(ValueError, match="probabilities"):
+        degrade_entry(np.array([0.5, 0.5]), 0.5, 0.5, 3)
+
+
+# ---------------------------------------------------------------------------
+# cascade entry support
+# ---------------------------------------------------------------------------
+
+
+def _counting_tiers(m=3, costs=(1.0, 10.0, 100.0)):
+    calls = [[] for _ in range(m)]
+
+    def mk(j):
+        def invoke(q):
+            calls[j].append(len(q))
+            return np.full(len(q), j, np.int32), np.full(len(q), costs[j])
+        return invoke
+
+    return [CascadeTier(f"t{j}", mk(j)) for j in range(m)], calls
+
+
+def test_execute_cascade_entry_skips_tiers():
+    tiers, calls = _counting_tiers()
+    n = 6
+    entry = np.array([0, 0, 1, 1, 2, 2])
+
+    def scorer(q, a, j):
+        return np.zeros(len(q))               # reject: everything escalates
+
+    res = execute_cascade(tiers, [0.5, 0.5], scorer, np.arange(n),
+                          entry=entry)
+    # tier 0 sees only entry-0 rows; tier 1 adds the entry-1 rows; etc.
+    assert res["tier_counts"] == [2, 4, 6]
+    assert sum(calls[0]) == 2 and sum(calls[1]) == 4 and sum(calls[2]) == 6
+    # cost never includes a skipped tier
+    assert res["cost"].tolist() == [111.0, 111.0, 110.0, 110.0, 100.0, 100.0]
+    assert (np.asarray(res["stopped_at"]) == 2).all()
+
+
+def test_execute_cascade_entry_zero_matches_none():
+    def scorer(q, a, j):
+        return (np.asarray(q) % 2 == 0).astype(float)
+
+    tiers, _ = _counting_tiers(2, (1.0, 10.0))
+    a = execute_cascade(tiers, [0.5], scorer, np.arange(10))
+    tiers2, _ = _counting_tiers(2, (1.0, 10.0))
+    b = execute_cascade(tiers2, [0.5], scorer, np.arange(10),
+                        entry=np.zeros(10, np.int64))
+    assert np.array_equal(a["answers"], b["answers"])
+    assert (a["cost"] == b["cost"]).all()
+    assert a["tier_counts"] == b["tier_counts"]
+
+
+def test_execute_cascade_entry_validation():
+    tiers, _ = _counting_tiers(2, (1.0, 10.0))
+
+    def scorer(q, a, j):
+        return np.zeros(len(q))
+
+    with pytest.raises(ValueError, match="entry must be"):
+        execute_cascade(tiers, [0.5], scorer, np.arange(4),
+                        entry=np.zeros(3))
+    with pytest.raises(ValueError, match=r"\[0, 2\)"):
+        execute_cascade(tiers, [0.5], scorer, np.arange(4),
+                        entry=np.array([0, 1, 2, 0]))
+
+
+# ---------------------------------------------------------------------------
+# pipeline + scheduler integration
+# ---------------------------------------------------------------------------
+
+
+def _feature_embed(tokens):
+    """Rows ARE the embedding: tokens (n, D) float-ish."""
+    return np.asarray(tokens[:, :D], np.float32)
+
+
+def _routed_pipeline(router=None, governor=None, thresholds=(0.5,),
+                     batch_size=8, n_tiers=2, entry_bar=0.5,
+                     degrade_relief=0.5):
+    """2-3 tier pipeline whose scorer accepts iff the leading feature is
+    positive — aligned with what _toy_router predicts."""
+    prices = [ApiCost(10.0 * 10 ** j, 10.0 * 10 ** j, 0.0)
+              for j in range(n_tiers)]
+    tiers = [TierSpec(f"t{j}", (lambda t, j=j: np.full(len(t), j, np.int32)),
+                      prices[j]) for j in range(n_tiers)]
+    strategy = None
+    if router is not None or governor is not None:
+        strategy = ServingStrategy(router=router, governor=governor,
+                                   entry_bar=entry_bar,
+                                   degrade_relief=degrade_relief)
+    return ServingPipeline(
+        tiers=tiers, thresholds=list(thresholds),
+        scorer=lambda t, a: np.where(t[:, 0] > 0, 0.9, 0.1),
+        embed=_feature_embed, full_prompt_tokens=100, pad_token=-1,
+        batch_size=batch_size, strategy=strategy)
+
+
+def _feature_tokens(n, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, D)).astype(np.float32)
+
+
+def test_pipeline_serve_routes_hard_queries_past_tier0():
+    router = _toy_router()
+    pipe = _routed_pipeline(router=router)
+    toks = _feature_tokens(64, seed=3)
+    res = pipe.serve(toks)
+    hard = toks[:, 0] < -0.5                  # confidently hard rows
+    easy = toks[:, 0] > 0.5
+    # hard queries entered (and stopped) at tier 1 without paying tier 0
+    assert (res.stopped_at[hard] == 1).all()
+    t1_only = ApiCost(100.0, 100.0, 0.0)
+    # easy queries stop at tier 0
+    assert (res.stopped_at[easy] == 0).all()
+    # telemetry
+    assert res.strategy is not None
+    assert sum(res.strategy["entry_hist"]) == 64
+    assert res.strategy["entry_hist"][1] >= int(hard.sum())
+    assert res.strategy["realized_accept_rate"] > 0.8
+    assert 0.0 < res.strategy["predicted_accept_rate"] <= 1.0
+    # entry-1 queries are billed tier 1 only (cost = one tier-1 call)
+    n_q = (toks[hard] != pipe.pad_token).sum(-1)
+    expected = np.asarray(t1_only.query_cost(n_q + 100, np.ones_like(n_q)),
+                          np.float64)
+    assert res.cost[hard] == pytest.approx(expected)
+
+
+def test_pipeline_serve_governor_only_strategy():
+    gov = BudgetGovernor(1e-9, (0.5,), window=8)   # impossible target
+    pipe = _routed_pipeline(governor=gov)
+    toks = _feature_tokens(64, seed=4)
+    pipe.serve(toks)
+    # overspend detected: thresholds pushed down from the base
+    assert gov.shift > 0
+    assert pipe.strategy.thresholds(pipe.thresholds)[0] < 0.5
+    # and the governed threshold is what the next serve actually uses:
+    # with tau pushed to ~0.15 the 0.1-score (hard) rows still escalate,
+    # but nothing that scores 0.9 can ever leave tier 0
+    res = pipe.serve(toks)
+    assert res.strategy["governor"]["n_observed"] == 128
+    assert len(res.strategy["governor"]["trace"]) >= 8
+
+
+def test_scheduler_matches_serve_with_router():
+    router = _toy_router()
+    toks = _feature_tokens(48, seed=5)
+    a = _routed_pipeline(router=router).serve(toks)
+    b = TierScheduler(_routed_pipeline(router=router),
+                      max_chunk=8).run_trace(toks)
+    assert np.array_equal(a.answers, b.answers)
+    assert (a.cost == b.cost).all()
+    assert np.array_equal(a.stopped_at, b.stopped_at)
+    assert a.tier_counts == b.tier_counts
+    assert a.strategy["entry_hist"] == b.strategy["entry_hist"]
+
+
+def test_serial_batcher_rejects_strategy():
+    pipe = _routed_pipeline(router=_toy_router())
+    with pytest.raises(ValueError, match="parallel"):
+        pipe.serve_stream(_feature_tokens(4), parallel=False)
+
+
+def test_pipeline_requires_embed_with_router():
+    with pytest.raises(ValueError, match="embed"):
+        ServingPipeline(
+            tiers=[], thresholds=[], scorer=None,
+            strategy=ServingStrategy(router=_toy_router(steps=1)))
+
+
+def test_strategy_requires_router_or_governor():
+    with pytest.raises(ValueError, match="router and/or"):
+        ServingStrategy()
+
+
+def test_scheduler_degrade_routes_by_predicted_score():
+    """Overload-degraded arrivals enter the cheapest tier clearing the
+    reduced bar instead of being pinned to tier 0: with every query
+    confidently hard (tier-0 accept prob ~0), degraded traffic lands on
+    tier 1+ and tier 0 sees none of it."""
+    import time as _time
+
+    router = _toy_router(n_tiers=3)
+
+    def slow(v):
+        def answer(t):
+            _time.sleep(0.01)
+            return np.full(len(t), v, np.int32)
+        return answer
+
+    tiers = [TierSpec(f"t{j}", slow(j), ApiCost(10.0 ** (j + 1),
+                                                10.0 ** (j + 1), 0.0))
+             for j in range(3)]
+    pipe = ServingPipeline(
+        tiers=tiers, thresholds=[0.5, 0.5],
+        scorer=lambda t, a: np.where(t[:, 0] > 0, 0.9, 0.1),
+        embed=_feature_embed, full_prompt_tokens=100, pad_token=-1,
+        batch_size=4,
+        strategy=ServingStrategy(router=router, degrade_relief=0.5))
+    rng = np.random.default_rng(6)
+    toks = rng.normal(size=(32, D)).astype(np.float32)
+    toks[:, 0] = -2.0                          # every query is hard
+    slo = SLOConfig(queue_cap=4, overload="degrade", max_holdback_s=0.0)
+    sched = TierScheduler(pipe, max_chunk=4, slo=slo)
+    res = sched.run_trace(toks)
+    degraded = [r for r in sched._requests if r.degraded and not r.shed]
+    assert degraded, "queue cap 4 against 32 instant arrivals must degrade"
+    assert all(r.entry >= 1 for r in degraded)
+    assert all(r.stopped_at == r.entry for r in degraded)  # forced accept
+    assert res.tier_counts[0] == 0             # tier 0 never touched
+    # the hard 2x bound holds on the degrade TARGET queues too
+    assert all(p <= 2 * 4 for p in res.ingress["queue_peak"])
+
+
+def test_predictive_shed_acts_before_queue_fills():
+    """With predictive_shed, once the EWMA knows the tier is slow, an
+    arrival whose predicted completion misses its deadline is shed even
+    though the queue is nearly empty."""
+    import time as _time
+
+    def slow(t):
+        _time.sleep(0.05)
+        return np.zeros(len(t), np.int32)
+
+    pipe = ServingPipeline(
+        tiers=[TierSpec("slow", slow, ApiCost(10.0, 10.0, 0.0))],
+        thresholds=[], scorer=None, full_prompt_tokens=10, pad_token=-1,
+        batch_size=4)
+    slo = SLOConfig(deadline_s=0.02, predictive_shed=True, queue_cap=64,
+                    max_holdback_s=0.0)
+    toks = np.arange(12 * 4, dtype=np.int32).reshape(12, 4)
+    # wave 1 at t=0 trains the EWMA; wave 2 arrives when the scheduler
+    # already knows a chunk takes ~50ms > the 20ms deadline budget
+    arrivals = np.concatenate([np.zeros(4), np.full(8, 0.2)])
+    sched = TierScheduler(pipe, max_chunk=4, slo=slo)
+    res = sched.run_trace(toks, arrivals)
+    shed = res.stopped_at == -2
+    assert shed[4:].all(), "post-warmup arrivals must be predictively shed"
+    assert not shed[:4].any(), "cold-start wave is admitted (EWMA empty)"
+    assert res.ingress["queue_peak"][0] <= 4   # far below the 64 cap
+
+
+def test_admit_decision_predictive_unit():
+    est = TierEstimator()
+    slo = SLOConfig(deadline_s=1.0, predictive_shed=True,
+                    service_safety=1.0)
+    # cold estimator: never predictively sheds
+    assert admit_decision(0, slo, est=est, now=0.0, deadline=0.01) == "admit"
+    est.observe_chunk(0.5, rows=1)
+    est.observe_wait(0.3)
+    # predicted finish now + 0.3 + 0.5 = 0.8 <= 1.0: admit
+    assert admit_decision(0, slo, est=est, now=0.0, deadline=1.0) == "admit"
+    # deadline 0.7 < 0.8: shed though the queue is empty
+    assert admit_decision(0, slo, est=est, now=0.0, deadline=0.7) == "shed"
+    # no deadline: predictive shedding cannot bite
+    assert admit_decision(0, slo, est=est, now=0.0, deadline=None) == "admit"
+    # under the degrade contract a predicted miss degrades (a cheaper
+    # tier may still answer in time) within the hard 2x bound
+    slo_d = SLOConfig(deadline_s=1.0, predictive_shed=True,
+                      service_safety=1.0, queue_cap=4, overload="degrade")
+    assert admit_decision(0, slo_d, est=est, now=0.0,
+                          deadline=0.7) == "degrade"
+    assert admit_decision(8, slo_d, est=est, now=0.0,
+                          deadline=0.7) == "shed"
+
+
+# ---------------------------------------------------------------------------
+# builder: strategy + joint + cache knobs (one tiny end-to-end build)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_build():
+    from repro.serving import BuildConfig, build_pipeline
+
+    cfg = BuildConfig(
+        task="overruling", tiers=("GPT-J", "GPT-4"), train_queries=120,
+        train_steps_cap=40, scorer_steps=60, budget_frac=0.5,
+        contextual=True, budget_rate=5e-5, governor_window=16,
+        router_steps=100, joint_search=True, joint_prompt_sizes=(0, 3, 5),
+        cache_policy="lru", cache_min_score=0.4,
+        router=RouterConfig(m=2, top_lists=4, sample=96), verbose=False)
+    return build_pipeline(cfg), cfg
+
+
+def test_build_cache_knobs_reach_the_cache(tiny_build):
+    (pipe, _), cfg = tiny_build
+    assert pipe.cache is not None
+    assert pipe.cache.policy == "lru"
+    assert pipe.cache.min_score == pytest.approx(0.4)
+    assert pipe.cache.capacity == cfg.cache_capacity
+
+
+def test_build_joint_respects_budget_and_is_valid(tiny_build):
+    (pipe, report), cfg = tiny_build
+    joint = report["joint"]
+    assert joint is not None
+    assert 0 <= joint["n_examples"] <= cfg.n_shot
+    # every joint row (and the final cascade) respects its budget up to
+    # the optimizer's subsample slack (see test_joint.py)
+    assert all(r["avg_cost"] <= joint["budget"] * 1.3
+               for r in joint["rows"])
+    assert report["metrics"]["avg_cost"] <= report["budget"] * 1.3
+    # the chosen shared prompt reached the pipeline's tiers
+    for spec in pipe.tiers:
+        assert spec.prompt is not None
+        assert len(spec.prompt.example_ids) == joint["n_examples"]
+
+
+def test_build_contextual_strategy_serves(tiny_build):
+    from repro.data import synthetic
+
+    (pipe, report), cfg = tiny_build
+    assert pipe.strategy is not None
+    assert pipe.strategy.router is not None
+    assert pipe.strategy.governor is not None
+    assert pipe.strategy.governor.budget_rate == pytest.approx(5e-5)
+    test = synthetic.sample("overruling", 48, seed=9)
+    res = pipe.serve(test.tokens)
+    assert res.strategy is not None
+    assert sum(res.strategy["entry_hist"]) == 48
+    assert res.n == 48 and (res.stopped_at >= -1).all()
+    # stream path carries the same strategy
+    res2 = pipe.serve_stream(test.tokens)
+    assert res2.strategy is not None
+    assert res2.n == 48
+
+
+# ---------------------------------------------------------------------------
+# core.router: frontier + cost_to_match (previously example-only paths)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def router_market():
+    data = simulate_market("OVERRULING", n=1600, seed=21)
+    scores = simulate_scores(data, seed=22)
+    return split_market(data, scores, frac=0.5, seed=23)
+
+
+def test_frontier_monotone_and_budget_feasible(router_market):
+    d_tr, _, s_tr, _ = router_market
+    cost = np.asarray(d_tr.cost)
+    budgets = np.linspace(cost.min(1).mean() * 1.2, cost.mean(0).max(), 6)
+    cfg = RouterConfig(top_lists=10, sample=256)
+    pts = frontier(d_tr, s_tr, budgets, cfg)
+    assert [p["budget"] for p in pts] == pytest.approx(list(budgets))
+    # every point respects its budget up to the subsample slack
+    assert all(p["avg_cost"] <= p["budget"] * 1.3 for p in pts)
+    # accuracy is (weakly) monotone along the frontier, small grid noise
+    accs = [p["acc"] for p in pts]
+    for lo, hi in zip(accs, accs[1:]):
+        assert hi >= lo - 0.02
+    assert accs[-1] > accs[0]
+
+
+def test_cost_to_match_consistent_with_evaluate_offline(router_market):
+    d_tr, d_te, s_tr, s_te = router_market
+    cfg = RouterConfig(top_lists=10, sample=256)
+    # a mid-frontier operating point as the target
+    target = float(np.asarray(d_tr.accuracy()).max()) - 0.01
+    best = cost_to_match(d_tr, s_tr, d_te, s_te, target, cfg, n_steps=8)
+    assert best is not None
+    assert best["acc"] >= target
+    # reported metrics ARE evaluate_offline of the returned cascade on
+    # the test split
+    m = evaluate_offline(best["cascade"], d_te, s_te)
+    assert m["acc"] == pytest.approx(best["acc"])
+    assert m["avg_cost"] == pytest.approx(best["avg_cost"])
+    # the bisection returned the spend actually needed, not the cap
+    hi = float(np.asarray(d_tr.cost).max(1).mean()) * 1.5
+    assert best["budget"] < hi
