@@ -40,6 +40,7 @@ def main() -> None:
         ("parallel_tiers", bench_serving.bench_parallel_tiers),
         ("overload_shedding", bench_serving.bench_overload_shedding),
         ("bucketed_prefill", bench_serving.bench_bucketed_prefill),
+        ("placement_overlap", bench_serving.bench_placement_overlap),
         ("contextual_routing", bench_strategy.bench_contextual_routing),
         ("budget_governor", bench_strategy.bench_budget_governor),
     ]

@@ -60,7 +60,16 @@ class CompletionCache:
     ``policy="fifo"`` keeps the original ring buffer (oldest *insert*
     evicted first); ``policy="lru"`` evicts the least-recently-*used*
     entry — a lookup hit refreshes its entry, so hot queries survive a
-    skewed stream that would cycle them out of the ring.
+    skewed stream that would cycle them out of the ring; ``policy="lfu"``
+    evicts the least-frequently-used entry (hit count, ties broken
+    least-recently-used), so a steady hot set survives even a long flood
+    of one-off queries that would age everything out of an LRU.
+
+    ``ttl`` (seconds) bounds entry lifetime: an entry older than ``ttl``
+    at *lookup* time is expired — invalidated and never served — so a
+    stale answer can't outlive the world that produced it (tier models
+    retrained, prompts reselected). Expiry uses ``time_fn`` (monotonic
+    by default, injectable so tests don't sleep).
 
     ``min_score`` is a score-confidence floor: ``insert`` drops entries
     whose accept-time reliability score falls below it, so answers the
@@ -71,26 +80,47 @@ class CompletionCache:
 
     capacity: int = 4096
     threshold: float = 0.97
-    policy: str = "fifo"            # "fifo" ring | "lru"
+    policy: str = "fifo"            # "fifo" ring | "lru" | "lfu"
     min_score: float | None = None  # score-confidence floor for inserts
+    ttl: float | None = None        # entry time-to-live, seconds
+    time_fn: object = None          # clock for TTL (default time.monotonic)
 
     def __post_init__(self):
-        if self.policy not in ("fifo", "lru"):
+        if self.policy not in ("fifo", "lru", "lfu"):
             raise ValueError(f"unknown eviction policy {self.policy!r}; "
-                             "expected 'fifo' or 'lru'")
+                             "expected 'fifo', 'lru' or 'lfu'")
+        if self.ttl is not None and self.ttl <= 0:
+            raise ValueError(f"ttl must be > 0 seconds, got {self.ttl}")
+        if self.time_fn is None:
+            import time
+            self.time_fn = time.monotonic
         self._emb = None            # (cap, d)
         self._ans = None            # (cap,)
         self._valid = None
         self._next = 0              # fifo ring head
-        self._used = None           # (cap,) last-use tick (lru)
+        self._used = None           # (cap,) last-use tick (lru/lfu ties)
+        self._freq = None           # (cap,) hit count (lfu)
+        self._born = None           # (cap,) insert time (ttl)
         self._tick = 0
         self.hits = 0
         self.misses = 0
         self.skipped_low_score = 0  # inserts dropped by the floor
+        self.expired = 0            # entries invalidated by the TTL
+
+    def _expire(self):
+        """Invalidate entries older than ``ttl`` (called at lookup, so
+        an expired entry is never served even if nothing evicted it)."""
+        if self.ttl is None or self._valid is None:
+            return
+        stale = self._valid & (self.time_fn() - self._born > self.ttl)
+        if stale.any():
+            self.expired += int(stale.sum())
+            self._valid[stale] = False
 
     def lookup(self, emb: np.ndarray):
         """emb (n, d) -> (hit_mask (n,), answers (n,))."""
         n = emb.shape[0]
+        self._expire()
         if self._emb is None or not self._valid.any():
             self.misses += n
             return np.zeros(n, bool), np.zeros(n, np.int32)
@@ -99,10 +129,15 @@ class CompletionCache:
         best = sims.argmax(1)
         best_sim = sims[np.arange(n), best]
         hit = best_sim >= self.threshold
-        if self.policy == "lru" and hit.any():
-            slots = best[hit]                # refresh hit entries; a slot
-            self._used[slots] = self._tick + np.arange(len(slots))
-            self._tick += len(slots)         # hit twice keeps the later tick
+        if hit.any():
+            slots = best[hit]
+            if self.policy in ("lru", "lfu"):
+                # refresh hit entries; a slot hit twice in this batch
+                # keeps the later tick
+                self._used[slots] = self._tick + np.arange(len(slots))
+                self._tick += len(slots)
+            if self.policy == "lfu":
+                np.add.at(self._freq, slots, 1)
         self.hits += int(hit.sum())
         self.misses += int((~hit).sum())
         return hit, self._ans[best].astype(np.int32)
@@ -121,12 +156,18 @@ class CompletionCache:
         n = len(emb)
         if n == 0:
             return
+        # expire before choosing victims: a TTL-stale entry must free
+        # its slot rather than sit valid-looking while a LIVE entry
+        # (whose tick/frequency merely sorts lower) gets evicted
+        self._expire()
         if self._emb is None:
             d = emb.shape[1]
             self._emb = np.zeros((self.capacity, d), emb.dtype)
             self._ans = np.zeros(self.capacity, np.int32)
             self._valid = np.zeros(self.capacity, bool)
             self._used = np.zeros(self.capacity, np.int64)
+            self._freq = np.zeros(self.capacity, np.int64)
+            self._born = np.zeros(self.capacity, np.float64)
         if self.policy == "fifo":
             # ring semantics: a batch larger than the ring self-overwrites
             # so the NEWEST entries survive and _next keeps advancing
@@ -136,13 +177,21 @@ class CompletionCache:
             if n > self.capacity:            # keep the newest, like the ring
                 emb, answers = emb[-self.capacity:], answers[-self.capacity:]
                 n = self.capacity
-            # victims: empty slots first, then least-recently-used
-            prio = np.where(self._valid, self._used, -1)
-            idx = np.argsort(prio, kind="stable")[:n]
+            if self.policy == "lru":
+                # victims: empty slots first, then least-recently-used
+                prio = np.where(self._valid, self._used, -1)
+                idx = np.argsort(prio, kind="stable")[:n]
+            else:
+                # lfu victims: empty slots first, then lowest hit count,
+                # ties least-recently-used (lexsort: last key is primary)
+                empty = self._valid.astype(np.int64)        # 0 sorts first
+                idx = np.lexsort((self._used, self._freq, empty))[:n]
         self._emb[idx] = emb
         self._ans[idx] = answers
         self._valid[idx] = True
         self._used[idx] = self._tick + np.arange(n)
+        self._freq[idx] = 0
+        self._born[idx] = self.time_fn()
         self._tick += n
 
     @property

@@ -108,9 +108,17 @@ def tier_step(tier: CascadeTier, chunk, j: int, *, scorer: Callable,
     return a, c, s, accept
 
 
+#: pending-set compaction modes: "host" is the original numpy boolean
+#: indexing; "device"/"pallas" run the gather + prefix-sum on device
+#: (repro.kernels.cascade_compact — jnp argsort vs the Pallas kernel),
+#: bit-identical to "host" by construction and by the equivalence suite
+COMPACT_MODES = ("host", "device", "pallas")
+
+
 def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
                     scorer: Callable, queries, *,
-                    batch_size: int = 256, entry=None) -> dict:
+                    batch_size: int = 256, entry=None,
+                    compact: str = "host") -> dict:
     """THE cascade executor: tier-by-tier compaction over ``queries``.
 
     queries: (n, ...) array — rows are whatever the tier backend consumes
@@ -123,12 +131,23 @@ def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
     never touching the tiers below it. ``entry=None`` keeps the classic
     everything-enters-at-0 cascade bit-identically.
 
+    ``compact`` selects where the pending set lives between tiers:
+    ``"host"`` (default) is the original numpy path; ``"device"`` keeps
+    the pending indices on device and compacts them with a jitted
+    gather + prefix-sum (``repro.kernels.cascade_compact``), so for
+    numeric queries the next tier's batch is gathered on device too;
+    ``"pallas"`` uses the Pallas kernel variant of the same step. All
+    three are bit-identical in every output (tests/test_placement.py).
+
     All tier and scorer calls are chunked to ``batch_size``. Returns
     dict(answers, cost, stopped_at (cascade position, -1 = unanswered),
     scores (accept-time reliability score, NaN where the scorer was
     never consulted — cache-confidence consumers use this), tier_counts
     (pending per tier), accepted_counts).
     """
+    if compact not in COMPACT_MODES:
+        raise ValueError(f"unknown compact mode {compact!r}; expected "
+                         f"one of {COMPACT_MODES}")
     queries = np.asarray(queries)
     n = queries.shape[0]
     m = len(tiers)
@@ -148,6 +167,25 @@ def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
     scores = np.full(n, np.nan)
     pending = (np.arange(n) if entry is None
                else np.flatnonzero(entry == 0))
+    # on-device compaction: the pending indices (and, for numeric
+    # queries, the query matrix) live on device between tiers; the host
+    # mirror is refreshed from the device array so bookkeeping (cost
+    # scatter, answer scatter) sees the exact same indices
+    on_device = compact != "host"
+    compact_op = None
+    pending_dev = dev_queries = None
+    if on_device:
+        import jax.numpy as jnp
+
+        from repro.kernels.cascade_compact.ops import compact as compact_op
+        backend = "pallas" if compact == "pallas" else "jnp"
+        pending_dev = jnp.asarray(pending, jnp.int32)
+        if queries.dtype != object:
+            dq = jnp.asarray(queries)
+            # device-gather only when the round-trip is lossless: with
+            # x64 disabled jax would silently downcast int64/float64
+            # queries, changing what the tiers see
+            dev_queries = dq if dq.dtype == queries.dtype else None
     tier_counts: list[int] = []
     accepted_counts: list[int] = []
     for j, tier in enumerate(tiers):
@@ -156,11 +194,14 @@ def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
             # (the same order a tier-0 entry would have seen them)
             pending = np.sort(np.concatenate(
                 [pending, np.flatnonzero(entry == j)]))
+            if on_device:
+                pending_dev = jnp.asarray(pending, jnp.int32)
         tier_counts.append(len(pending))
         if len(pending) == 0:
             accepted_counts.append(0)
             continue
-        qs = queries[pending]
+        qs = (np.asarray(jnp.take(dev_queries, pending_dev, axis=0))
+              if dev_queries is not None else queries[pending])
         b = len(pending)
         ans_chunks, cost_chunks, score_chunks, accept_chunks = [], [], [], []
         last = j == m - 1
@@ -185,7 +226,16 @@ def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
             answers[done] = ans[accept]
         stopped_at[done] = j
         accepted_counts.append(int(accept.sum()))
-        pending = pending[~accept]
+        if on_device:
+            padded, cnt = compact_op(pending_dev, jnp.asarray(~accept),
+                                     backend=backend)
+            pending_dev = padded[:int(cnt)]   # cnt sync sizes the slice
+            # host mirror: the cost/answer scatters above are numpy, so
+            # the indices come back each tier — what stays on device is
+            # the compaction itself and the next tier's query gather
+            pending = np.asarray(pending_dev)
+        else:
+            pending = pending[~accept]
     try:                                     # densify when answers are scalar
         dense = np.array(answers.tolist())
         answers_arr = dense if dense.ndim == 1 else answers

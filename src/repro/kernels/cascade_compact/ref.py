@@ -1,0 +1,27 @@
+"""Numpy oracle for the cascade pending-set compaction step.
+
+After a tier's accept decision, the cascade keeps the rejected rows (in
+their original order) as the next tier's pending set. The reference is
+plain boolean indexing — the exact host-side operation
+``execute_cascade`` has always performed — padded to the input length so
+the fixed-shape device variants (``ops.compact``) can be compared
+bit-for-bit: ``out[:count] == idx[keep]`` and ``out[count:] == fill``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def compact_ref(idx: np.ndarray, keep: np.ndarray,
+                fill: int = -1) -> tuple[np.ndarray, int]:
+    """idx (n,) int, keep (n,) bool -> (padded (n,) int, count).
+
+    ``padded[:count]`` are ``idx``'s kept entries in original order;
+    the tail is ``fill``.
+    """
+    idx = np.asarray(idx)
+    keep = np.asarray(keep, bool)
+    kept = idx[keep]
+    out = np.full(idx.shape, fill, idx.dtype)
+    out[:len(kept)] = kept
+    return out, int(len(kept))

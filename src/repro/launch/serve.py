@@ -9,6 +9,8 @@ Demo (CPU):
       --deadline-ms 100 --queue-cap 64 --overload degrade   # SLO mode
   PYTHONPATH=src python -m repro.launch.serve --requests 200 \\
       --contextual --budget-rate 3e-5     # entry routing + spend governor
+  PYTHONPATH=src python -m repro.launch.serve --requests 200 --stream \\
+      --devices 4 --on-device-compact     # per-tier device placement
 
 Thin CLI over ``repro.serving.build_pipeline`` — this is the entry point
 a real deployment would point at the production mesh (tiers sharded with
@@ -17,11 +19,37 @@ pjit per DESIGN.md §5).
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 
-from repro.core.router import RouterConfig
-from repro.data import synthetic
-from repro.serving import BuildConfig, build_pipeline
-from repro.serving.ingress import poisson_arrivals
+# --devices N forces an N-device host platform (CPU dev boxes have one
+# device; tier placement needs several). XLA locks the device count at
+# first use, so the flag must land in the environment BEFORE anything
+# imports jax — pre-parse it here, ahead of the repro imports below.
+# Both `--devices N` and `--devices=N` spellings count; if the user
+# already exported their own XLA_FLAGS we leave it alone and main()
+# warns when the resulting device count falls short.
+
+
+def _preparse_devices(argv) -> str | None:
+    for i, a in enumerate(argv):
+        if a == "--devices" and i + 1 < len(argv):
+            return argv[i + 1]
+        if a.startswith("--devices="):
+            return a.split("=", 1)[1]
+    return None
+
+
+_n = _preparse_devices(sys.argv)
+if (_n is not None and _n.isdigit() and int(_n) > 1
+        and "XLA_FLAGS" not in os.environ):
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={_n}"
+
+from repro.core.router import RouterConfig            # noqa: E402
+from repro.data import synthetic                      # noqa: E402
+from repro.serving import BuildConfig, build_pipeline  # noqa: E402
+from repro.serving.ingress import poisson_arrivals    # noqa: E402
 
 
 def main():
@@ -74,7 +102,29 @@ def main():
                          "entry bar to hold it")
     ap.add_argument("--governor-window", type=int, default=64,
                     help="queries per governor controller update")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="pin each cascade tier's model to its own "
+                         "device, sized by offline traffic share "
+                         "(forces an N-device CPU host when the "
+                         "platform has fewer; results are bit-identical "
+                         "to the shared device)")
+    ap.add_argument("--on-device-compact", nargs="?", const="device",
+                    choices=["device", "pallas"], default=None,
+                    help="keep the cascade's pending-set compaction on "
+                         "device (jitted gather+prefix-sum, or the "
+                         "Pallas kernel variant); bit-identical to the "
+                         "host path")
     args = ap.parse_args()
+    if args.devices is not None and args.devices < 1:
+        ap.error("--devices must be >= 1")
+    if args.devices is not None and args.devices > 1:
+        import jax
+        avail = len(jax.local_devices())
+        if avail < args.devices:
+            # a pre-existing XLA_FLAGS wins over the pre-parse above
+            print(f"warning: {args.devices} devices requested but only "
+                  f"{avail} available (XLA_FLAGS already set?); tiers "
+                  f"will share devices")
     if args.serial and (args.deadline_ms is not None
                         or args.queue_cap is not None
                         or args.overload != "reject"):
@@ -95,6 +145,8 @@ def main():
         contextual=args.contextual, entry_bar=args.entry_bar,
         budget_rate=args.budget_rate,
         governor_window=args.governor_window,
+        place_tiers=args.devices is not None,
+        compact=args.on_device_compact or "host",
         router=RouterConfig(top_lists=10, sample=256)))
 
     test = synthetic.sample(args.task, args.requests, seed=77)

@@ -60,8 +60,18 @@ class BuildConfig:
     enable_prompt_adaptation: bool = True
     cache_capacity: int = 1024
     cache_threshold: float = 0.995
-    cache_policy: str = "fifo"          # "fifo" ring | "lru"
+    cache_policy: str = "fifo"          # "fifo" ring | "lru" | "lfu"
     cache_min_score: float | None = None  # score-confidence insert floor
+    cache_ttl: float | None = None      # entry time-to-live (seconds)
+    # per-tier device placement (sharding.placement): pin each cascade
+    # tier's model to its own local jax.Device, sized by the offline
+    # replay's per-tier traffic share — on a multi-device host the tier
+    # workers then decode on disjoint devices. Results are bit-identical
+    # to the shared-device pipeline (tests/test_placement.py).
+    place_tiers: bool = False
+    # pending-set compaction mode for the batch cascade path:
+    # "host" numpy | "device" jitted gather+prefix-sum | "pallas" kernel
+    compact: str = "host"
     # joint prompt x cascade search (core.joint) instead of greedy
     # per-tier prompt selection: one shared prompt size chosen jointly
     # with the cascade under the budget
@@ -192,6 +202,7 @@ def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
     #    budget governor when a target spend rate is set
     strategy = None
     entry_router = governor = None
+    ent = None
     if cfg.contextual:
         say("== training the contextual entry router ==")
         emb_train = embed_queries(sp, train.tokens, cfg=SC.SCORER_CFG)
@@ -212,17 +223,46 @@ def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
                                    entry_bar=cfg.entry_bar,
                                    degrade_relief=cfg.degrade_relief)
 
-    # 6. assemble the pipeline
+    # 6. per-tier device placement: the offline replay's per-tier
+    #    pending counts are the traffic-share signal (the online
+    #    analogue is ServeResult.tier_counts); each tier's params move
+    #    to their assigned device, so its chunks decode there. With a
+    #    contextual router the replay honours the learned entry tiers —
+    #    all-enter-at-0 pending fractions would size the wrong tiers.
+    placement = None
+    if cfg.place_tiers:
+        from repro.core.cascade import execute_cascade, replay_tiers
+        from repro.sharding.placement import place_params, plan_placement
+        if ent is not None:
+            replay = execute_cascade(
+                replay_tiers(priced, cas.apis), cas.thresholds,
+                lambda idx, _a, j: s_train[idx, cas.apis[j]],
+                np.arange(data.n), batch_size=max(1, data.n), entry=ent)
+            reach = [float(c) for c in replay["tier_counts"]]
+        else:
+            stop = list(metrics["stop_fracs"])
+            reach = [1.0 - sum(stop[:j]) for j in range(len(cas.apis))]
+        placement = plan_placement(len(cas.apis), tier_counts=reach)
+        for j, i in enumerate(cas.apis):
+            apis[i].params = place_params(apis[i].params,
+                                          placement.for_tier(j))
+        say(f"tier placement: "
+            f"{placement.describe([data.names[i] for i in cas.apis])}")
+
+    # 7. assemble the pipeline
     cache = embed = None
     if cfg.enable_cache:
         cache = CompletionCache(capacity=cfg.cache_capacity,
                                 threshold=cfg.cache_threshold,
                                 policy=cfg.cache_policy,
-                                min_score=cfg.cache_min_score)
+                                min_score=cfg.cache_min_score,
+                                ttl=cfg.cache_ttl)
     if cfg.enable_cache or entry_router is not None:
         embed = functools.partial(embed_queries, sp, cfg=SC.SCORER_CFG)
     tiers = [TierSpec(apis[i].name, apis[i].answer, apis[i].price,
-                      prompt=prompts[i]) for i in cas.apis]
+                      prompt=prompts[i],
+                      device=placement.for_tier(j) if placement else None)
+             for j, i in enumerate(cas.apis)]
     # savings baseline = the marketplace's most expensive tier, NOT the
     # cascade's last tier (a tight budget can drop the top tier entirely)
     top = int(np.argmax(np.asarray(priced.cost).mean(0)))
@@ -231,10 +271,11 @@ def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
         scorer=lambda toks, ans: SC.score(sp, toks, ans),
         cache=cache, embed=embed, full_prompt_tokens=full_tokens,
         pad_token=synthetic.PAD, baseline_price=apis[top].price,
-        strategy=strategy)
+        strategy=strategy, compact=cfg.compact)
     report = {"apis": apis, "data": data, "priced": priced,
               "answers": answers, "scorer": sp, "scores": s_train,
               "cascade": cas, "metrics": metrics, "budget": budget,
               "prompts": prompts, "full_prompt_tokens": full_tokens,
-              "strategy": strategy, "joint": joint_report}
+              "strategy": strategy, "joint": joint_report,
+              "placement": placement}
     return pipeline, report

@@ -65,9 +65,15 @@ class GenerationEngine:
     batch_floor: int = 8        # batch sizes bucketed to pow2 >= this
     seq_floor: int = 16         # prompt/cache lengths bucketed likewise
     pad_token: int = 0
+    # pin this engine to one jax.Device (sharding.placement): params are
+    # committed there, so prefill/decode — and the KV cache between
+    # decode steps — run and stay on that device. None = default device.
+    device: object | None = None
 
     def __post_init__(self):
         cfg = self.cfg
+        if self.device is not None:
+            self.params = jax.device_put(self.params, self.device)
         self._prefill_fns: dict[tuple[int, int, int], Callable] = {}
         self.compile_stats = {"prefill_compiles": 0, "prefill_calls": 0}
 
@@ -156,20 +162,30 @@ class EnginePool:
     temperature: float = 0.0
 
     def __post_init__(self):
-        self._engines: dict[tuple[str, int], GenerationEngine] = {}
+        self._engines: dict[tuple, GenerationEngine] = {}
+        self._params_refs: dict[tuple, dict] = {}
 
-    def get(self, cfg: ModelConfig, params: dict) -> GenerationEngine:
+    def get(self, cfg: ModelConfig, params: dict,
+            device=None) -> GenerationEngine:
         # key on weight identity too: two tiers can share an architecture
         # (same cfg.name) with different trained params, and must not
-        # silently serve each other's model (the pooled engine keeps the
-        # params pytree alive, so id() stays valid for the cache lifetime)
-        key = (cfg.name, id(params))
+        # silently serve each other's model. The pool itself pins the
+        # caller's pytree (_params_refs) so id(params) cannot be
+        # recycled for the key's lifetime — a device-pinned engine
+        # rebinds its params to the device copy and must not be the one
+        # carrying that guarantee. Device is part of the key: the same
+        # weights pinned to two devices (sharding.placement) are two
+        # engines with independent jit caches and KV-cache residency.
+        key = (cfg.name, id(params),
+               None if device is None else (device.platform, device.id))
         eng = self._engines.get(key)
         if eng is None:
             eng = GenerationEngine(cfg, params,
                                    max_new_tokens=self.max_new_tokens,
-                                   temperature=self.temperature)
+                                   temperature=self.temperature,
+                                   device=device)
             self._engines[key] = eng
+            self._params_refs[key] = params
         return eng
 
     def __len__(self) -> int:

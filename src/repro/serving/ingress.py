@@ -451,15 +451,19 @@ class ContinuousBatcher:
                 yield self.IDLE_POLL       # open stream, nothing due yet
 
     def run_trace(self, tokens: np.ndarray,
-                  arrivals: Sequence[float] | None = None):
+                  arrivals: Sequence[float] | None = None, *,
+                  clock=None):
         """Synchronous trace replay: requests (rows of ``tokens``)
         become visible at their ``arrivals`` offsets on a wall clock,
-        and the loop sleeps through genuinely idle gaps. Returns the
-        folded ``ServeResult`` (answers in submission order)."""
+        and the loop sleeps through genuinely idle gaps. An injected
+        monotonic ``clock`` replaces the wall clock (tests; it must
+        eventually pass every arrival offset or the trace never
+        drains). Returns the folded ``ServeResult``."""
         t_start = time.perf_counter()
 
-        def clock() -> float:
-            return time.perf_counter() - t_start
+        if clock is None:
+            def clock() -> float:
+                return time.perf_counter() - t_start
 
         queue = IngressQueue()
         queue.submit_burst(tokens, arrivals)

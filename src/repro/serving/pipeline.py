@@ -87,6 +87,11 @@ class TierSpec:
     price: ApiCost
     prompt: PromptSpec | None = None
     n_out: int = 1
+    # the jax.Device this tier's model is pinned to (sharding.placement);
+    # None = wherever the backend already lives (shared default device).
+    # Placement happens where the tier's params are created/moved — this
+    # field records the decision for telemetry and scheduling.
+    device: object | None = None
 
 
 @dataclasses.dataclass
@@ -189,8 +194,16 @@ class ServingPipeline:
     # a ServingStrategy, or None for the classic fixed cascade — every
     # serving path is bit-identical to the fixed cascade when unset
     strategy: object | None = None
+    # pending-set compaction mode for the batch cascade ("host" numpy |
+    # "device" jitted gather+prefix-sum | "pallas" kernel) — opt-in,
+    # bit-identical to "host" (repro.kernels.cascade_compact)
+    compact: str = "host"
 
     def __post_init__(self):
+        from repro.core.cascade import COMPACT_MODES
+        if self.compact not in COMPACT_MODES:
+            raise ValueError(f"unknown compact mode {self.compact!r}; "
+                             f"expected one of {COMPACT_MODES}")
         if self.cache is not None and self.embed is None:
             raise ValueError("a completion cache needs an embed function "
                              "(reuse the scorer encoder, see builder)")
@@ -317,7 +330,8 @@ class ServingPipeline:
         if len(miss):
             res = execute_cascade(self._cascade_tiers(), thresholds,
                                   self._pos_scorer, tokens[miss],
-                                  batch_size=self.batch_size, entry=entries)
+                                  batch_size=self.batch_size, entry=entries,
+                                  compact=self.compact)
             res_ans = np.asarray(res["answers"])
             cost[miss] = res["cost"]
             stopped_at[miss] = res["stopped_at"]

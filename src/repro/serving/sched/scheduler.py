@@ -39,6 +39,14 @@ entry tier, reads governor-adjusted thresholds at dispatch, and feeds
 every finished request's cost back to the governor; with no strategy
 every decision is bit-identical to the fixed cascade.
 
+With per-tier device placement (``repro.sharding.placement``) each
+tier's model is pinned to its own ``jax.Device`` (``TierSpec.device``),
+so the workers' concurrent chunks decode on disjoint devices instead of
+timesharing one — tier overlap is then limited by the tiers themselves,
+not by a shared device queue. The pins are recorded in
+``stats()["tier_devices"]``; placement never changes results
+(tests/test_placement.py), only where they are computed.
+
 Concurrency contract (see ``tier_step``): each tier's ``invoke`` is
 only ever entered by that tier's worker, so tier backends (e.g. a
 ``GenerationEngine``) need no internal locking — but two ``TierSpec``
@@ -420,14 +428,18 @@ class TierScheduler:
         return self.result(clock())
 
     def run_trace(self, tokens: np.ndarray,
-                  arrivals: Sequence[float] | None = None):
+                  arrivals: Sequence[float] | None = None, *,
+                  clock=None):
         """Synchronous trace replay: requests (rows of ``tokens``)
-        become visible at their ``arrivals`` offsets on a wall clock.
-        Returns the folded ``ServeResult`` (submission order)."""
+        become visible at their ``arrivals`` offsets on a wall clock —
+        or on an injected monotonic ``clock`` (deadline/holdback tests
+        use a fake clock so they can't flake on loaded CI; an injected
+        clock must eventually pass every arrival offset or the trace
+        never drains). Returns the folded ``ServeResult``."""
         queue = IngressQueue()
         queue.submit_burst(tokens, arrivals)
         queue.close()
-        return asyncio.run(self.serve_async(queue))
+        return asyncio.run(self.serve_async(queue, clock=clock))
 
     # -- folding into ServeResult ------------------------------------------
     def stats(self, total_s: float) -> dict:
@@ -456,6 +468,13 @@ class TierScheduler:
             "shed": self.shed_count,
             "degraded": self.degraded_count,
             "queue_peak": list(self.queue_peak),
+            # per-tier device pins (sharding.placement) — None entries
+            # mean the tier shares the default device; with every tier
+            # pinned to its own device the workers' chunk overlap is no
+            # longer serialized on one device's queue
+            "tier_devices": [None if s.device is None else
+                             f"{s.device.platform}:{s.device.id}"
+                             for s in self.pipeline.tiers],
         }
 
     def result(self, total_s: float):

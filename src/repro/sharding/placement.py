@@ -1,0 +1,99 @@
+"""Per-tier device placement for the serving cascade.
+
+The parallel tier scheduler (``repro.serving.sched``) gives every
+cascade tier its own worker thread, but all tier models share one
+default device, so concurrency is capped by that device's throughput.
+This module assigns each tier's model its own ``jax.Device`` so tier
+workers dispatch to disjoint devices and chunk decode genuinely
+overlaps (ROADMAP "Per-tier devices"; the multi-host pjit mesh of
+DESIGN.md §5 is the follow-up — one *local* device per tier is the
+single-host rung of that ladder).
+
+Sizing: ``plan_placement`` takes the cascade's observed (or predicted)
+per-tier traffic — ``ServeResult.tier_counts`` online, the offline
+replay's pending fractions in the builder — and greedily balances
+tiers over devices so the busiest tiers get the least-loaded devices
+first. Without traffic counts it falls back to round-robin. With fewer
+devices than tiers, devices are shared; with one device the plan
+degenerates to today's shared-device behaviour — placement can never
+change results, only where they are computed (the equivalence suite in
+tests/test_placement.py pins that).
+
+Placement is enacted by moving a tier's params with ``place_params``:
+jax runs a jitted computation on the device its committed arguments
+live on, so pinning the params pins every chunk the tier decodes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class TierPlacement:
+    """A device assignment for one cascade: ``devices[j]`` hosts tier j."""
+
+    devices: tuple                 # one jax.Device per cascade tier
+    shares: tuple | None = None    # traffic share the sizing used
+
+    def for_tier(self, j: int):
+        return self.devices[j]
+
+    @property
+    def n_distinct(self) -> int:
+        return len({d.id for d in self.devices})
+
+    def describe(self, names: Sequence[str] | None = None) -> str:
+        parts = []
+        for j, d in enumerate(self.devices):
+            nm = names[j] if names else f"tier{j}"
+            share = (f" ({self.shares[j]:.2f})" if self.shares is not None
+                     else "")
+            parts.append(f"{nm}{share} -> {d.platform}:{d.id}")
+        return ", ".join(parts)
+
+
+def plan_placement(n_tiers: int, devices: Sequence | None = None,
+                   tier_counts: Sequence[float] | None = None
+                   ) -> TierPlacement:
+    """Assign each of ``n_tiers`` cascade tiers a device.
+
+    ``tier_counts`` — queries *reaching* each tier (``ServeResult.
+    tier_counts``, or any proportional traffic-share signal): tiers are
+    placed heaviest-first onto the device with the least accumulated
+    share, so the hot cheap tiers end up alone on a device while the
+    rarely-reached top tiers share. ``None`` falls back to round-robin.
+    The plan is deterministic (ties break on device order).
+    """
+    if n_tiers < 1:
+        raise ValueError(f"n_tiers must be >= 1, got {n_tiers}")
+    devs = list(devices) if devices is not None else list(jax.local_devices())
+    if not devs:
+        raise ValueError("no devices to place tiers on")
+    if tier_counts is not None and len(tier_counts) != n_tiers:
+        raise ValueError(f"tier_counts must have {n_tiers} entries, "
+                         f"got {len(tier_counts)}")
+    if tier_counts is None or sum(tier_counts) <= 0:
+        return TierPlacement(tuple(devs[j % len(devs)]
+                                   for j in range(n_tiers)))
+    total = float(sum(tier_counts))
+    shares = [float(c) / total for c in tier_counts]
+    load = [0.0] * len(devs)
+    assignment: list = [None] * n_tiers
+    # heaviest tier first; ties keep ascending tier order (stable sort)
+    for j in sorted(range(n_tiers), key=lambda j: -shares[j]):
+        d = min(range(len(devs)), key=lambda d: (load[d], d))
+        assignment[j] = devs[d]
+        load[d] += shares[j]
+    return TierPlacement(tuple(assignment), tuple(shares))
+
+
+def place_params(params, device):
+    """Move a tier model's params pytree onto ``device`` (committed), so
+    every jitted call over them runs there. No-op placement-wise when
+    ``device`` is None."""
+    if device is None:
+        return params
+    return jax.device_put(params, device)

@@ -236,14 +236,26 @@ def test_late_duplicate_hits_cache_populated_mid_stream():
 
 def test_admission_during_decode_packs_later_arrivals():
     """Requests that arrive while an earlier chunk is decoding join the
-    tier's next chunk instead of waiting for a closed batch."""
-    pipe = _toy_pipeline(with_cache=False, tier_sleep=0.03)
+    tier's next chunk instead of waiting for a closed batch. Driven on
+    an injected fake clock with explicit admission waves — the old
+    wall-clock version raced a 5ms arrival against a 30ms decode sleep
+    and could flake whenever a loaded CI host stalled past the gap."""
+    pipe = _toy_pipeline(with_cache=False)
+    batcher = ContinuousBatcher(pipe, max_chunk=8, holdback=0.0)
     toks = _tokens(8)
-    # 4 requests at t=0, 4 more arriving while chunk 1 sleeps (30ms)
-    arrivals = np.array([0.0] * 4 + [0.005] * 4)
-    res = ContinuousBatcher(pipe, max_chunk=8, holdback=0.0).run_trace(
-        toks, arrivals)
-    assert res.ingress["chunks_per_tier"][0] == 2      # 4-row, then 4-row
+    queue = IngressQueue()
+    queue.submit_burst(toks, np.array([0.0] * 4 + [0.005] * 4))
+    # t=0: only the first wave is due; it dispatches as a 4-row chunk
+    batcher.admit(queue.due(0.0), 0.0)
+    batcher.step(batcher._pick_tier(0.0, drain=False), lambda: 0.0)
+    assert batcher.chunks_per_tier[0] == 1
+    # the second wave "arrives while chunk 1 decodes": admitted at
+    # t=0.01, it packs into tier 0's NEXT chunk, not a closed batch
+    batcher.admit(queue.due(0.01), 0.01)
+    while batcher.has_work():
+        batcher.step(batcher._pick_tier(0.01, drain=True), lambda: 0.01)
+    assert batcher.chunks_per_tier[0] == 2             # 4-row, then 4-row
+    res = batcher.result(0.02)
     assert res.n == 8 and (res.stopped_at >= 0).all()
     a = _toy_pipeline(with_cache=False).serve(toks)
     assert np.array_equal(a.answers, res.answers)

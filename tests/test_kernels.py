@@ -1,8 +1,11 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
+from repro.kernels.cascade_compact.ops import compact
+from repro.kernels.cascade_compact.ref import compact_ref
 from repro.kernels.decode_attention.ops import gqa_decode
 from repro.kernels.decode_attention.ref import decode_ref
 from repro.kernels.flash_attention.ops import mha
@@ -111,3 +114,63 @@ def test_expert_mlp_against_einsum():
         jnp.einsum("ecd,edf->ecf", x, wu)
     r = jnp.einsum("ecf,efd->ecd", h, wd)
     assert jnp.allclose(o, r, atol=1e-3, rtol=1e-3)
+
+
+# -- cascade pending-set compaction (gather + prefix-sum) -------------------
+# accept-mask edge cases per the serving cascade: all-accept empties the
+# pending set, none-accept keeps it whole, single rows and non-pow2
+# batches must survive the fixed-shape padding. Both device backends are
+# BIT-identical to the numpy oracle (the serving equivalence suite in
+# tests/test_placement.py builds on this).
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("n", [1, 2, 7, 16, 33, 200])   # single row, non-pow2
+def test_cascade_compact_sweep(n, backend):
+    rng = np.random.default_rng(n)
+    idx = rng.permutation(n).astype(np.int64) * 5       # non-trivial values
+    for accept in (np.ones(n, bool),                    # all-accept
+                   np.zeros(n, bool),                   # none-accept
+                   rng.random(n) < 0.4):                # mixed
+        keep = ~accept                                  # rejected rows stay
+        ro, rc = compact_ref(idx, keep)
+        o, c = compact(idx, keep, backend=backend)
+        assert int(c) == rc
+        assert np.array_equal(np.asarray(o), ro.astype(np.int32))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_cascade_compact_preserves_order_and_padding(backend):
+    idx = np.array([40, 10, 30, 20, 50], np.int64)
+    keep = np.array([True, False, True, True, False])
+    o, c = compact(idx, keep, backend=backend, fill=-7)
+    assert int(c) == 3
+    assert np.asarray(o).tolist() == [40, 30, 20, -7, -7]   # original order
+
+
+def test_cascade_compact_empty_and_validation():
+    o, c = compact(np.zeros(0, np.int64), np.zeros(0, bool))
+    assert int(c) == 0 and len(np.asarray(o)) == 0
+    with pytest.raises(ValueError, match="backend"):
+        compact(np.arange(4), np.ones(4, bool), backend="cuda")
+    with pytest.raises(ValueError, match="1-D"):
+        compact(np.arange(4), np.ones(3, bool))
+    with pytest.raises(ValueError, match="1-D"):
+        compact(np.arange(4).reshape(2, 2), np.ones((2, 2), bool))
+
+
+@pytest.mark.parametrize("block", [8, 32])
+def test_cascade_compact_pallas_multi_block(block):
+    """The block-sequential kernel: survivors spanning many grid steps
+    land at the right running offsets, later blocks overwrite earlier
+    garbage tails, and non-multiple-of-block sizes pad cleanly."""
+    rng = np.random.default_rng(3)
+    n = 101                                  # not a multiple of any block
+    idx = rng.permutation(n).astype(np.int64)
+    for density in (0.0, 0.5, 1.0):
+        keep = rng.random(n) < density if density not in (0.0, 1.0) \
+            else np.full(n, bool(density))
+        ro, rc = compact_ref(idx, keep)
+        o, c = compact(idx, keep, backend="pallas", block=block)
+        assert int(c) == rc
+        assert np.array_equal(np.asarray(o), ro.astype(np.int32))

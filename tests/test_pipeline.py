@@ -139,6 +139,112 @@ def test_cache_lru_insert_larger_than_capacity_keeps_newest():
     assert ans[5:].tolist() == [5, 6, 7, 8]
 
 
+def test_cache_lfu_eviction_order():
+    """LFU evicts the least-frequently-used entry — a steady hot set
+    survives a flood of one-off queries that would age everything out
+    of an LRU."""
+    cache = CompletionCache(capacity=4, threshold=0.99, policy="lfu")
+    emb = np.eye(6, 8, dtype=np.float32)
+    cache.insert(emb[:4], np.arange(4, dtype=np.int32))
+    for _ in range(2):                          # entries 0, 1 become hot
+        hit, _ = cache.lookup(emb[0:2])
+        assert hit.all()
+    # entries 2 and 3 are tied at zero hits; 2 is least recently used
+    cache.insert(emb[4:5], np.array([4], np.int32))
+    hit, _ = cache.lookup(emb[2:3])
+    assert not hit[0]                           # 2 evicted
+    # next victim: entry 3 (still zero hits; 4 was hit by the probe? no
+    # — a miss refreshes nothing, and 4 has zero hits but is younger)
+    cache.insert(emb[5:6], np.array([5], np.int32))
+    hit, _ = cache.lookup(emb[3:4])
+    assert not hit[0]                           # 3 evicted, 4 survived
+    for i, want in [(0, 0), (1, 1), (4, 4), (5, 5)]:
+        hit, ans = cache.lookup(emb[i:i + 1])
+        assert hit[0] and ans[0] == want
+
+
+def test_cache_lfu_tie_breaks_least_recently_used():
+    """All-zero hit counts: the tie breaks on recency, and an insert
+    resets the slot's count so a recycled slot doesn't inherit the old
+    entry's popularity."""
+    cache = CompletionCache(capacity=3, threshold=0.99, policy="lfu")
+    emb = np.eye(5, 8, dtype=np.float32)
+    cache.insert(emb[:3], np.arange(3, dtype=np.int32))
+    cache.insert(emb[3:4], np.array([3], np.int32))   # evicts 0 (oldest)
+    hit, _ = cache.lookup(emb[0:1])
+    assert not hit[0]
+    cache.insert(emb[4:5], np.array([4], np.int32))   # evicts 1, not 3
+    hit, _ = cache.lookup(emb[1:2])
+    assert not hit[0]
+    hit, ans = cache.lookup(emb[3:4])
+    assert hit[0] and ans[0] == 3
+
+
+def test_cache_ttl_expires_at_lookup():
+    """An entry older than ``ttl`` is invalidated AT LOOKUP — never
+    served stale — on an injected clock (no sleeping)."""
+    t = {"now": 0.0}
+    cache = CompletionCache(capacity=4, threshold=0.99, ttl=10.0,
+                            time_fn=lambda: t["now"])
+    emb = np.eye(2, 8, dtype=np.float32)
+    cache.insert(emb[0:1], np.array([7], np.int32))
+    t["now"] = 5.0
+    cache.insert(emb[1:2], np.array([8], np.int32))
+    hit, ans = cache.lookup(emb)                # both inside their ttl
+    assert hit.all() and ans.tolist() == [7, 8]
+    t["now"] = 12.0                             # entry 0 is 12s old now
+    hit, ans = cache.lookup(emb)
+    assert hit.tolist() == [False, True] and ans[1] == 8
+    assert cache.expired == 1
+    t["now"] = 20.0                             # entry 1 expires too
+    hit, _ = cache.lookup(emb)
+    assert not hit.any() and cache.expired == 2
+    # an expired slot is reusable: fresh insert serves again
+    cache.insert(emb[0:1], np.array([9], np.int32))
+    hit, ans = cache.lookup(emb[0:1])
+    assert hit[0] and ans[0] == 9
+
+
+def test_cache_insert_evicts_expired_before_live():
+    """insert() expires stale entries first: an expired slot is the
+    victim even when its tick/frequency sorts above a live entry's —
+    otherwise the cache silently sheds live entries while dead ones
+    squat in their slots."""
+    t = {"now": 0.0}
+    cache = CompletionCache(capacity=2, threshold=0.99, policy="lru",
+                            ttl=10.0, time_fn=lambda: t["now"])
+    emb = np.eye(3, 8, dtype=np.float32)
+    cache.insert(emb[0:1], np.array([0], np.int32))     # A at t=0
+    t["now"] = 8.0
+    cache.insert(emb[1:2], np.array([1], np.int32))     # B at t=8
+    t["now"] = 9.0
+    hit, _ = cache.lookup(emb[0:1])                     # refresh A's tick
+    assert hit[0]
+    t["now"] = 12.0                                     # A expired, B live
+    cache.insert(emb[2:3], np.array([2], np.int32))     # must evict A
+    hit, ans = cache.lookup(emb[1:3])
+    assert hit.tolist() == [True, True]                 # B survived
+    assert ans.tolist() == [1, 2]
+
+
+def test_cache_ttl_refresh_on_reinsert_and_validation():
+    """Re-inserting an answer restamps its birth; bad ttl fails loudly."""
+    t = {"now": 0.0}
+    cache = CompletionCache(capacity=4, threshold=0.99, policy="lru",
+                            ttl=10.0, time_fn=lambda: t["now"])
+    emb = np.eye(1, 8, dtype=np.float32)
+    cache.insert(emb, np.array([1], np.int32))
+    t["now"] = 8.0
+    cache.insert(emb, np.array([1], np.int32))  # lru: refills a slot now
+    t["now"] = 15.0                             # 7s after the re-insert
+    hit, ans = cache.lookup(emb)
+    assert hit[0] and ans[0] == 1
+    with pytest.raises(ValueError, match="ttl"):
+        CompletionCache(ttl=0.0)
+    with pytest.raises(ValueError, match="ttl"):
+        CompletionCache(ttl=-1.0)
+
+
 def test_cache_score_confidence_floor():
     """Answers the scorer distrusted are never cached; NaN (unscored
     last-tier answers) counts as trusted."""

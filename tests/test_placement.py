@@ -1,0 +1,299 @@
+"""Per-tier device placement + on-device cascade compaction: the
+machine-checked equivalence guarantee.
+
+The contract (ISSUE 5 / ROADMAP "Per-tier devices", "Cascade executor
+on-device"): placement and compaction are *performance* knobs — every
+combination of {host, device, pallas} pending-set compaction x {shared
+device, pinned per-tier devices} x {serve, serial stream, parallel
+scheduler} returns bit-identical answers, costs, stopped_at and
+tier_counts. The suite drives randomly generated marketplaces (random
+tier models as real jitted projections, random thresholds, random
+arrival traces) through the full matrix:
+
+  * property-based (hypothesis) when available, a deterministic seeded
+    sweep always;
+  * placement-plan units (traffic-share sizing, round-robin fallback);
+  * a subprocess leg on a forced 4-device CPU host, where pinned
+    placement genuinely lands tiers on distinct devices (CI runs the
+    whole module that way too — see .github/workflows/ci.yml).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.approx import CompletionCache
+from repro.core.cost import ApiCost
+from repro.core.prompt import PromptSpec
+from repro.serving.pipeline import ServingPipeline, TierSpec
+from repro.sharding.placement import place_params, plan_placement
+
+COMPACTS = ("host", "device", "pallas")
+WIDTH = 8                      # token width of the generated streams
+
+
+@jax.jit
+def _proj(w, t):
+    """The random tier model: argmax of a random projection — a real
+    jitted computation, so a pinned ``w`` pins the tier's compute."""
+    return jnp.argmax(t.astype(jnp.float32) @ w, -1)
+
+
+def _marketplace(seed: int, n_tiers: int) -> dict:
+    """A random marketplace: per-tier projection weights, random
+    escalating prices, random thresholds, a row-wise hash scorer.
+    Everything derives from ``seed`` so every pipeline variant sees the
+    exact same marketplace."""
+    rng = np.random.default_rng(seed)
+    return {
+        "ws": [rng.standard_normal((WIDTH, 5)).astype(np.float32)
+               for _ in range(n_tiers)],
+        "prices": [ApiCost(10.0 * 3 ** j * float(rng.uniform(0.5, 1.5)),
+                           10.0 * 3 ** j, 0.0) for j in range(n_tiers)],
+        "thresholds": [float(t) for t in
+                       np.round(rng.uniform(0.2, 0.8, n_tiers - 1), 3)],
+        "scorer_p": int(rng.integers(3, 89)),
+    }
+
+
+def _pipeline(mp: dict, compact: str, placement, with_cache: bool,
+              batch_size: int = 8) -> ServingPipeline:
+    n_tiers = len(mp["ws"])
+    tiers = []
+    for j in range(n_tiers):
+        dev = placement.for_tier(j) if placement is not None else None
+        w = place_params(jnp.asarray(mp["ws"][j]), dev)
+        tiers.append(TierSpec(
+            f"t{j}",
+            lambda t, w=w: np.asarray(_proj(w, t)).astype(np.int32),
+            mp["prices"][j],
+            prompt=PromptSpec(tuple(range(j + 1)), 100, 40),
+            device=dev))
+
+    p = mp["scorer_p"]
+
+    def scorer(t, a):              # row-wise deterministic hash in [0,1]
+        return ((t[:, 0].astype(np.int64) * p + a.astype(np.int64))
+                % 97) / 96.0
+
+    def embed(tokens):             # distinct rows -> distinct embeddings
+        e = np.zeros((len(tokens), 64), np.float32)
+        e[np.arange(len(tokens)), tokens[:, 0] % 64] = 1.0
+        return e
+
+    return ServingPipeline(
+        tiers=tiers, thresholds=mp["thresholds"], scorer=scorer,
+        cache=CompletionCache(capacity=128, threshold=0.99)
+        if with_cache else None,
+        embed=embed if with_cache else None,
+        full_prompt_tokens=840, pad_token=-1, batch_size=batch_size,
+        compact=compact)
+
+
+def _tokens(seed: int, n: int) -> np.ndarray:
+    toks = np.random.default_rng(seed + 7).integers(
+        0, 50, size=(n, WIDTH)).astype(np.int32)
+    toks[:, 0] = np.arange(n)      # distinct rows: no accidental cache
+    return toks                    # twins to diverge the stream paths
+
+
+def _assert_same(ref, res, tag: str):
+    assert np.array_equal(ref.answers, res.answers), tag
+    assert ref.answers.dtype == res.answers.dtype, tag
+    assert (ref.cost == res.cost).all(), tag           # bit-identical f64
+    assert np.array_equal(ref.stopped_at, res.stopped_at), tag
+    assert ref.tier_counts == res.tier_counts, tag
+    assert (ref.cache_hits, ref.cache_misses) == \
+        (res.cache_hits, res.cache_misses), tag
+
+
+def _run_matrix(seed: int, n: int = 16, n_tiers: int = 3,
+                with_cache: bool = True, spread: bool = True):
+    """One random marketplace through the full equivalence matrix."""
+    mp = _marketplace(seed, n_tiers)
+    toks = _tokens(seed, n)
+    arrivals = (np.linspace(0.0, 0.02, n) if spread
+                else np.zeros(n))
+    # pinned plan sized by a synthetic compaction profile (cheap tiers
+    # see the most traffic, like a real cascade)
+    pinned = plan_placement(n_tiers,
+                            tier_counts=[n_tiers - j
+                                         for j in range(n_tiers)])
+    ref = _pipeline(mp, "host", None, with_cache).serve(toks)
+    for pname, placement in (("shared", None), ("pinned", pinned)):
+        for compact in COMPACTS:
+            tag = f"seed={seed} {pname}/{compact}"
+            _assert_same(ref, _pipeline(mp, compact, placement,
+                                        with_cache).serve(toks),
+                         tag + "/serve")
+            _assert_same(ref, _pipeline(mp, compact, placement,
+                                        with_cache).serve_stream(
+                             toks, arrivals, parallel=False),
+                         tag + "/serial")
+            _assert_same(ref, _pipeline(mp, compact, placement,
+                                        with_cache).serve_stream(
+                             toks, arrivals, parallel=True),
+                         tag + "/sched")
+    return ref
+
+
+# ---------------------------------------------------------------------------
+# the equivalence matrix: deterministic sweep (always) + hypothesis
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed,n,n_tiers,with_cache", [
+    (0, 16, 3, True),
+    (1, 24, 2, True),
+    (2, 16, 4, False),
+    (3, 9, 3, False),          # non-pow2 request count
+    (4, 1, 2, True),           # single request
+])
+def test_equivalence_matrix_deterministic(seed, n, n_tiers, with_cache):
+    _run_matrix(seed, n=n, n_tiers=n_tiers, with_cache=with_cache)
+
+
+def test_equivalence_matrix_burst_arrivals():
+    """All-at-t0 bursts (one admission wave) through the same matrix."""
+    _run_matrix(5, n=12, n_tiers=3, spread=False)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                               # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31 - 1),
+           n=st.integers(2, 24),
+           n_tiers=st.integers(2, 4),
+           with_cache=st.booleans(),
+           spread=st.booleans())
+    def test_equivalence_matrix_property(seed, n, n_tiers, with_cache,
+                                         spread):
+        """Hypothesis-driven: random marketplaces, thresholds and
+        arrival traces — answers/costs/stopped_at/tier_counts are
+        bit-identical across the whole placement x compaction x path
+        matrix."""
+        _run_matrix(seed, n=n, n_tiers=n_tiers, with_cache=with_cache,
+                    spread=spread)
+
+
+# ---------------------------------------------------------------------------
+# placement-plan units
+# ---------------------------------------------------------------------------
+
+
+def test_plan_round_robin_fallback():
+    devs = jax.local_devices()
+    p = plan_placement(4, devices=devs)
+    assert len(p.devices) == 4 and p.shares is None
+    assert [d.id for d in p.devices] == \
+        [devs[j % len(devs)].id for j in range(4)]
+    # zero traffic falls back to round-robin too
+    p0 = plan_placement(3, devices=devs, tier_counts=[0, 0, 0])
+    assert [d.id for d in p0.devices] == \
+        [devs[j % len(devs)].id for j in range(3)]
+
+
+def test_plan_traffic_share_balances_load():
+    """Heaviest tier gets a device to itself; the light tail shares.
+    Uses fake device handles — the plan is pure bookkeeping."""
+    class Dev:
+        def __init__(self, i):
+            self.id, self.platform = i, "cpu"
+
+    devs = [Dev(0), Dev(1)]
+    p = plan_placement(3, devices=devs, tier_counts=[90, 8, 2])
+    assert p.devices[0].id != p.devices[1].id      # heavy tier isolated
+    assert p.devices[1].id == p.devices[2].id      # light tail shares
+    assert p.shares == pytest.approx((0.9, 0.08, 0.02))
+    assert p.n_distinct == 2
+    assert "->" in p.describe(["a", "b", "c"])
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="n_tiers"):
+        plan_placement(0)
+    with pytest.raises(ValueError, match="tier_counts"):
+        plan_placement(3, tier_counts=[1, 2])
+    with pytest.raises(ValueError, match="devices"):
+        plan_placement(2, devices=[])
+
+
+def test_pipeline_rejects_unknown_compact_mode():
+    mp = _marketplace(0, 2)
+    with pytest.raises(ValueError, match="compact"):
+        _pipeline(mp, "gpu-magic", None, False)
+    from repro.core.cascade import execute_cascade
+
+    with pytest.raises(ValueError, match="compact"):
+        execute_cascade([], [], None, np.zeros((0, 4)), compact="nope")
+
+
+def test_engine_pool_keys_on_device():
+    """Same weights pinned to a device are a distinct pooled engine."""
+    from repro.configs.registry import ARCHS
+    from repro.models import transformer as T
+    from repro.serving.engine import EnginePool
+
+    cfg = ARCHS["gemma3-1b"].reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    pool = EnginePool()
+    dev = jax.local_devices()[0]
+    e_shared = pool.get(cfg, params)
+    e_pinned = pool.get(cfg, params, device=dev)
+    assert e_shared is not e_pinned and len(pool) == 2
+    assert pool.get(cfg, params, device=dev) is e_pinned
+    toks = np.arange(12, dtype=np.int32).reshape(2, 6) + 1
+    assert np.array_equal(e_shared.generate(toks, n_new=3),
+                          e_pinned.generate(toks, n_new=3))
+
+
+def test_scheduler_reports_tier_devices():
+    mp = _marketplace(0, 2)
+    pinned = plan_placement(2, tier_counts=[3, 1])
+    res = _pipeline(mp, "host", pinned, False).serve_stream(_tokens(0, 8))
+    devs = res.ingress["tier_devices"]
+    assert len(devs) == 2 and all(d is not None for d in devs)
+    res = _pipeline(mp, "host", None, False).serve_stream(_tokens(0, 8))
+    assert res.ingress["tier_devices"] == [None, None]
+
+
+# ---------------------------------------------------------------------------
+# the multi-device leg: forced 4-device CPU host (subprocess, like
+# tests/test_shard_map_ops.py — this process keeps its single device)
+# ---------------------------------------------------------------------------
+
+
+def test_equivalence_on_forced_4_device_host():
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax
+assert len(jax.devices()) == 4, jax.devices()
+import test_placement as tp
+from repro.sharding.placement import plan_placement
+p = plan_placement(3, tier_counts=[16, 9, 4])
+assert p.n_distinct == 3           # every tier on its own device
+for seed in (0, 1):
+    tp._run_matrix(seed, n=12, n_tiers=3)
+print("PLACEMENT-4DEV-OK")
+"""
+    here = os.path.dirname(__file__)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(here, "..", "src"), here]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    env["JAX_PLATFORMS"] = "cpu"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert "PLACEMENT-4DEV-OK" in out.stdout, out.stderr[-3000:]

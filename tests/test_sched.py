@@ -257,17 +257,40 @@ def test_tiers_decode_concurrently():
 
 
 def test_deadline_ships_partial_chunks_early():
-    """A trickle that the fixed window would coalesce into one big late
-    chunk ships in several partial chunks when deadlines demand it."""
+    """A partial chunk that the fixed window would hold for 10s ships
+    the moment the head-of-line request's predicted completion would
+    miss its deadline.
+
+    Time is an injected fake clock the test advances by hand: while it
+    reads 0.0 the 4-row partial MUST hold (pressure point ~24ms away,
+    queue still open so drain can't ship it), and the moment it jumps
+    past the deadline the partial MUST ship — deterministic on any
+    host, where the old wall-clock arrival trickle could coalesce into
+    one chunk if the process stalled longer than the deadline."""
     toks = _tokens(8)
-    arrivals = np.linspace(0.0, 0.08, 8)
-    # huge holdback: the serial semantics would wait 10s to fill the
-    # chunk; a 30ms deadline forces shipping long before that
-    slo = SLOConfig(max_holdback_s=10.0, deadline_s=0.03,
-                    init_service_s=0.005)
-    res = TierScheduler(_toy_pipeline(with_cache=False), max_chunk=8,
-                        slo=slo).run_trace(toks, arrivals)
-    assert res.ingress["chunks_per_tier"][0] >= 2    # did NOT coalesce
+
+    async def go():
+        t = {"now": 0.0}
+        pipe = _toy_pipeline(with_cache=False)
+        # huge holdback: only deadline pressure can ship a partial
+        sched = TierScheduler(pipe, max_chunk=8, slo=SLOConfig(
+            max_holdback_s=10.0, deadline_s=0.03, init_service_s=0.005))
+        queue = IngressQueue()
+        task = asyncio.ensure_future(
+            sched.serve_async(queue, clock=lambda: t["now"]))
+        first = queue.submit_burst(toks[:4], with_future=True)
+        await asyncio.sleep(0.1)             # let the workers look
+        with sched._cv:                      # frozen at 0.0: held back
+            assert sched.chunks_per_tier[0] == 0
+        t["now"] = 0.05                      # past the pressure point:
+        await asyncio.wait_for(              # the partial ships now
+            asyncio.gather(*(r.future for r in first)), timeout=10.0)
+        queue.submit_burst(toks[4:])
+        queue.close()
+        return await asyncio.wait_for(task, timeout=10.0)
+
+    res = asyncio.run(go())
+    assert res.ingress["chunks_per_tier"][0] == 2    # did NOT coalesce
     assert res.ingress["deadline_total"] == 8
     # answers still exactly the batch path's
     a = _toy_pipeline(with_cache=False).serve(toks)
@@ -276,11 +299,21 @@ def test_deadline_ships_partial_chunks_early():
 
 
 def test_deadline_hit_rate_accounting():
-    """Loose deadlines on a fast pipeline: everything hits, and the
-    telemetry says so."""
-    res = TierScheduler(
-        _toy_pipeline(with_cache=False), max_chunk=8,
-        slo=SLOConfig(deadline_s=30.0)).run_trace(_tokens(16))
+    """Loose deadlines: everything hits, and the telemetry says so.
+    Runs on an injected FROZEN clock — every request finishes at t=0
+    against a 30s deadline by construction, so the accounting is exact
+    even on an arbitrarily loaded CI host (on a wall clock a long
+    enough stall could make this flake)."""
+    async def go():
+        sched = TierScheduler(_toy_pipeline(with_cache=False), max_chunk=8,
+                              slo=SLOConfig(deadline_s=30.0))
+        queue = IngressQueue()
+        queue.submit_burst(_tokens(16))
+        queue.close()
+        return await asyncio.wait_for(
+            sched.serve_async(queue, clock=lambda: 0.0), timeout=30.0)
+
+    res = asyncio.run(go())
     assert res.ingress["deadline_total"] == 16
     assert res.ingress["deadline_hit_rate"] == 1.0
 
@@ -398,15 +431,24 @@ def test_escalation_blocks_on_bounded_downstream_queue():
 
 def test_drain_mode_dispatch_ordering():
     """A closed queue drains FIFO per tier: the trailing partial chunk
-    ships immediately (no holdback stall) and rids stay in order."""
-    pipe = _toy_pipeline(with_cache=False)
-    sched = TierScheduler(pipe, max_chunk=4,
+    ships immediately (no holdback stall) and rids stay in order.
+
+    Runs on an injected FROZEN clock: the 10s holdback window can never
+    expire on it, so *finishing at all* proves drain dispatch ignores
+    the window — no wall-clock `elapsed < N` threshold left to flake on
+    a loaded CI host (a regression hangs and trips the wait_for bound
+    instead)."""
+    async def go(sched):
+        queue = IngressQueue()
+        queue.submit_burst(_tokens(10))      # 4 + 4 + 2 at tier 0
+        queue.close()
+        return await asyncio.wait_for(
+            sched.serve_async(queue, clock=lambda: 0.0), timeout=30.0)
+
+    sched = TierScheduler(_toy_pipeline(with_cache=False), max_chunk=4,
                           slo=SLOConfig(max_holdback_s=10.0))
-    t0 = time.perf_counter()
-    res = sched.run_trace(_tokens(10))       # 4 + 4 + 2 at tier 0
-    elapsed = time.perf_counter() - t0
+    res = asyncio.run(go(sched))
     assert res.ingress["chunks_per_tier"][0] == 3
-    assert elapsed < 5.0, "drain must not wait out the holdback window"
     # FIFO within the tier: each request's first chunk index is ordered
     by_rid = sorted(sched._requests, key=lambda r: r.rid)
     assert [r.rid for r in by_rid] == list(range(10))

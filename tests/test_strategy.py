@@ -442,7 +442,8 @@ def tiny_build():
         train_steps_cap=40, scorer_steps=60, budget_frac=0.5,
         contextual=True, budget_rate=5e-5, governor_window=16,
         router_steps=100, joint_search=True, joint_prompt_sizes=(0, 3, 5),
-        cache_policy="lru", cache_min_score=0.4,
+        cache_policy="lfu", cache_min_score=0.4, cache_ttl=3600.0,
+        place_tiers=True,      # contextual placement: entry-aware replay
         router=RouterConfig(m=2, top_lists=4, sample=96), verbose=False)
     return build_pipeline(cfg), cfg
 
@@ -450,9 +451,25 @@ def tiny_build():
 def test_build_cache_knobs_reach_the_cache(tiny_build):
     (pipe, _), cfg = tiny_build
     assert pipe.cache is not None
-    assert pipe.cache.policy == "lru"
+    assert pipe.cache.policy == "lfu"
     assert pipe.cache.min_score == pytest.approx(0.4)
+    assert pipe.cache.ttl == pytest.approx(3600.0)
     assert pipe.cache.capacity == cfg.cache_capacity
+
+
+def test_build_contextual_placement_uses_entry_aware_shares(tiny_build):
+    """With a contextual router, the placement sizing replays the
+    cascade WITH the learned entry tiers (all-enter-at-0 pending
+    fractions would size the wrong tiers)."""
+    (pipe, report), cfg = tiny_build
+    placement = report["placement"]
+    assert placement is not None
+    assert len(placement.devices) == len(pipe.tiers)
+    assert placement.shares is not None
+    # shares are the entry-aware replay's tier_counts, normalized
+    assert sum(placement.shares) == pytest.approx(1.0)
+    for spec, dev in zip(pipe.tiers, placement.devices):
+        assert spec.device is dev
 
 
 def test_build_joint_respects_budget_and_is_valid(tiny_build):
