@@ -67,8 +67,22 @@ class CascadeTier:
     invoke: Callable
 
 
+def _accept_threshold(dtype, threshold: float):
+    """Smallest ``dtype`` value t' with ``(x >= t') == (float64(x) >=
+    threshold)`` for every finite x of ``dtype`` — lets the accept rule
+    run natively on device scores (typically f32) while staying
+    bit-identical to the host float64 comparison: round the threshold
+    *up* to the next representable value whenever casting rounded it
+    down."""
+    t = np.asarray(threshold, dtype)
+    if float(t) < float(threshold):
+        t = np.nextafter(t, np.asarray(np.inf, dtype))
+    return t
+
+
 def tier_step(tier: CascadeTier, chunk, j: int, *, scorer: Callable,
-              threshold: float | None, last: bool, scorer_lock=None):
+              threshold: float | None, last: bool, scorer_lock=None,
+              device_masks: list | None = None):
     """One compaction step on ONE chunk: invoke tier j, score, accept.
 
     This is the single per-tier chunk implementation shared by the
@@ -90,6 +104,15 @@ def tier_step(tier: CascadeTier, chunk, j: int, *, scorer: Callable,
     (e.g. a ``GenerationEngine``) never sees concurrent calls — and
     (b) a ``scorer`` shared across tiers is either thread-safe or
     serialized by passing a ``scorer_lock`` (any context manager).
+
+    ``device_masks`` (optional, a list): when the scorer returns a
+    ``jax.Array``, the accept mask is computed *on device* — with the
+    threshold rounded so the native-dtype comparison matches the host
+    float64 rule exactly (``_accept_threshold``) — and the device mask
+    is appended to the list. The on-device cascade executor feeds these
+    masks straight into the compaction kernel, removing its last
+    host->device round-trip (the host ``accept`` returned here is the
+    transfer of that same mask, so bookkeeping cannot drift from it).
     """
     a, c = tier.invoke(chunk)
     a = np.asarray(a)
@@ -104,7 +127,17 @@ def tier_step(tier: CascadeTier, chunk, j: int, *, scorer: Callable,
         else:
             raw = scorer(chunk, a, j)
         s = np.asarray(raw, np.float64)
-        accept = s >= threshold
+        accept = None
+        if device_masks is not None:
+            import jax
+
+            if (isinstance(raw, jax.Array)
+                    and raw.dtype in (np.float16, np.float32, np.float64)):
+                mask = raw >= _accept_threshold(raw.dtype, threshold)
+                device_masks.append(mask)
+                accept = np.asarray(mask)
+        if accept is None:
+            accept = s >= threshold
     return a, c, s, accept
 
 
@@ -135,9 +168,12 @@ def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
     ``"host"`` (default) is the original numpy path; ``"device"`` keeps
     the pending indices on device and compacts them with a jitted
     gather + prefix-sum (``repro.kernels.cascade_compact``), so for
-    numeric queries the next tier's batch is gathered on device too;
-    ``"pallas"`` uses the Pallas kernel variant of the same step. All
-    three are bit-identical in every output (tests/test_placement.py).
+    numeric queries the next tier's batch is gathered on device too —
+    and when the scorer is jax-native the accept mask is fused on device
+    as well (``tier_step`` ``device_masks``), so compaction runs with no
+    host round-trip at all; ``"pallas"`` uses the Pallas kernel variant
+    of the same step. All three are bit-identical in every output
+    (tests/test_placement.py).
 
     All tier and scorer calls are chunked to ``batch_size``. Returns
     dict(answers, cost, stopped_at (cascade position, -1 = unanswered),
@@ -204,12 +240,14 @@ def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
               if dev_queries is not None else queries[pending])
         b = len(pending)
         ans_chunks, cost_chunks, score_chunks, accept_chunks = [], [], [], []
+        dev_masks: list = []
         last = j == m - 1
         for i in range(0, b, batch_size):
             chunk = qs[i:i + batch_size]
             a, c, s, acc = tier_step(
                 tier, chunk, j, scorer=scorer,
-                threshold=None if last else thresholds[j], last=last)
+                threshold=None if last else thresholds[j], last=last,
+                device_masks=dev_masks if on_device else None)
             ans_chunks.append(a)
             cost_chunks.append(c)
             score_chunks.append(s)
@@ -227,8 +265,16 @@ def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
         stopped_at[done] = j
         accepted_counts.append(int(accept.sum()))
         if on_device:
-            padded, cnt = compact_op(pending_dev, jnp.asarray(~accept),
-                                     backend=backend)
+            if len(dev_masks) == len(accept_chunks):
+                # every chunk's accept mask was fused on device
+                # (jax-native scorer): compaction consumes the device
+                # masks directly — no host->device mask upload
+                keep = (jnp.logical_not(dev_masks[0])
+                        if len(dev_masks) == 1 else
+                        jnp.logical_not(jnp.concatenate(dev_masks)))
+            else:
+                keep = jnp.asarray(~accept)
+            padded, cnt = compact_op(pending_dev, keep, backend=backend)
             pending_dev = padded[:int(cnt)]   # cnt sync sizes the slice
             # host mirror: the cost/answer scatters above are numpy, so
             # the indices come back each tier — what stays on device is

@@ -11,10 +11,12 @@ Demo (CPU):
       --contextual --budget-rate 3e-5     # entry routing + spend governor
   PYTHONPATH=src python -m repro.launch.serve --requests 200 --stream \\
       --devices 4 --on-device-compact     # per-tier device placement
+  PYTHONPATH=src python -m repro.launch.serve --requests 200 --stream \\
+      --mesh 8,1                          # per-tier mesh slices (sharded)
 
 Thin CLI over ``repro.serving.build_pipeline`` — this is the entry point
 a real deployment would point at the production mesh (tiers sharded with
-pjit per DESIGN.md §5).
+pjit per DESIGN.md §5; ``--mesh`` is that path on a forced-CPU grid).
 """
 from __future__ import annotations
 
@@ -22,25 +24,38 @@ import argparse
 import os
 import sys
 
-# --devices N forces an N-device host platform (CPU dev boxes have one
-# device; tier placement needs several). XLA locks the device count at
-# first use, so the flag must land in the environment BEFORE anything
-# imports jax — pre-parse it here, ahead of the repro imports below.
-# Both `--devices N` and `--devices=N` spellings count; if the user
-# already exported their own XLA_FLAGS we leave it alone and main()
-# warns when the resulting device count falls short.
+# --devices N / --mesh R,C force an N- (R*C-) device host platform (CPU
+# dev boxes have one device; tier placement/sharding needs several). XLA
+# locks the device count at first use, so the flag must land in the
+# environment BEFORE anything imports jax — pre-parse it here, ahead of
+# the repro imports below. Both `--flag V` and `--flag=V` spellings
+# count; if the user already exported their own XLA_FLAGS we leave it
+# alone and main() warns when the resulting device count falls short.
 
 
-def _preparse_devices(argv) -> str | None:
+def _preparse(argv, flag: str) -> str | None:
     for i, a in enumerate(argv):
-        if a == "--devices" and i + 1 < len(argv):
+        if a == flag and i + 1 < len(argv):
             return argv[i + 1]
-        if a.startswith("--devices="):
+        if a.startswith(flag + "="):
             return a.split("=", 1)[1]
     return None
 
 
-_n = _preparse_devices(sys.argv)
+def _parse_mesh(spec: str | None) -> tuple[int, int] | None:
+    if spec is None:
+        return None
+    parts = spec.split(",")
+    if len(parts) != 2 or not all(p.strip().isdigit() for p in parts):
+        return None
+    return int(parts[0]), int(parts[1])
+
+
+_n = _preparse(sys.argv, "--devices")
+_mesh = _parse_mesh(_preparse(sys.argv, "--mesh"))
+if _mesh is not None and (_n is None or not _n.isdigit()
+                          or int(_n) < _mesh[0] * _mesh[1]):
+    _n = str(_mesh[0] * _mesh[1])
 if (_n is not None and _n.isdigit() and int(_n) > 1
         and "XLA_FLAGS" not in os.environ):
     os.environ["XLA_FLAGS"] = \
@@ -108,6 +123,14 @@ def main():
                          "(forces an N-device CPU host when the "
                          "platform has fewer; results are bit-identical "
                          "to the shared device)")
+    ap.add_argument("--mesh", default=None,
+                    help="R,C: shard each cascade tier over its own "
+                         "contiguous slice of an RxC device grid (rows "
+                         "= data/FSDP axis, cols = tensor axis), sized "
+                         "by offline traffic share; forces an R*C-"
+                         "device CPU host when the platform has fewer. "
+                         "C=1 slices are bit-identical to the unsharded "
+                         "pipeline. Mutually exclusive with --devices")
     ap.add_argument("--on-device-compact", nargs="?", const="device",
                     choices=["device", "pallas"], default=None,
                     help="keep the cascade's pending-set compaction on "
@@ -117,14 +140,26 @@ def main():
     args = ap.parse_args()
     if args.devices is not None and args.devices < 1:
         ap.error("--devices must be >= 1")
-    if args.devices is not None and args.devices > 1:
+    mesh_shape = None
+    if args.mesh is not None:
+        mesh_shape = _parse_mesh(args.mesh)
+        if mesh_shape is None or min(mesh_shape) < 1:
+            ap.error("--mesh expects R,C with positive integers")
+        if args.devices is not None:
+            ap.error("--devices pins tiers to single devices, --mesh "
+                     "shards them over slices; pick one")
+    need = (args.devices if args.devices is not None
+            else mesh_shape[0] * mesh_shape[1] if mesh_shape else None)
+    if need is not None and need > 1:
         import jax
         avail = len(jax.local_devices())
-        if avail < args.devices:
+        if avail < need:
             # a pre-existing XLA_FLAGS wins over the pre-parse above
-            print(f"warning: {args.devices} devices requested but only "
+            print(f"warning: {need} devices requested but only "
                   f"{avail} available (XLA_FLAGS already set?); tiers "
                   f"will share devices")
+            if mesh_shape:
+                mesh_shape = (avail, 1)
     if args.serial and (args.deadline_ms is not None
                         or args.queue_cap is not None
                         or args.overload != "reject"):
@@ -146,6 +181,7 @@ def main():
         budget_rate=args.budget_rate,
         governor_window=args.governor_window,
         place_tiers=args.devices is not None,
+        shard_tiers=mesh_shape is not None, mesh_shape=mesh_shape,
         compact=args.on_device_compact or "host",
         router=RouterConfig(top_lists=10, sample=256)))
 

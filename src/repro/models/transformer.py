@@ -129,6 +129,91 @@ def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype=None):
 
 
 # ---------------------------------------------------------------------------
+# Scan-over-layers folding: absorb homogeneous prefix/suffix into the
+# scanned period stack (compile count stays O(1) in depth, and the whole
+# layer stack becomes ONE stacked pytree leaf per parameter — the unit
+# the per-tier mesh sharding in repro.sharding.tier_mesh partitions)
+# ---------------------------------------------------------------------------
+
+
+def _fold_counts(cfg: ModelConfig):
+    """(k_pre, k_suf, period): how many whole period-copies the prefix /
+    suffix fold into. A homogeneous prefix with no existing period
+    becomes its own period of length 1. (0, 0, cfg.period) = nothing to
+    fold."""
+    period = cfg.period
+    if not period:
+        if cfg.prefix and len(set(cfg.prefix)) == 1 and not cfg.suffix:
+            return len(cfg.prefix), 0, (cfg.prefix[0],)
+        return 0, 0, cfg.period
+    p = len(period)
+    k_pre = (len(cfg.prefix) // p
+             if cfg.prefix and cfg.prefix == period * (len(cfg.prefix) // p)
+             and len(cfg.prefix) % p == 0 else 0)
+    k_suf = (len(cfg.suffix) // p
+             if cfg.suffix and cfg.suffix == period * (len(cfg.suffix) // p)
+             and len(cfg.suffix) % p == 0 else 0)
+    return k_pre, k_suf, period
+
+
+def fold_config(cfg: ModelConfig) -> ModelConfig:
+    """Fold homogeneous prefix/suffix blocks into the scanned stack.
+
+    When the prefix (and/or suffix) is a whole number of copies of the
+    period pattern, those blocks are absorbed into ``n_periods`` so the
+    entire stack lowers to one ``jax.lax.scan`` — the flattened layer
+    sequence (``cfg.layers``) is unchanged, so the computation is
+    identical block for block. Returns ``cfg`` itself when nothing
+    folds."""
+    k_pre, k_suf, period = _fold_counts(cfg)
+    if k_pre == 0 and k_suf == 0:
+        return cfg
+    import dataclasses
+    return dataclasses.replace(
+        cfg,
+        prefix=cfg.prefix if k_pre == 0 else (),
+        suffix=cfg.suffix if k_suf == 0 else (),
+        period=period,
+        n_periods=cfg.n_periods + k_pre + k_suf)
+
+
+def fold_stack(cfg: ModelConfig, params):
+    """(cfg, params) -> (folded_cfg, folded_params).
+
+    The params counterpart of ``fold_config``: prefix/suffix block
+    params are restacked onto the leading axis of the ``period`` stack
+    (prefix copies in front, suffix copies behind), so every weight of
+    the folded stack lives in one stacked leaf. No-op (same objects
+    returned) when nothing folds; the flattened layer sequence — and so
+    the forward computation — is unchanged either way."""
+    k_pre, k_suf, period = _fold_counts(cfg)
+    if k_pre == 0 and k_suf == 0:
+        return cfg, params
+    p = len(period)
+
+    def group_stack(blocks):
+        groups = [{f"sub{i}": blocks[g * p + i] for i in range(p)}
+                  for g in range(len(blocks) // p)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+
+    parts = []
+    if k_pre:
+        parts.append(group_stack(params["prefix"]))
+    if cfg.n_periods:
+        parts.append(params["period"])
+    if k_suf:
+        parts.append(group_stack(params["suffix"]))
+    stacked = (parts[0] if len(parts) == 1 else
+               jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts))
+    folded = {k: v for k, v in params.items()
+              if k not in ("prefix", "suffix", "period")}
+    folded["prefix"] = [] if k_pre else params["prefix"]
+    folded["suffix"] = [] if k_suf else params["suffix"]
+    folded["period"] = stacked
+    return fold_config(cfg), folded
+
+
+# ---------------------------------------------------------------------------
 # Stack forward
 # ---------------------------------------------------------------------------
 

@@ -69,6 +69,15 @@ class BuildConfig:
     # workers then decode on disjoint devices. Results are bit-identical
     # to the shared-device pipeline (tests/test_placement.py).
     place_tiers: bool = False
+    # ... or per-tier mesh slices (sharding.tier_mesh): each tier's
+    # model is sharded over a contiguous sub-mesh sized by the same
+    # traffic signal — the multi-host rung of place_tiers (which it
+    # supersedes; setting both is an error). mesh_shape=(R, C) lays the
+    # local devices out as R rows ("data"/FSDP axis units) x C columns
+    # ("model" tensor axis); None = (n_devices, 1), data-parallel only,
+    # which keeps results bit-identical to the unsharded pipeline.
+    shard_tiers: bool = False
+    mesh_shape: tuple | None = None
     # pending-set compaction mode for the batch cascade path:
     # "host" numpy | "device" jitted gather+prefix-sum | "pallas" kernel
     compact: str = "host"
@@ -217,6 +226,8 @@ def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
     if cfg.budget_rate is not None:
         governor = BudgetGovernor(cfg.budget_rate, cas.thresholds,
                                   base_bar=cfg.entry_bar,
+                                  base_min_score=cfg.cache_min_score
+                                  if cfg.enable_cache else None,
                                   window=cfg.governor_window)
     if entry_router is not None or governor is not None:
         strategy = ServingStrategy(router=entry_router, governor=governor,
@@ -229,10 +240,12 @@ def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
     #    to their assigned device, so its chunks decode there. With a
     #    contextual router the replay honours the learned entry tiers —
     #    all-enter-at-0 pending fractions would size the wrong tiers.
-    placement = None
-    if cfg.place_tiers:
+    placement = mesh_plan = None
+    if cfg.place_tiers and cfg.shard_tiers:
+        raise ValueError("place_tiers pins tiers to single devices, "
+                         "shard_tiers slices a mesh over them — pick one")
+    if cfg.place_tiers or cfg.shard_tiers:
         from repro.core.cascade import execute_cascade, replay_tiers
-        from repro.sharding.placement import place_params, plan_placement
         if ent is not None:
             replay = execute_cascade(
                 replay_tiers(priced, cas.apis), cas.thresholds,
@@ -242,12 +255,24 @@ def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
         else:
             stop = list(metrics["stop_fracs"])
             reach = [1.0 - sum(stop[:j]) for j in range(len(cas.apis))]
+    if cfg.place_tiers:
+        from repro.sharding.placement import place_params, plan_placement
         placement = plan_placement(len(cas.apis), tier_counts=reach)
         for j, i in enumerate(cas.apis):
             apis[i].params = place_params(apis[i].params,
                                           placement.for_tier(j))
         say(f"tier placement: "
             f"{placement.describe([data.names[i] for i in cas.apis])}")
+    elif cfg.shard_tiers:
+        from repro.sharding.tier_mesh import plan_tier_meshes, shard_params
+        mesh_plan = plan_tier_meshes(len(cas.apis),
+                                     mesh_shape=cfg.mesh_shape,
+                                     tier_counts=reach)
+        for j, i in enumerate(cas.apis):
+            apis[i].params = shard_params(apis[i].params,
+                                          mesh_plan.for_tier(j))
+        say(f"tier mesh slices: "
+            f"{mesh_plan.describe([data.names[i] for i in cas.apis])}")
 
     # 7. assemble the pipeline
     cache = embed = None
@@ -261,7 +286,8 @@ def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
         embed = functools.partial(embed_queries, sp, cfg=SC.SCORER_CFG)
     tiers = [TierSpec(apis[i].name, apis[i].answer, apis[i].price,
                       prompt=prompts[i],
-                      device=placement.for_tier(j) if placement else None)
+                      device=placement.for_tier(j) if placement else None,
+                      mesh=mesh_plan.for_tier(j) if mesh_plan else None)
              for j, i in enumerate(cas.apis)]
     # savings baseline = the marketplace's most expensive tier, NOT the
     # cascade's last tier (a tight budget can drop the top tier entirely)
@@ -277,5 +303,5 @@ def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
               "cascade": cas, "metrics": metrics, "budget": budget,
               "prompts": prompts, "full_prompt_tokens": full_tokens,
               "strategy": strategy, "joint": joint_report,
-              "placement": placement}
+              "placement": placement, "mesh_plan": mesh_plan}
     return pipeline, report

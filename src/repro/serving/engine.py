@@ -69,8 +69,24 @@ class GenerationEngine:
     # committed there, so prefill/decode — and the KV cache between
     # decode steps — run and stay on that device. None = default device.
     device: object | None = None
+    # ... or shard it over a mesh slice (sharding.tier_mesh): params are
+    # sharded per sharding.rules (FSDP over "data", tensor axes over
+    # "model"), activations over batch, KV caches over heads, and every
+    # prefill/decode runs as a pjit-sharded computation on the slice.
+    # The layer stack is folded (models.transformer.fold_stack) so the
+    # whole depth scans as one stacked leaf — compile count stays O(1)
+    # in depth. Mutually exclusive with ``device``.
+    mesh: object | None = None
 
     def __post_init__(self):
+        if self.mesh is not None and self.device is not None:
+            raise ValueError("pass device= or mesh=, not both")
+        if self.mesh is not None:
+            from repro.sharding import tier_mesh
+            self.cfg, self.params = T.fold_stack(self.cfg, self.params)
+            self._param_shardings = tier_mesh.tier_param_shardings(
+                self.params, self.mesh)
+            self.params = jax.device_put(self.params, self._param_shardings)
         cfg = self.cfg
         if self.device is not None:
             self.params = jax.device_put(self.params, self.device)
@@ -102,13 +118,36 @@ class GenerationEngine:
         return True
 
     def _prefill_fn(self, key: tuple[int, int, int]) -> Callable:
-        _, _, max_len = key
+        b_b, s_b, max_len = key
         if key not in self._prefill_fns:
             self.compile_stats["prefill_compiles"] += 1
-            self._prefill_fns[key] = jax.jit(
-                lambda p, toks, last: T.prefill(
-                    p, {"tokens": toks}, self.cfg, max_len=max_len,
-                    last_index=last))
+
+            def fn(p, toks, last):
+                return T.prefill(p, {"tokens": toks}, self.cfg,
+                                 max_len=max_len, last_index=last)
+
+            if self.mesh is None:
+                self._prefill_fns[key] = jax.jit(fn)
+            else:
+                # pjit over the tier's slice: NamedSharding in/out
+                # shardings per bucket key (batch over "data", KV cache
+                # per sharding.rules — heads over "model" when they
+                # divide it), so GSPMD never has to guess a layout.
+                from repro.sharding import rules, tier_mesh
+                tok_sh = tier_mesh.batch_sharding(self.mesh, b_b)
+                rep = jax.sharding.NamedSharding(
+                    self.mesh, jax.sharding.PartitionSpec())
+                logits_s, cache_s = jax.eval_shape(
+                    fn, self.params,
+                    jax.ShapeDtypeStruct((b_b, s_b), jnp.int32),
+                    jax.ShapeDtypeStruct((), jnp.int32))
+                out_sh = (rules.logits_sharding(self.mesh, self.cfg, b_b),
+                          rules.cache_shardings(cache_s, self.mesh,
+                                                self.cfg))
+                self._prefill_fns[key] = jax.jit(
+                    fn,
+                    in_shardings=(self._param_shardings, tok_sh, rep),
+                    out_shardings=out_sh)
         return self._prefill_fns[key]
 
     def generate(self, tokens: np.ndarray, n_new: int | None = None,
@@ -131,8 +170,15 @@ class GenerationEngine:
 
         self.compile_stats["prefill_calls"] += 1
         fn = self._prefill_fn((b_b, s_b, max_len))
-        logits, cache = fn(self.params, jnp.asarray(toks),
-                           jnp.int32(s - 1))
+        if self.mesh is not None:
+            # the across-slice-boundary hop: host-compacted batches are
+            # device_put onto the tier's slice, batch split over "data"
+            from repro.sharding import tier_mesh
+            toks_dev = jax.device_put(
+                toks, tier_mesh.batch_sharding(self.mesh, b_b))
+        else:
+            toks_dev = jnp.asarray(toks)
+        logits, cache = fn(self.params, toks_dev, jnp.int32(s - 1))
         rkey = jax.random.PRNGKey(seed)
         last_logits = logits[:, -1]
         if self.temperature > 0:
@@ -166,24 +212,32 @@ class EnginePool:
         self._params_refs: dict[tuple, dict] = {}
 
     def get(self, cfg: ModelConfig, params: dict,
-            device=None) -> GenerationEngine:
+            device=None, mesh=None) -> GenerationEngine:
         # key on weight identity too: two tiers can share an architecture
         # (same cfg.name) with different trained params, and must not
         # silently serve each other's model. The pool itself pins the
         # caller's pytree (_params_refs) so id(params) cannot be
         # recycled for the key's lifetime — a device-pinned engine
         # rebinds its params to the device copy and must not be the one
-        # carrying that guarantee. Device is part of the key: the same
-        # weights pinned to two devices (sharding.placement) are two
-        # engines with independent jit caches and KV-cache residency.
-        key = (cfg.name, id(params),
-               None if device is None else (device.platform, device.id))
+        # carrying that guarantee. Device — or mesh-slice device set +
+        # shape — is part of the key: the same weights pinned to two
+        # devices or sharded over two slices (sharding.placement /
+        # sharding.tier_mesh) are distinct engines with independent
+        # NamedSharding-keyed jit caches and KV-cache residency.
+        if mesh is not None:
+            where = ("mesh", mesh.devices.shape,
+                     tuple(int(d.id) for d in mesh.devices.flat))
+        elif device is not None:
+            where = (device.platform, device.id)
+        else:
+            where = None
+        key = (cfg.name, id(params), where)
         eng = self._engines.get(key)
         if eng is None:
             eng = GenerationEngine(cfg, params,
                                    max_new_tokens=self.max_new_tokens,
                                    temperature=self.temperature,
-                                   device=device)
+                                   device=device, mesh=mesh)
             self._engines[key] = eng
             self._params_refs[key] = params
         return eng

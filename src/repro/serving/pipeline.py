@@ -92,6 +92,11 @@ class TierSpec:
     # Placement happens where the tier's params are created/moved — this
     # field records the decision for telemetry and scheduling.
     device: object | None = None
+    # ... or the mesh slice the tier's model is sharded over
+    # (sharding.tier_mesh): params sharded per sharding.rules, batches
+    # device_put onto the slice by the engine. Mutually exclusive with
+    # ``device``; like it, this records the decision for telemetry.
+    mesh: object | None = None
 
 
 @dataclasses.dataclass
@@ -268,7 +273,17 @@ class ServingPipeline:
         """Insert fresh answers — the cache is int-keyed, so non-integer
         (string/object generation) answers are skipped rather than
         crashed on or silently truncated. ``scores`` (accept-time
-        reliability) feed the cache's ``min_score`` confidence floor."""
+        reliability) feed the cache's ``min_score`` confidence floor.
+        When the strategy's budget governor owns that floor
+        (``BudgetGovernor.base_min_score``), the cache's floor is
+        refreshed from it first, so spend overruns loosen what is
+        cacheable and spare budget tightens it."""
+        strat = self.strategy
+        gov = getattr(strat, "governor", None) if strat is not None else None
+        if gov is not None:
+            ms = gov.min_score()
+            if ms is not None:
+                self.cache.min_score = ms
         a = np.asarray(answers)
         if a.dtype == object:
             try:

@@ -47,6 +47,15 @@ not by a shared device queue. The pins are recorded in
 ``stats()["tier_devices"]``; placement never changes results
 (tests/test_placement.py), only where they are computed.
 
+With per-tier mesh slices (``repro.sharding.tier_mesh``,
+``TierSpec.mesh``) each worker dispatches its chunks to its tier's
+*slice* instead: the tier backend device_puts the compacted chunk
+across the slice boundary (batch split over the slice's "data" axis)
+and runs it as a pjit-sharded computation — same worker model, the
+per-tier device becomes a per-tier device *set*, recorded in
+``stats()["tier_meshes"]``. Data-parallel slices never change results
+either (the sharded legs of tests/test_placement.py).
+
 Concurrency contract (see ``tier_step``): each tier's ``invoke`` is
 only ever entered by that tier's worker, so tier backends (e.g. a
 ``GenerationEngine``) need no internal locking — but two ``TierSpec``
@@ -446,6 +455,7 @@ class TierScheduler:
         """Ingress + scheduler telemetry (superset of the serial
         batcher's ``stats``): per-tier utilization and EWMA estimates,
         deadline-hit rate, shed/degraded counts, queue peaks."""
+        from repro.sharding.tier_mesh import mesh_desc as _mesh_desc
         served = [r for r in self._requests if r.done and not r.shed]
         lat = np.asarray([r.latency for r in served], np.float64)
         wait = np.asarray([r.queue_wait for r in served], np.float64)
@@ -475,6 +485,12 @@ class TierScheduler:
             "tier_devices": [None if s.device is None else
                              f"{s.device.platform}:{s.device.id}"
                              for s in self.pipeline.tiers],
+            # per-tier mesh slices (sharding.tier_mesh) — the sharded
+            # analogue of tier_devices: each worker dispatches to its
+            # tier's device *set*
+            "tier_meshes": [None if getattr(s, "mesh", None) is None
+                            else _mesh_desc(s.mesh)
+                            for s in self.pipeline.tiers],
         }
 
     def result(self, total_s: float):

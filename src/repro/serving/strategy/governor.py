@@ -14,7 +14,11 @@ scalar *shift* applied to every control surface:
     tiers; a negative shift raises them, converting spare budget into
     accuracy;
   * the contextual router's entry bar: ``bar - shift`` — the same dial
-    applied to where queries *enter* the cascade.
+    applied to where queries *enter* the cascade;
+  * the completion cache's ``min_score`` confidence floor:
+    ``floor - shift`` — overspending loosens the floor so more answers
+    become reusable (cache hits are free), spare budget tightens it so
+    only high-confidence answers are ever replayed.
 
 Both updates happen once per ``window`` observed queries, so the
 controller reacts within a few windows of a drift and cannot thrash on
@@ -47,6 +51,7 @@ class BudgetGovernor:
     budget_rate: float                  # target USD per served query
     base_thresholds: tuple              # the learned (offline) taus
     base_bar: float = 0.5               # the router's entry bar
+    base_min_score: float | None = None  # completion-cache score floor
     window: int = 64                    # queries per controller update
     eta: float = 0.5                    # dual step size (per window)
     max_shift: float = 0.35             # saturation of the threshold shift
@@ -122,6 +127,15 @@ class BudgetGovernor:
         """Current contextual-router entry bar."""
         return float(np.clip(self.base_bar - self.shift, 0.0, 1.0))
 
+    def min_score(self) -> float | None:
+        """Current completion-cache confidence floor (None when the
+        governor was not given one to own). Overspend (positive shift)
+        *loosens* the floor — more answers become cacheable, diverting
+        traffic to free hits; spare budget tightens it."""
+        if self.base_min_score is None:
+            return None
+        return float(np.clip(self.base_min_score - self.shift, 0.0, 1.0))
+
     # -- telemetry ---------------------------------------------------------
     def realized_rate(self) -> float:
         """Lifetime $/query over everything observed."""
@@ -136,5 +150,6 @@ class BudgetGovernor:
             "shift": self.shift,
             "thresholds": self.thresholds(),
             "entry_bar": self.entry_bar(),
+            "min_score": self.min_score(),
             "trace": list(self.trace),
         }

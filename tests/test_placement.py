@@ -1,21 +1,25 @@
 """Per-tier device placement + on-device cascade compaction: the
 machine-checked equivalence guarantee.
 
-The contract (ISSUE 5 / ROADMAP "Per-tier devices", "Cascade executor
-on-device"): placement and compaction are *performance* knobs — every
-combination of {host, device, pallas} pending-set compaction x {shared
-device, pinned per-tier devices} x {serve, serial stream, parallel
-scheduler} returns bit-identical answers, costs, stopped_at and
-tier_counts. The suite drives randomly generated marketplaces (random
-tier models as real jitted projections, random thresholds, random
-arrival traces) through the full matrix:
+The contract (ISSUE 5/6 / ROADMAP "Per-tier devices", "Cascade executor
+on-device", "Multi-host sharded tiers"): placement and compaction are
+*performance* knobs — every combination of {host, device, pallas}
+pending-set compaction x {shared device, pinned per-tier devices,
+per-tier mesh slices} x {serve, serial stream, parallel scheduler}
+returns bit-identical answers, costs, stopped_at and tier_counts. The
+suite drives randomly generated marketplaces (random tier models as
+real jitted projections, random thresholds, random arrival traces)
+through the full matrix:
 
   * property-based (hypothesis) when available, a deterministic seeded
     sweep always;
-  * placement-plan units (traffic-share sizing, round-robin fallback);
-  * a subprocess leg on a forced 4-device CPU host, where pinned
-    placement genuinely lands tiers on distinct devices (CI runs the
-    whole module that way too — see .github/workflows/ci.yml).
+  * placement/mesh-plan units (traffic-share sizing, round-robin
+    fallback, slice contiguity) and the fused on-device accept mask's
+    threshold-rounding rule;
+  * subprocess legs on forced 4- and 8-device CPU hosts, where pinned
+    placement genuinely lands tiers on distinct devices and mesh slices
+    genuinely split batches across devices (CI runs the whole module
+    both ways too — see .github/workflows/ci.yml).
 """
 import os
 import subprocess
@@ -31,6 +35,8 @@ from repro.core.cost import ApiCost
 from repro.core.prompt import PromptSpec
 from repro.serving.pipeline import ServingPipeline, TierSpec
 from repro.sharding.placement import place_params, plan_placement
+from repro.sharding.tier_mesh import (TierMeshPlan, batch_sharding,
+                                      plan_tier_meshes, shard_params)
 
 COMPACTS = ("host", "device", "pallas")
 WIDTH = 8                      # token width of the generated streams
@@ -65,14 +71,27 @@ def _pipeline(mp: dict, compact: str, placement, with_cache: bool,
     n_tiers = len(mp["ws"])
     tiers = []
     for j in range(n_tiers):
-        dev = placement.for_tier(j) if placement is not None else None
-        w = place_params(jnp.asarray(mp["ws"][j]), dev)
+        dev = mesh = None
+        if isinstance(placement, TierMeshPlan):
+            # sharded leg: w lives (replicated) on the tier's slice and
+            # each chunk is device_put across the slice boundary, batch
+            # split over "data" — the same hop the sharded engine makes
+            mesh = placement.for_tier(j)
+            w = shard_params(jnp.asarray(mp["ws"][j]), mesh)
+
+            def fn(t, w=w, mesh=mesh):
+                td = jax.device_put(t, batch_sharding(mesh, len(t)))
+                return np.asarray(_proj(w, td)).astype(np.int32)
+        else:
+            dev = placement.for_tier(j) if placement is not None else None
+            w = place_params(jnp.asarray(mp["ws"][j]), dev)
+
+            def fn(t, w=w):
+                return np.asarray(_proj(w, t)).astype(np.int32)
         tiers.append(TierSpec(
-            f"t{j}",
-            lambda t, w=w: np.asarray(_proj(w, t)).astype(np.int32),
-            mp["prices"][j],
+            f"t{j}", fn, mp["prices"][j],
             prompt=PromptSpec(tuple(range(j + 1)), 100, 40),
-            device=dev))
+            device=dev, mesh=mesh))
 
     p = mp["scorer_p"]
 
@@ -119,12 +138,14 @@ def _run_matrix(seed: int, n: int = 16, n_tiers: int = 3,
     arrivals = (np.linspace(0.0, 0.02, n) if spread
                 else np.zeros(n))
     # pinned plan sized by a synthetic compaction profile (cheap tiers
-    # see the most traffic, like a real cascade)
-    pinned = plan_placement(n_tiers,
-                            tier_counts=[n_tiers - j
-                                         for j in range(n_tiers)])
+    # see the most traffic, like a real cascade); the sharded plan sizes
+    # mesh slices from the same signal (data-parallel slices: exact)
+    counts = [n_tiers - j for j in range(n_tiers)]
+    pinned = plan_placement(n_tiers, tier_counts=counts)
+    sharded = plan_tier_meshes(n_tiers, tier_counts=counts)
     ref = _pipeline(mp, "host", None, with_cache).serve(toks)
-    for pname, placement in (("shared", None), ("pinned", pinned)):
+    for pname, placement in (("shared", None), ("pinned", pinned),
+                             ("sharded", sharded)):
         for compact in COMPACTS:
             tag = f"seed={seed} {pname}/{compact}"
             _assert_same(ref, _pipeline(mp, compact, placement,
@@ -228,6 +249,119 @@ def test_plan_validation():
         plan_placement(2, devices=[])
 
 
+def test_mesh_plan_units():
+    """Slice sizing: contiguity, >=1 device per tier, heavy tiers get
+    more rows, round-robin wrap with fewer rows than tiers. Fake device
+    handles — the plan is pure bookkeeping."""
+    class Dev:
+        def __init__(self, i):
+            self.id, self.platform = i, "cpu"
+
+    devs = [Dev(i) for i in range(8)]
+    p = plan_tier_meshes(3, devices=devs, tier_counts=[16, 9, 4])
+    assert p.devices_per_tier == (4, 3, 1)     # D'Hondt by share
+    ids = [tuple(int(d.id) for d in m.devices.flat) for m in p.slices]
+    assert ids == [(0, 1, 2, 3), (4, 5, 6), (7,)]   # contiguous, in order
+    assert p.n_distinct == 3 and p.grid == (8, 1)
+    assert all(m.axis_names == ("data", "model") for m in p.slices)
+    assert "->" in p.describe(["a", "b", "c"])
+    # explicit 2-D grid: rows are C wide on the model axis
+    p2 = plan_tier_meshes(2, devices=devs, mesh_shape=(4, 2),
+                          tier_counts=[3, 1])
+    assert p2.devices_per_tier == (6, 2)
+    assert p2.slices[0].shape == {"data": 3, "model": 2}
+    # fewer rows than tiers: wrap round-robin onto shared rows
+    p3 = plan_tier_meshes(3, devices=devs[:2])
+    assert p3.devices_per_tier == (1, 1, 1) and p3.n_distinct == 2
+    assert ([tuple(d.id for d in m.devices.flat) for m in p3.slices]
+            == [(0,), (1,), (0,)])
+
+
+def test_mesh_plan_validation():
+    with pytest.raises(ValueError, match="n_tiers"):
+        plan_tier_meshes(0)
+    with pytest.raises(ValueError, match="tier_counts"):
+        plan_tier_meshes(3, tier_counts=[1, 2])
+    with pytest.raises(ValueError, match="devices"):
+        plan_tier_meshes(2, devices=[])
+    with pytest.raises(ValueError, match="mesh_shape"):
+        plan_tier_meshes(2, mesh_shape=(0, 1))
+    with pytest.raises(ValueError, match="needs"):
+        plan_tier_meshes(2, mesh_shape=(64, 64))
+
+
+# ---------------------------------------------------------------------------
+# the fused on-device accept mask (core.cascade device_masks)
+# ---------------------------------------------------------------------------
+
+
+def test_accept_threshold_matches_host_rule():
+    """The f32 threshold is ceil-rounded so the on-device comparison
+    agrees with the host float64 rule for EVERY f32 score — including
+    thresholds like 0.7 that round *down* in f32, where the naive cast
+    accepts scores the host rule rejects."""
+    from repro.core.cascade import _accept_threshold
+    assert np.float32(0.7) >= np.float32(0.7)          # the naive trap
+    assert not (np.float64(np.float32(0.7)) >= 0.7)    # host says no
+    rng = np.random.default_rng(0)
+    for t in (0.1, 0.3, 0.5, 0.7, 1e-3, 0.9999999, *rng.uniform(0, 1, 20)):
+        t32 = _accept_threshold(np.float32, float(t))
+        xs = rng.uniform(0, 1, 4096).astype(np.float32)
+        xs = np.concatenate([xs, [np.float32(t), t32,
+                                  np.nextafter(t32, np.float32(0))]])
+        host = xs.astype(np.float64) >= t
+        assert ((xs >= t32) == host).all(), t
+    # f64 scores (x64 hosts): the threshold passes through exactly
+    assert _accept_threshold(np.float64, 0.7) == 0.7
+    # NaN scores never accept on either rule
+    assert not (np.float32(np.nan) >= _accept_threshold(np.float32, 0.5))
+
+
+def test_tier_step_fuses_device_mask():
+    """A jax-native scorer yields a device accept mask (appended to
+    device_masks) whose host transfer IS the returned accept — and the
+    on-device executor's compaction consumes it bit-identically."""
+    from repro.core.cascade import CascadeTier, execute_cascade, tier_step
+    tier = CascadeTier("t", lambda q: (q[:, 0], np.ones(len(q))))
+    chunk = np.arange(24, dtype=np.int32).reshape(6, 4)
+
+    def jax_scorer(q, a, j):
+        return jnp.asarray(q[:, 0]).astype(jnp.float32) / 24.0
+
+    masks: list = []
+    _, _, s, accept = tier_step(tier, chunk, 0, scorer=jax_scorer,
+                                threshold=0.5, last=False,
+                                device_masks=masks)
+    assert len(masks) == 1 and isinstance(masks[0], jax.Array)
+    assert np.array_equal(accept, np.asarray(masks[0]))
+    assert np.array_equal(accept, s >= 0.5)            # host rule agrees
+    # numpy scorers keep the host path (no device mask)
+    masks = []
+    tier_step(tier, chunk, 0, scorer=lambda q, a, j: np.ones(len(q)),
+              threshold=0.5, last=False, device_masks=masks)
+    assert masks == []
+    # end-to-end: jax scorer through every compact mode, bit-identical
+    tiers = [CascadeTier(f"t{j}", lambda q, j=j: (q[:, 0] + j,
+                                                  np.full(len(q), 1.0 + j)))
+             for j in range(3)]
+    qs = np.random.default_rng(3).integers(
+        0, 50, size=(33, 8)).astype(np.int32)
+
+    def scorer(q, a, j):
+        return (jnp.asarray(q[:, 0]).astype(jnp.float32) * 0.37 + j) % 1.0
+
+    ref = execute_cascade(tiers, [0.4, 0.7], scorer, qs, batch_size=8)
+    for mode in ("device", "pallas"):
+        r = execute_cascade(tiers, [0.4, 0.7], scorer, qs, batch_size=8,
+                            compact=mode)
+        assert np.array_equal(ref["answers"], r["answers"]), mode
+        assert (ref["cost"] == r["cost"]).all(), mode
+        assert np.array_equal(ref["stopped_at"], r["stopped_at"]), mode
+        assert np.array_equal(ref["scores"], r["scores"],
+                              equal_nan=True), mode
+        assert ref["tier_counts"] == r["tier_counts"], mode
+
+
 def test_pipeline_rejects_unknown_compact_mode():
     mp = _marketplace(0, 2)
     with pytest.raises(ValueError, match="compact"):
@@ -287,6 +421,10 @@ for seed in (0, 1):
     tp._run_matrix(seed, n=12, n_tiers=3)
 print("PLACEMENT-4DEV-OK")
 """
+    _run_forced_device_subprocess(code, "PLACEMENT-4DEV-OK")
+
+
+def _run_forced_device_subprocess(code: str, sentinel: str):
     here = os.path.dirname(__file__)
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
@@ -296,4 +434,26 @@ print("PLACEMENT-4DEV-OK")
     env.pop("XLA_FLAGS", None)
     out = subprocess.run([sys.executable, "-c", code], env=env,
                          capture_output=True, text=True, timeout=600)
-    assert "PLACEMENT-4DEV-OK" in out.stdout, out.stderr[-3000:]
+    assert sentinel in out.stdout, out.stderr[-3000:]
+
+
+def test_sharded_equivalence_on_forced_8_device_host():
+    """The full {shared, pinned, sharded} x {host, device, pallas} x
+    {serve, serial, sched} matrix on a forced 8-device host, where the
+    sharded slices genuinely span multiple devices and pow2 chunks are
+    genuinely batch-split over their "data" axes."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+assert len(jax.devices()) == 8, jax.devices()
+import test_placement as tp
+from repro.sharding.tier_mesh import plan_tier_meshes
+p = plan_tier_meshes(3, tier_counts=[16, 9, 4])
+assert p.devices_per_tier == (4, 3, 1)   # heavy tiers get wide slices
+assert p.n_distinct == 3
+for seed in (0, 1):
+    tp._run_matrix(seed, n=16, n_tiers=3)
+print("PLACEMENT-8DEV-OK")
+"""
+    _run_forced_device_subprocess(code, "PLACEMENT-8DEV-OK")

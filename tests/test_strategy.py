@@ -6,6 +6,7 @@ cost_to_match coverage."""
 import numpy as np
 import pytest
 
+from repro.core.approx import CompletionCache
 from repro.core.cascade import CascadeTier, evaluate_offline, execute_cascade
 from repro.core.cost import ApiCost
 from repro.core.router import RouterConfig, cost_to_match, frontier
@@ -304,6 +305,47 @@ def test_pipeline_serve_governor_only_strategy():
     res = pipe.serve(toks)
     assert res.strategy["governor"]["n_observed"] == 128
     assert len(res.strategy["governor"]["trace"]) >= 8
+
+
+def test_governor_min_score_dial():
+    # no base floor configured: the dial is off
+    assert BudgetGovernor(1.0, (0.5,), window=8).min_score() is None
+    gov = BudgetGovernor(1.0, (0.5,), base_min_score=0.6, window=8)
+    assert gov.min_score() == pytest.approx(0.6)   # starts at the base
+    for _ in range(16):
+        gov.observe(3.0)                           # 3x over budget
+    assert gov.shift > 0
+    # overspend LOOSENS the floor: cache more answers, buy fewer calls
+    assert gov.min_score() < 0.6
+    assert gov.snapshot()["min_score"] == pytest.approx(gov.min_score())
+    for _ in range(200):
+        gov.observe(0.01)                          # deep under budget
+    assert gov.shift < 0
+    # spare budget TIGHTENS it: only cache what the scorer trusted most
+    assert 0.6 < gov.min_score() <= 1.0
+
+
+def test_pipeline_cache_floor_follows_governor():
+    gov = BudgetGovernor(1e-9, (0.5,), base_min_score=0.9, window=8)
+    pipe = _routed_pipeline(governor=gov)
+    pipe.cache = CompletionCache(capacity=256, threshold=0.99,
+                                 min_score=0.9)
+    # the cache's dot-product similarity expects L2-normalized rows
+    # (like the real embed_queries); raw gaussian features would all
+    # "hit" at any threshold
+    pipe.embed = lambda t: (_feature_embed(t)
+                            / np.linalg.norm(_feature_embed(t), axis=1,
+                                             keepdims=True))
+    pipe.serve(_feature_tokens(64, seed=6))
+    assert gov.shift > 0   # impossible target: permanently over budget
+    # fresh queries (all misses) make the next insert read the dial;
+    # re-serving the SAME queries would all hit, cost nothing, and let
+    # the governor unwind the shift — the cache curing the overspend
+    pipe.serve(_feature_tokens(64, seed=7))
+    # the live cache floor is the governor's dial, not the static 0.9
+    assert gov.shift > 0
+    assert pipe.cache.min_score == pytest.approx(gov.min_score())
+    assert pipe.cache.min_score < 0.9
 
 
 def test_scheduler_matches_serve_with_router():

@@ -1,0 +1,212 @@
+"""Per-tier mesh slices: sharded engines, scan-folding, sharded init.
+
+The contract (ISSUE 6 / ROADMAP "Multi-host sharded tiers"):
+
+  * folding homogeneous prefix/suffix blocks into the scanned stack
+    (``models.transformer.fold_stack``) never changes the computation —
+    generation is bit-identical — and makes compile count O(1) in depth;
+  * a ``GenerationEngine`` sharded over a mesh slice (data axis) is
+    bit-identical to the unsharded engine;
+  * ``init_params_sharded`` materialises params sharded from birth, and
+    the values are independent of the mesh shape (threefry is
+    counter-based/elementwise) — the multi-shape leg runs in a forced
+    8-device subprocess, like tests/test_placement.py's.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import transformer as T
+from repro.serving.engine import GenerationEngine
+from repro.sharding import tier_mesh
+
+
+def _cfg(n_periods: int = 2, *, prefix: int = 1, suffix: int = 1,
+         d_model: int = 64, d_ff: int = 128) -> ModelConfig:
+    spec = LayerSpec("attn", "dense")
+    return ModelConfig(
+        name=f"fold-test-{prefix}p{n_periods}x{suffix}", arch_type="dense",
+        n_layers=prefix + n_periods + suffix, d_model=d_model, d_ff=d_ff,
+        vocab=256, n_heads=4, n_kv_heads=2, head_dim=16,
+        prefix=(spec,) * prefix, period=(spec,), n_periods=n_periods,
+        suffix=(spec,) * suffix, max_seq=512, dtype="float32")
+
+
+def _tokens(b: int = 4, s: int = 6, seed: int = 0) -> np.ndarray:
+    return (np.random.default_rng(seed)
+            .integers(1, 200, size=(b, s)).astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# scan-over-layers folding
+# ---------------------------------------------------------------------------
+
+
+def test_fold_config_absorbs_matching_prefix_suffix():
+    cfg = _cfg(2, prefix=1, suffix=1)
+    f = T.fold_config(cfg)
+    assert f.prefix == () and f.suffix == () and f.n_periods == 4
+    assert f.layers == cfg.layers          # same flattened computation
+    # homogeneous prefix with no period at all becomes the stack
+    spec = LayerSpec("attn", "dense")
+    cfg2 = ModelConfig(name="pfx", arch_type="dense", n_layers=3,
+                       d_model=64, d_ff=128, vocab=256, n_heads=4,
+                       n_kv_heads=2, head_dim=16, prefix=(spec,) * 3,
+                       max_seq=512, dtype="float32")
+    f2 = T.fold_config(cfg2)
+    assert f2.n_periods == 3 and f2.period == (spec,) and f2.prefix == ()
+    assert f2.layers == cfg2.layers
+
+
+def test_fold_config_noop_when_specs_differ():
+    spec, other = LayerSpec("attn", "dense"), LayerSpec("attn_sliding",
+                                                        "dense")
+    cfg = ModelConfig(name="het", arch_type="dense", n_layers=3,
+                      d_model=64, d_ff=128, vocab=256, n_heads=4,
+                      n_kv_heads=2, head_dim=16, prefix=(other,),
+                      period=(spec,), n_periods=2, window=64,
+                      max_seq=512, dtype="float32")
+    assert T.fold_config(cfg) is cfg
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    fcfg, fparams = T.fold_stack(cfg, params)
+    assert fcfg is cfg and fparams is params
+
+
+def test_fold_stack_generation_bit_identical():
+    cfg = _cfg(2, prefix=1, suffix=1)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    fcfg, fparams = T.fold_stack(cfg, params)
+    assert fcfg.n_periods == 4
+    # the period stack is ONE stacked leaf per weight, depth-major
+    assert fparams["prefix"] == [] and fparams["suffix"] == []
+    stack = fparams["period"]["sub0"]["mixer"]["wq"]
+    assert stack.shape[0] == 4
+    assert np.array_equal(np.asarray(stack[0]),
+                          np.asarray(params["prefix"][0]["mixer"]["wq"]))
+    assert np.array_equal(np.asarray(stack[-1]),
+                          np.asarray(params["suffix"][0]["mixer"]["wq"]))
+    toks = _tokens()
+    out_ref = GenerationEngine(cfg, params).generate(toks, n_new=4)
+    out_fold = GenerationEngine(fcfg, fparams).generate(toks, n_new=4)
+    assert np.array_equal(out_ref, out_fold)
+
+
+# ---------------------------------------------------------------------------
+# sharded engine (single-device slice; multi-device legs in the
+# subprocess test below)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_engine_bit_identical_and_compile_o1_in_depth():
+    mesh = tier_mesh.plan_tier_meshes(1).for_tier(0)
+    toks = _tokens()
+    stats = []
+    for n_periods in (2, 6):               # 4- and 8-layer stacks
+        cfg = _cfg(n_periods, prefix=1, suffix=1)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        ref = GenerationEngine(cfg, params).generate(toks, n_new=4)
+        eng = GenerationEngine(cfg, params, mesh=mesh)
+        assert eng.cfg.prefix == () and eng.cfg.suffix == ()  # auto-fold
+        assert np.array_equal(eng.generate(toks, n_new=4), ref)
+        stats.append(dict(eng.compile_stats))
+    # compile count O(1) in depth: the deep stack compiled exactly as
+    # many prefill variants as the shallow one (the scan hides depth)
+    assert stats[0] == stats[1]
+    assert stats[0]["prefill_compiles"] == 1
+
+
+def test_engine_rejects_device_and_mesh_together():
+    cfg = _cfg(2)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    mesh = tier_mesh.plan_tier_meshes(1).for_tier(0)
+    with pytest.raises(ValueError, match="not both"):
+        GenerationEngine(cfg, params, device=jax.local_devices()[0],
+                         mesh=mesh)
+
+
+def test_init_params_sharded_shapes_and_determinism():
+    cfg = _cfg(2, prefix=1, suffix=1)
+    mesh = tier_mesh.plan_tier_meshes(1).for_tier(0)
+    fcfg, p1 = tier_mesh.init_params_sharded(jax.random.PRNGKey(7), cfg,
+                                             mesh)
+    _, p2 = tier_mesh.init_params_sharded(jax.random.PRNGKey(7), cfg, mesh)
+    assert fcfg.n_periods == 4             # folded before init
+    same = jax.tree.map(lambda a, b: bool((a == b).all()), p1, p2)
+    assert all(jax.tree_util.tree_leaves(same))
+    # folded init shapes match eagerly-folded init shapes
+    eager = T.fold_stack(cfg, T.init_params(jax.random.PRNGKey(7), cfg))[1]
+    shapes = jax.tree.map(lambda a, b: a.shape == b.shape, p1, eager)
+    assert all(jax.tree_util.tree_leaves(shapes))
+
+
+# ---------------------------------------------------------------------------
+# the multi-device leg: forced 8-device CPU host (subprocess)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_tiers_on_forced_8_device_host():
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+assert len(jax.devices()) == 8, jax.devices()
+import numpy as np
+import test_tier_mesh as tm
+from repro.models import transformer as T
+from repro.serving.engine import GenerationEngine
+from repro.sharding import tier_mesh
+
+# 1. sharded-init determinism: identical params on EVERY mesh shape
+cfg = tm._cfg(2, prefix=1, suffix=1, d_model=64, d_ff=128)
+key = jax.random.PRNGKey(7)
+shapes = [(1, 1), (2, 1), (4, 1), (8, 1), (2, 2)]
+inits = []
+for r, c in shapes:
+    mesh = tier_mesh.plan_tier_meshes(
+        1, mesh_shape=(r, c), devices=jax.devices()[:r * c]).for_tier(0)
+    inits.append(tier_mesh.init_params_sharded(key, cfg, mesh)[1])
+ref = inits[0]
+for (r, c), p in zip(shapes[1:], inits[1:]):
+    same = jax.tree.map(
+        lambda a, b: bool((np.asarray(a) == np.asarray(b)).all()), ref, p)
+    assert all(jax.tree_util.tree_leaves(same)), (r, c)
+
+# 2. FSDP actually splits the stacked params across the slice: with
+# d_ff=2048 (>= 1024 and divisible), each device holds 1/data_size
+big = tm._cfg(2, prefix=1, suffix=1, d_model=128, d_ff=2048)
+mesh4 = tier_mesh.plan_tier_meshes(
+    1, mesh_shape=(4, 1), devices=jax.devices()[:4]).for_tier(0)
+_, bp = tier_mesh.init_params_sharded(key, big, mesh4)
+up = bp["period"]["sub0"]["ffn"]["up"]["w"]
+shard = up.addressable_shards[0].data
+assert shard.size == up.size // 4, (shard.shape, up.shape)
+
+# 3. a 2-way data-sharded engine is bit-identical to the unsharded one
+cfg = tm._cfg(3, prefix=1, suffix=1, d_model=64, d_ff=128)
+params = T.init_params(jax.random.PRNGKey(0), cfg)
+toks = tm._tokens(b=8, s=6)
+ref_out = GenerationEngine(cfg, params).generate(toks, n_new=4)
+mesh2 = tier_mesh.plan_tier_meshes(
+    1, mesh_shape=(2, 1), devices=jax.devices()[:2]).for_tier(0)
+eng = GenerationEngine(cfg, params, mesh=mesh2)
+out = eng.generate(toks, n_new=4)
+assert np.array_equal(ref_out, out)
+# and the padded batch genuinely lives split over the two devices
+assert eng.params["embed"]["tok"].sharding.mesh.devices.size == 2
+print("TIER-MESH-8DEV-OK")
+"""
+    here = os.path.dirname(__file__)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(here, "..", "src"), here]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    env["JAX_PLATFORMS"] = "cpu"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert "TIER-MESH-8DEV-OK" in out.stdout, out.stderr[-3000:]
