@@ -619,6 +619,179 @@ def bench_sharded_tiers(batch: int = 64, seq: int = 16, n_new: int = 24,
     return [inner], derived, time.time() - t0
 
 
+class _OracleRouter:
+    """Duck-typed stand-in for a trained ``ServingStrategy``: entry is
+    always tier 0 (so the cascade itself is unchanged vs the
+    non-speculative reference) but the per-tier accept probabilities are
+    an *oracle* for the bench's scorer — odd-first-token rows are
+    predicted-reject at tier 0. This isolates the speculation machinery
+    from router training noise: the candidate set is exactly the rows
+    that really escalate."""
+
+    governor = None
+
+    def __init__(self):
+        self.router = self              # scheduler checks strat.router
+
+    def route(self, emb):
+        hard = (emb[:, 0].astype(np.int64) % 2) == 1
+        probs = np.stack([np.where(hard, 0.05, 0.9),
+                          np.ones(len(emb))], axis=1)
+        return np.zeros(len(emb), np.int64), probs
+
+    def thresholds(self, base):
+        return base
+
+    def observe_request(self, cost, **kw):
+        pass
+
+    def snapshot(self, m):
+        return None
+
+
+def _speculation_inner(n: int = 64, n_new: int = 8, repeats: int = 3,
+                       holdback: float = 0.005) -> dict:
+    """The speculation measurement body: runs inside a forced 2-device
+    host (see ``bench_speculation``). Two generation tiers on disjoint
+    devices, one burst arriving at t=0 as a single chunk: without
+    speculation tier 1 waits for tier 0's full decode before starting on
+    the escalated (predicted-hard) rows; with it, tier 1 pre-invokes
+    them concurrently and commits on the real accept mask — so the hard
+    rows' latency approaches the top-tier-only baseline while answers
+    and charged cost stay bit-identical."""
+    import gc
+
+    devices = jax.devices()
+    cfg = ARCHS["gemma3-1b"].reduced()
+    rng = np.random.default_rng(11)
+
+    def gen_tier(name, seed, price, device):
+        params = T.init_params(jax.random.PRNGKey(seed), cfg)
+        eng = GenerationEngine(cfg, params, device=device)
+
+        def answer(t, eng=eng):
+            return np.asarray(eng.generate(t, n_new=n_new)[:, 0] % 3)
+
+        return TierSpec(name, answer, price, n_out=n_new,
+                        device=device), eng
+
+    t_small, _ = gen_tier("small", 0, ApiCost(10.0, 10.0, 0.0), devices[0])
+    t_large, eng_large = gen_tier("large", 1, ApiCost(100.0, 100.0, 0.0),
+                                  devices[-1])
+
+    def scorer(t, a):
+        # odd-first-token rows escalate (the oracle's predicted-hard set)
+        return np.where(t[:, 0] % 2 == 1, 0.1, 0.9)
+
+    def embed(tokens):                  # the router routes on this
+        return tokens[:, :2].astype(np.float32)
+
+    def mk_pipe(speculate):
+        return ServingPipeline(
+            tiers=[t_small, t_large], thresholds=[0.5], scorer=scorer,
+            embed=embed, full_prompt_tokens=200, pad_token=0,
+            batch_size=n, strategy=_OracleRouter(), speculate=speculate)
+
+    def slo(speculate):
+        return SLOConfig(max_holdback_s=holdback, speculate=speculate,
+                         spec_depth=1, spec_bar=0.5, spec_idle_frac=None)
+
+    toks = rng.integers(1, cfg.vocab, size=(n, 16)).astype(np.int32)
+    hard = (toks[:, 0] % 2) == 1
+    pipes = {"nospec": mk_pipe(False), "spec": mk_pipe(True)}
+    for label, pipe in pipes.items():   # warm every jit bucket
+        TierScheduler(pipe, max_chunk=n, slo=slo(label == "spec")
+                      ).run_trace(toks)
+    hard_toks = toks[hard]
+    eng_large.generate(hard_toks, n_new=n_new)      # warm hard-row bucket
+
+    best = {"nospec": None, "spec": None}
+    top_only = float("inf")
+    for _ in range(repeats):
+        for label, pipe in pipes.items():
+            gc.collect()
+            r = TierScheduler(pipe, max_chunk=n, slo=slo(label == "spec")
+                              ).run_trace(toks)
+            if (best[label] is None
+                    or r.latency["total"] < best[label].latency["total"]):
+                best[label] = r
+        gc.collect()
+        t0 = time.time()
+        eng_large.generate(hard_toks, n_new=n_new)
+        top_only = min(top_only, time.time() - t0)
+
+    ref, res = best["nospec"], best["spec"]
+    spec = res.ingress["speculation"]
+
+    def hard_pct(r, q):
+        lat = np.asarray(r.ingress["request_latency"])[hard]
+        return float(np.percentile(lat, q))
+
+    return {
+        "n": n, "n_hard": int(hard.sum()), "n_new": n_new,
+        "n_devices": len(devices),
+        "host_cores": os.cpu_count() or 1,
+        "wall_nospec_s": round(ref.latency["total"], 4),
+        "wall_spec_s": round(res.latency["total"], 4),
+        "hard_p50_nospec_s": round(hard_pct(ref, 50), 4),
+        "hard_p50_spec_s": round(hard_pct(res, 50), 4),
+        "hard_p99_nospec_s": round(hard_pct(ref, 99), 4),
+        "hard_p99_spec_s": round(hard_pct(res, 99), 4),
+        "top_tier_only_s": round(top_only, 4),
+        "issued": spec["issued"], "committed": spec["committed"],
+        "cancelled": spec["cancelled"],
+        "wasted_s": round(spec["wasted_s"], 4),
+        "overlap_frac": [round(o, 3) for o in spec["overlap_frac"]],
+        "answers_match": bool(
+            np.array_equal(ref.answers, res.answers)
+            and (ref.cost == res.cost).all()
+            and np.array_equal(ref.stopped_at, res.stopped_at)
+            and list(ref.tier_counts) == list(res.tier_counts)),
+        "cost_total": float(res.cost.sum()),
+        "cost_total_nospec": float(ref.cost.sum()),
+    }
+
+
+def bench_speculation(n: int = 64, n_new: int = 8, repeats: int = 3,
+                      devices: int = 2):
+    """Speculative cascade execution vs the plain scheduler on a 2-tier
+    burst, tiers pinned to disjoint FORCED CPU devices.
+
+    The claims that hold on ANY host: answers, charged cost,
+    ``stopped_at`` and ``tier_counts`` are bit-identical to the
+    non-speculative scheduler (speculation only moves wall-clock) and
+    speculation actually engages (committed > 0). The latency claim
+    needs parallel hardware: forced CPU devices timeshare the host's
+    cores, so predicted-hard p50 improving toward the top-tier-only
+    baseline is only gated when the host has >= 2 cores and reported as
+    trend data otherwise."""
+    t0 = time.time()
+    inner = _run_forced_device_inner(
+        "speculation", dict(n=n, n_new=n_new, repeats=repeats),
+        devices=devices)
+    multi_core = inner["host_cores"] >= 2
+    derived = {
+        "claim": "speculative prefill: predicted-hard p50 below the "
+                 "non-speculative scheduler, approaching top-tier-only "
+                 "(gated on >= 2 host cores), at bit-identical answers "
+                 "and charged cost, with committed speculations > 0",
+        "hard_p50_nospec_s": inner["hard_p50_nospec_s"],
+        "hard_p50_spec_s": inner["hard_p50_spec_s"],
+        "hard_p99_spec_s": inner["hard_p99_spec_s"],
+        "top_tier_only_s": inner["top_tier_only_s"],
+        "committed": inner["committed"],
+        "cancelled": inner["cancelled"],
+        "host_cores": inner["host_cores"],
+        "answers_match": inner["answers_match"],
+        "pass": (inner["answers_match"]
+                 and inner["committed"] > 0
+                 and inner["cost_total"] == inner["cost_total_nospec"]
+                 and (inner["hard_p50_spec_s"] < inner["hard_p50_nospec_s"]
+                      if multi_core else True)),
+    }
+    return [inner], derived, time.time() - t0
+
+
 def bench_bucketed_prefill(n_shapes: int = 12):
     """Bucketed compilation: a sweep of distinct request shapes must
     compile far fewer prefill variants than the per-shape jit cache the
@@ -663,6 +836,8 @@ BENCHES = [
      {"n": 64, "repeats": 3}),
     ("sharded_tiers", bench_sharded_tiers,
      {"batch": 32, "n_new": 8, "repeats": 2, "n_periods": 4}),
+    ("speculation", bench_speculation,
+     {"n": 32, "n_new": 6, "repeats": 2}),
 ]
 
 #: measurement bodies re-invoked by _run_forced_device_inner inside a
@@ -670,6 +845,7 @@ BENCHES = [
 _INNERS = {
     "placement": _placement_inner,
     "sharded_tiers": _sharded_tiers_inner,
+    "speculation": _speculation_inner,
 }
 
 

@@ -80,9 +80,54 @@ def _accept_threshold(dtype, threshold: float):
     return t
 
 
+def _consume_prefilled(tier: CascadeTier, chunk, prefilled):
+    """Merge a speculative pre-invoke into this chunk's (answers, costs).
+
+    ``prefilled`` is ``(mask (b,) bool, answers (b,) object, costs (b,)
+    float64)`` aligned row-for-row with ``chunk``: ``mask[i]`` means row
+    i's ``tier.invoke`` already ran speculatively (while an earlier tier
+    was still decoding) and its answer/cost are in ``answers[i]`` /
+    ``costs[i]``. Only the cold rows are invoked now. Exact because tier
+    backends are row-wise — the same contract the stream paths already
+    rely on for chunk regrouping — so per-row answers and costs do not
+    depend on which rows share an invoke."""
+    mask, pa, pc = prefilled
+    mask = np.asarray(mask, bool)
+    if mask.shape != (len(chunk),):
+        raise ValueError(f"prefilled mask shape {mask.shape} != "
+                         f"({len(chunk)},)")
+
+    def _densify(obj):
+        # object array -> native dtype when rows are uniform scalars
+        # (np.int32 elements infer int32, not int64); stays object
+        # otherwise, and _merge_answers unboxes at fold time either way
+        try:
+            arr = np.array(obj.tolist())
+        except Exception:
+            return obj
+        return arr if arr.ndim == 1 else obj
+
+    pc = np.asarray(pc, np.float64)
+    if mask.all():
+        return _densify(pa), pc
+    hot = np.flatnonzero(mask)
+    cold = np.flatnonzero(~mask)
+    ca, cc = tier.invoke(chunk[cold])
+    ca = np.asarray(ca)
+    a = np.empty(len(chunk), object)
+    for i in hot:
+        a[i] = pa[i]
+    for k, i in enumerate(cold):
+        a[i] = ca[k]
+    c = np.empty(len(chunk), np.float64)
+    c[hot] = pc[hot]
+    c[cold] = np.asarray(cc, np.float64)
+    return _densify(a), c
+
+
 def tier_step(tier: CascadeTier, chunk, j: int, *, scorer: Callable,
               threshold: float | None, last: bool, scorer_lock=None,
-              device_masks: list | None = None):
+              device_masks: list | None = None, prefilled=None):
     """One compaction step on ONE chunk: invoke tier j, score, accept.
 
     This is the single per-tier chunk implementation shared by the
@@ -113,8 +158,17 @@ def tier_step(tier: CascadeTier, chunk, j: int, *, scorer: Callable,
     masks straight into the compaction kernel, removing its last
     host->device round-trip (the host ``accept`` returned here is the
     transfer of that same mask, so bookkeeping cannot drift from it).
+
+    ``prefilled`` (optional): speculative pre-invoke results from an
+    idle-tier worker (``_consume_prefilled``) — rows already invoked
+    skip the cold ``tier.invoke`` here; scoring, accept, and cost
+    charging still run through the identical path below, so speculation
+    can only move wall-clock, never answers or charged cost.
     """
-    a, c = tier.invoke(chunk)
+    if prefilled is not None:
+        a, c = _consume_prefilled(tier, chunk, prefilled)
+    else:
+        a, c = tier.invoke(chunk)
     a = np.asarray(a)
     c = np.asarray(c, np.float64)
     if last:

@@ -131,6 +131,24 @@ def main():
                          "device CPU host when the platform has fewer. "
                          "C=1 slices are bit-identical to the unsharded "
                          "pipeline. Mutually exclusive with --devices")
+    ap.add_argument("--speculate", action="store_true",
+                    help="stream mode: speculative cascade execution — "
+                         "idle tier workers pre-invoke predicted-reject "
+                         "rows still decoding upstream; answers and "
+                         "charged cost are bit-identical, only wall-"
+                         "clock moves (best with --contextual for the "
+                         "router's probabilities and --devices/--mesh "
+                         "so tiers overlap on real hardware)")
+    ap.add_argument("--spec-depth", type=int, default=1,
+                    help="speculation: how many tiers ahead of a row's "
+                         "current position may pre-invoke it")
+    ap.add_argument("--spec-bar", type=float, default=0.5,
+                    help="speculation: router accept-probability floor — "
+                         "every intermediate tier must be predicted to "
+                         "reject (prob below this) for a row to qualify")
+    ap.add_argument("--spec-idle-frac", type=float, default=0.5,
+                    help="speculation: cap on wasted device-seconds as a "
+                         "fraction of elapsed stream time")
     ap.add_argument("--on-device-compact", nargs="?", const="device",
                     choices=["device", "pallas"], default=None,
                     help="keep the cascade's pending-set compaction on "
@@ -171,6 +189,9 @@ def main():
     if args.overload != "reject" and args.queue_cap is None:
         ap.error("--overload degrade only acts on a bounded queue; "
                  "set --queue-cap")
+    if args.speculate and (not args.stream or args.serial):
+        ap.error("--speculate needs the parallel stream scheduler's idle "
+                 "tier workers; add --stream and drop --serial")
 
     pipe, _ = build_pipeline(BuildConfig(
         task=args.task, tiers=tuple(args.tiers.split(",")),
@@ -183,6 +204,7 @@ def main():
         place_tiers=args.devices is not None,
         shard_tiers=mesh_shape is not None, mesh_shape=mesh_shape,
         compact=args.on_device_compact or "host",
+        speculate=args.speculate,
         router=RouterConfig(top_lists=10, sample=256)))
 
     test = synthetic.sample(args.task, args.requests, seed=77)
@@ -204,7 +226,10 @@ def main():
                 deadline_s=(None if args.deadline_ms is None
                             else args.deadline_ms / 1e3),
                 max_holdback_s=args.holdback_ms / 1e3,
-                queue_cap=args.queue_cap, overload=args.overload)
+                queue_cap=args.queue_cap, overload=args.overload,
+                speculate=args.speculate, spec_depth=args.spec_depth,
+                spec_bar=args.spec_bar,
+                spec_idle_frac=args.spec_idle_frac)
             res = pipe.serve_stream(test.tokens, arrivals,
                                     max_chunk=args.max_chunk, slo=slo)
     else:

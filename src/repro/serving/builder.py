@@ -81,6 +81,12 @@ class BuildConfig:
     # pending-set compaction mode for the batch cascade path:
     # "host" numpy | "device" jitted gather+prefix-sum | "pallas" kernel
     compact: str = "host"
+    # speculative cascade execution (repro.serving.sched): idle tier
+    # workers pre-invoke predicted-reject rows on the stream scheduler.
+    # Opt-in; bit-identical answers/costs by construction — only moves
+    # wall-clock. Dials (depth, probability bar, idle budget) live on
+    # the SLOConfig passed to the stream entry points.
+    speculate: bool = False
     # joint prompt x cascade search (core.joint) instead of greedy
     # per-tier prompt selection: one shared prompt size chosen jointly
     # with the cascade under the budget
@@ -228,6 +234,8 @@ def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
                                   base_bar=cfg.entry_bar,
                                   base_min_score=cfg.cache_min_score
                                   if cfg.enable_cache else None,
+                                  base_threshold=cfg.cache_threshold
+                                  if cfg.enable_cache else None,
                                   window=cfg.governor_window)
     if entry_router is not None or governor is not None:
         strategy = ServingStrategy(router=entry_router, governor=governor,
@@ -297,7 +305,7 @@ def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
         scorer=lambda toks, ans: SC.score(sp, toks, ans),
         cache=cache, embed=embed, full_prompt_tokens=full_tokens,
         pad_token=synthetic.PAD, baseline_price=apis[top].price,
-        strategy=strategy, compact=cfg.compact)
+        strategy=strategy, compact=cfg.compact, speculate=cfg.speculate)
     report = {"apis": apis, "data": data, "priced": priced,
               "answers": answers, "scorer": sp, "scores": s_train,
               "cascade": cas, "metrics": metrics, "budget": budget,

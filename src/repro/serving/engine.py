@@ -25,6 +25,17 @@ keyed categorical path and is seed-reproducible per bucket shape (the
 noise tensor follows the padded shape); greedy decoding is bit-exact
 regardless of bucketing.
 
+Generation is split into two entry points so the scheduler can overlap
+tiers (speculative cascade execution, ``repro.serving.sched``):
+``prefill_async`` dispatches the prefill and returns a cancellable
+``PrefillFuture`` — the sampled post-prefill token plus the KV-cache
+handle, still potentially in flight thanks to jax async dispatch —
+and ``decode_from`` consumes the future (KV handoff) and runs the
+decode loop. ``generate`` is exactly their composition, so the split
+is bit-identical by construction. ``PrefillFuture.cancel`` retires a
+speculation: the cache/token references are dropped so the device
+buffers free, and the pool (``EnginePool.speculate``) untracks it.
+
 ``CascadeServer`` is the serving facade over the repo's single cascade
 executor (``repro.core.cascade.execute_cascade``); the full three-strategy
 pipeline (cache + prompt adaptation + cascade) lives in
@@ -52,6 +63,59 @@ def bucket_size(x: int, floor: int) -> int:
     while b < x:
         b *= 2
     return b
+
+
+@dataclasses.dataclass
+class PrefillFuture:
+    """Cancellable handle to one dispatched prefill.
+
+    Holds the post-prefill sampled token and the KV-cache handle (both
+    jax arrays, possibly still computing — dispatch is async), plus the
+    shape/seed bookkeeping ``decode_from`` needs to continue exactly
+    where ``generate`` would. Exactly one of three things happens to a
+    future: it is *committed* (``engine.decode_from`` — KV handoff into
+    the decode loop), *cancelled* (``cancel`` — the device references
+    are dropped so XLA can free the cache buffers; a cancelled
+    speculation is never charged because its consumer never ran), or
+    leaked with the engine (GC retires it). Commit and cancel both fire
+    the one-shot ``_retire_cb`` so an owning ``EnginePool`` can untrack
+    the in-flight speculation.
+    """
+
+    engine: "GenerationEngine"
+    n_new: int
+    b: int                      # true batch rows (callers see [:b])
+    b_b: int                    # padded batch bucket
+    s: int                      # true prompt length
+    max_len: int                # KV-cache bucket length
+    seed: int = 0
+    cancelled: bool = False
+    consumed: bool = False
+    _tok: object = None         # (b_b, 1) int32 post-prefill token
+    _cache: object = None       # KV-cache pytree (the handoff handle)
+    _rkey: object = None        # PRNG state after the post-prefill sample
+    _retire_cb: object = None   # pool untrack hook, fired exactly once
+
+    @property
+    def live(self) -> bool:
+        """Still holding device state: neither committed nor cancelled."""
+        return not (self.cancelled or self.consumed)
+
+    def cancel(self):
+        """Retire the speculation: drop the KV cache and token references
+        (jax frees the device buffers once nothing holds them) and
+        untrack from the owning pool. Idempotent; a no-op on a future
+        already consumed by ``decode_from``."""
+        if not self.live:
+            return
+        self.cancelled = True
+        self._tok = self._cache = self._rkey = None
+        self._retire()
+
+    def _retire(self):
+        cb, self._retire_cb = self._retire_cb, None
+        if cb is not None:
+            cb(self)
 
 
 @dataclasses.dataclass
@@ -93,8 +157,7 @@ class GenerationEngine:
         self._prefill_fns: dict[tuple[int, int, int], Callable] = {}
         self.compile_stats = {"prefill_compiles": 0, "prefill_calls": 0}
 
-        @jax.jit
-        def _decode(params, cache, tok, pos, key):
+        def _decode_body(params, cache, tok, pos, key):
             logits, cache = T.decode_step(params, cache, tok, pos, cfg)
             logits = logits[:, -1]
             if self.temperature > 0:
@@ -103,7 +166,16 @@ class GenerationEngine:
                 nxt = jnp.argmax(logits, -1)
             return nxt[:, None].astype(jnp.int32), cache
 
-        self._decode = _decode
+        self._decode_body = _decode_body
+        self._decode = jax.jit(_decode_body)
+        # mesh-sharded decode variants, keyed by (batch, cache) bucket:
+        # unlike the single-device jit above (shardings propagate from
+        # committed inputs), the pjit path pins in/out shardings so the
+        # KV-cache layout is *stable* across the prefill -> decode
+        # handoff — a PrefillFuture's cache re-enters decode with
+        # exactly the layout prefill committed, never a GSPMD re-guess
+        self._decode_fns: dict[tuple[int, int], Callable] = {}
+        self.decode_shardings: dict[tuple[int, int], tuple] = {}
 
     def _seq_paddable(self, seq_bucket: int) -> bool:
         """Right-padding the prompt is exact iff every mixer is attention
@@ -150,14 +222,45 @@ class GenerationEngine:
                     out_shardings=out_sh)
         return self._prefill_fns[key]
 
-    def generate(self, tokens: np.ndarray, n_new: int | None = None,
-                 seed: int = 0) -> np.ndarray:
-        """tokens (B, S) -> generated (B, n_new)."""
+    def _decode_fn(self, b_b: int, max_len: int, cache) -> Callable:
+        """The decode step for one (batch, cache) bucket: the shared jit
+        on a single device; on a mesh, a pjit variant with in/out
+        shardings pinned to the prefill's committed layout (tokens over
+        "data", KV cache per ``sharding.rules``) so the cache layout
+        cannot drift across decode steps or the prefill->decode
+        handoff."""
+        if self.mesh is None:
+            return self._decode
+        key = (b_b, max_len)
+        if key not in self._decode_fns:
+            from repro.sharding import rules, tier_mesh
+            tok_sh = tier_mesh.batch_sharding(self.mesh, b_b)
+            rep = jax.sharding.NamedSharding(
+                self.mesh, jax.sharding.PartitionSpec())
+            cache_sh = rules.cache_shardings(cache, self.mesh, self.cfg)
+            self.decode_shardings[key] = (tok_sh, cache_sh)
+            self._decode_fns[key] = jax.jit(
+                self._decode_body,
+                in_shardings=(self._param_shardings, cache_sh, tok_sh,
+                              rep, rep),
+                out_shardings=(tok_sh, cache_sh))
+        return self._decode_fns[key]
+
+    def prefill_async(self, tokens: np.ndarray, n_new: int | None = None,
+                      seed: int = 0) -> PrefillFuture:
+        """Dispatch the prefill for ``tokens`` (B, S) and return a
+        cancellable ``PrefillFuture``. jax dispatch is asynchronous, so
+        this returns as soon as the prefill (and the post-prefill token
+        sample, which follows the exact keyed path ``generate`` uses) is
+        enqueued on the engine's device/mesh — the caller overlaps it
+        with other work and later either commits (``decode_from``) or
+        cancels (``PrefillFuture.cancel``)."""
         if n_new is None:                  # NOT `or`: an explicit 0 is 0
             n_new = self.max_new_tokens
         b, s = tokens.shape
         if n_new <= 0:
-            return np.zeros((b, 0), np.int32)
+            return PrefillFuture(self, n_new=0, b=b, b_b=b, s=s,
+                                 max_len=0, seed=seed)
         b_b = bucket_size(b, self.batch_floor)
         s_b = bucket_size(s, self.seq_floor)
         if not self._seq_paddable(s_b):
@@ -189,13 +292,44 @@ class GenerationEngine:
         else:
             nxt = jnp.argmax(last_logits, -1)
         nxt = nxt[:, None].astype(jnp.int32)
+        return PrefillFuture(self, n_new=n_new, b=b, b_b=b_b, s=s,
+                             max_len=max_len, seed=seed, _tok=nxt,
+                             _cache=cache, _rkey=rkey)
+
+    def decode_from(self, fut: PrefillFuture) -> np.ndarray:
+        """Commit a ``PrefillFuture``: take the KV-cache handoff and run
+        the decode loop to ``(B, n_new)`` generated tokens — bit-identical
+        to the ``generate`` call the future's ``prefill_async`` started,
+        because it *is* the second half of that call."""
+        if fut.engine is not self:
+            raise ValueError("PrefillFuture belongs to a different engine")
+        if fut.cancelled:
+            raise RuntimeError("cannot decode a cancelled PrefillFuture "
+                               "(its KV cache was retired)")
+        if fut.consumed:
+            raise RuntimeError("PrefillFuture already consumed")
+        fut.consumed = True
+        if fut.n_new <= 0:
+            fut._retire()
+            return np.zeros((fut.b, 0), np.int32)
+        nxt, cache, rkey = fut._tok, fut._cache, fut._rkey
+        fut._tok = fut._cache = fut._rkey = None
+        fut._retire()
+        decode = self._decode_fn(fut.b_b, fut.max_len, cache)
         out = [np.asarray(nxt)]
-        for i in range(n_new - 1):
+        for i in range(fut.n_new - 1):
             rkey, sub = jax.random.split(rkey)
-            nxt, cache = self._decode(self.params, cache, nxt,
-                                      jnp.int32(s + i), sub)
+            nxt, cache = decode(self.params, cache, nxt,
+                                jnp.int32(fut.s + i), sub)
             out.append(np.asarray(nxt))
-        return np.concatenate(out, axis=1)[:b]
+        return np.concatenate(out, axis=1)[:fut.b]
+
+    def generate(self, tokens: np.ndarray, n_new: int | None = None,
+                 seed: int = 0) -> np.ndarray:
+        """tokens (B, S) -> generated (B, n_new). Exactly
+        ``decode_from(prefill_async(...))`` — the split entry points the
+        speculative scheduler drives are the same code path."""
+        return self.decode_from(self.prefill_async(tokens, n_new, seed))
 
 
 @dataclasses.dataclass
@@ -210,9 +344,14 @@ class EnginePool:
     def __post_init__(self):
         self._engines: dict[tuple, GenerationEngine] = {}
         self._params_refs: dict[tuple, dict] = {}
+        # in-flight speculative PrefillFutures, tracked per engine key
+        # (i.e. per tier×placement) so an idle device's speculations can
+        # be cancelled wholesale when the real accept mask lands.
+        self._speculative: dict[tuple, list] = {}
+        self.spec_stats = {"issued": 0, "committed": 0, "cancelled": 0}
 
-    def get(self, cfg: ModelConfig, params: dict,
-            device=None, mesh=None) -> GenerationEngine:
+    @staticmethod
+    def _key(cfg: ModelConfig, params: dict, device=None, mesh=None) -> tuple:
         # key on weight identity too: two tiers can share an architecture
         # (same cfg.name) with different trained params, and must not
         # silently serve each other's model. The pool itself pins the
@@ -231,7 +370,11 @@ class EnginePool:
             where = (device.platform, device.id)
         else:
             where = None
-        key = (cfg.name, id(params), where)
+        return (cfg.name, id(params), where)
+
+    def get(self, cfg: ModelConfig, params: dict,
+            device=None, mesh=None) -> GenerationEngine:
+        key = self._key(cfg, params, device, mesh)
         eng = self._engines.get(key)
         if eng is None:
             eng = GenerationEngine(cfg, params,
@@ -241,6 +384,68 @@ class EnginePool:
             self._engines[key] = eng
             self._params_refs[key] = params
         return eng
+
+    def speculate(self, cfg: ModelConfig, params: dict,
+                  tokens: np.ndarray, n_new: int | None = None,
+                  seed: int = 0, device=None, mesh=None) -> "PrefillFuture":
+        """Dispatch a *speculative* prefill on the (tier, placement)
+        engine and track the future. The caller later resolves it with
+        ``commit`` (runs the decode — now charged work) or ``cancel``
+        (retires the KV cache — only wall-clock was burnt). Both paths
+        untrack the future via its retire hook."""
+        key = self._key(cfg, params, device, mesh)
+        eng = self.get(cfg, params, device=device, mesh=mesh)
+        fut = eng.prefill_async(tokens, n_new, seed)
+        fut._retire_cb = lambda f, key=key: self._untrack(key, f)
+        self._speculative.setdefault(key, []).append(fut)
+        self.spec_stats["issued"] += 1
+        return fut
+
+    def commit(self, fut: "PrefillFuture") -> np.ndarray:
+        """Commit a tracked speculation: KV handoff into the decode loop,
+        returning the generated tokens ``generate`` would have."""
+        if not fut.live:
+            raise RuntimeError("cannot commit a retired PrefillFuture")
+        self.spec_stats["committed"] += 1
+        return fut.engine.decode_from(fut)
+
+    def cancel(self, fut: "PrefillFuture") -> None:
+        """Cancel a tracked speculation, retiring its KV cache."""
+        if not fut.live:
+            return
+        self.spec_stats["cancelled"] += 1
+        fut.cancel()
+
+    def cancel_all(self, cfg: ModelConfig = None, params: dict = None,
+                   device=None, mesh=None) -> int:
+        """Cancel every live speculative future — for one engine key when
+        ``cfg``/``params`` are given, across the whole pool otherwise
+        (shutdown). Returns how many were cancelled."""
+        if cfg is not None:
+            keys = [self._key(cfg, params, device, mesh)]
+        else:
+            keys = list(self._speculative)
+        n = 0
+        for key in keys:
+            for fut in list(self._speculative.get(key, ())):
+                if fut.live:
+                    self.cancel(fut)
+                    n += 1
+        return n
+
+    def inflight(self) -> int:
+        """Live (neither committed nor cancelled) speculative futures."""
+        return sum(len(v) for v in self._speculative.values())
+
+    def _untrack(self, key: tuple, fut: "PrefillFuture") -> None:
+        lst = self._speculative.get(key)
+        if lst is not None:
+            try:
+                lst.remove(fut)
+            except ValueError:
+                pass
+            if not lst:
+                self._speculative.pop(key, None)
 
     def __len__(self) -> int:
         return len(self._engines)

@@ -118,6 +118,7 @@ def stage1_lookup(pipeline, reqs, cache_lock=None, need_emb=False):
         embed_s = time.perf_counter() - t0
     if pipeline.cache is not None:
         t0 = time.perf_counter()
+        pipeline._cache_refresh()   # governor-owned similarity threshold
         if cache_lock is not None:
             with cache_lock:
                 hit_mask, cached = pipeline.cache.lookup(emb)
@@ -181,6 +182,8 @@ class RequestState:
     degraded: bool = False          # overload-degraded (reduced entry bar)
     entry: int = 0                  # cascade entry position (router)
     pred_accept: float | None = None  # router's accept prob at the entry
+    probs: np.ndarray | None = None   # (m,) per-tier accept probabilities
+                                      # (router) — speculation candidates
     t_admitted: float | None = None
     t_done: float | None = None
     t_enqueued: float = 0.0         # entered the current tier's wait queue

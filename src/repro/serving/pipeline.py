@@ -161,6 +161,11 @@ class ServeResult:
             if self.ingress.get("shed") or self.ingress.get("degraded"):
                 extra += (f" | overload: {self.ingress['shed']} shed, "
                           f"{self.ingress['degraded']} degraded")
+        spec = (self.ingress or {}).get("speculation")
+        if spec is not None:
+            extra += (f" | speculation: {spec['committed']}/{spec['issued']}"
+                      f" committed, {spec['cancelled']} cancelled "
+                      f"({spec['wasted_s'] * 1e3:.0f}ms wasted)")
         if self.strategy is not None:
             extra += (f" | entry tiers {self.strategy['entry_hist']} "
                       f"(bar {self.strategy['entry_bar']:.2f}) | spend "
@@ -203,6 +208,14 @@ class ServingPipeline:
     # "device" jitted gather+prefix-sum | "pallas" kernel) — opt-in,
     # bit-identical to "host" (repro.kernels.cascade_compact)
     compact: str = "host"
+    # speculative cascade execution (repro.serving.sched): idle tier
+    # workers pre-invoke predicted-reject rows still decoding upstream.
+    # A *stream-scheduler* knob: serve()/the serial batcher have no idle
+    # tier workers, so it is a no-op there by construction — which is
+    # what keeps the {serve, serial, scheduler} equivalence matrix
+    # closed. An explicit slo= passed to the stream entry points wins
+    # (it carries its own speculation dials).
+    speculate: bool = False
 
     def __post_init__(self):
         from repro.core.cascade import COMPACT_MODES
@@ -268,6 +281,22 @@ class ServingPipeline:
                 saved += c * (self.full_prompt_tokens - spec.prompt.n_tokens)
         return int(saved)
 
+    def _cache_refresh(self):
+        """Refresh the completion cache's *similarity threshold* from the
+        budget governor when it owns one (``BudgetGovernor.
+        base_threshold``) — overspend admits more near-duplicate hits
+        (free answers), spare budget tightens back toward exactness.
+        Called at every lookup site (``serve``, ``stage1_lookup``) so
+        both serving paths read the same window's dial."""
+        if self.cache is None:
+            return
+        strat = self.strategy
+        gov = getattr(strat, "governor", None) if strat is not None else None
+        if gov is not None:
+            thr = gov.cache_threshold()
+            if thr is not None:
+                self.cache.threshold = thr
+
     def _cache_insert(self, emb_rows: np.ndarray, answers,
                       scores=None) -> bool:
         """Insert fresh answers — the cache is int-keyed, so non-integer
@@ -313,6 +342,7 @@ class ServingPipeline:
             emb = np.asarray(self._block(self.embed(tokens)))
             latency["embed"] = time.perf_counter() - t
             t = time.perf_counter()
+            self._cache_refresh()   # governor-owned similarity threshold
             hit_mask, cached = self.cache.lookup(emb)
             hit_idx = np.flatnonzero(hit_mask)
             hit_ans = cached[hit_idx]
@@ -396,7 +426,7 @@ class ServingPipeline:
             from repro.serving.sched import SLOConfig, TierScheduler
             if slo is None:
                 slo = SLOConfig(max_holdback_s=0.02 if holdback is None
-                                else holdback)
+                                else holdback, speculate=self.speculate)
             return TierScheduler(self, max_chunk=max_chunk, slo=slo)
         from repro.serving.ingress import ContinuousBatcher
         if slo is not None:

@@ -7,8 +7,9 @@ cascade step (``repro.core.cascade.tier_step``):
                concurrent chunk decoding, adaptive holdback, bounded
                queues with overload shedding/degradation.
 ``policy``     ``SLOConfig`` (deadlines, holdback cap, queue caps,
-               overload policy) and the pure decision functions
-               (``holdback_timeout``, ``admit_decision``).
+               overload policy, speculation dials) and the pure decision
+               functions (``holdback_timeout``, ``admit_decision``,
+               ``speculation_candidate``, ``may_speculate``).
 ``estimator``  per-tier EWMA service-time / queue-delay estimators and
                utilization counters feeding the policy.
 
@@ -21,5 +22,7 @@ from repro.serving.sched.policy import (  # noqa: F401
     SLOConfig,
     admit_decision,
     holdback_timeout,
+    may_speculate,
+    speculation_candidate,
 )
 from repro.serving.sched.scheduler import TierScheduler  # noqa: F401

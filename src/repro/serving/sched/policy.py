@@ -25,10 +25,24 @@ Three decisions live here, kept separate from the worker machinery in
     explicit per-request deadline wins; otherwise ``deadline_s`` sets
     one relative to arrival; otherwise no deadline (pure fill-driven
     dispatch, like the serial batcher).
+  * **speculation** (``speculation_candidate``, ``may_speculate``) —
+    whether an *idle* tier may burn cycles pre-invoking rows still
+    decoding on earlier tiers (speculative cascade execution,
+    ``sched.scheduler``). Candidate selection uses the contextual
+    router's per-(query, tier) accept probabilities: a row qualifies
+    when every tier between its current position and the speculating
+    tier is predicted to reject (probability below ``spec_bar``); with
+    no router attached every decoding row qualifies (cold fallback).
+    The idle budget (``spec_idle_frac``) caps wasted device-seconds as
+    a fraction of elapsed stream time, tested *leading* — the tier's
+    EWMA-predicted chunk service time counts against the budget before
+    the speculative chunk is issued, not after it was wasted.
 """
 from __future__ import annotations
 
 import dataclasses
+
+import numpy as np
 
 OVERLOAD_POLICIES = ("reject", "degrade")
 
@@ -59,6 +73,22 @@ class SLOConfig:
     #: safety x EWMA service) would miss their deadline — leading-signal
     #: shedding, acts before any queue fills (needs deadlines to bite)
     predictive_shed: bool = False
+    #: speculative cascade execution — idle tiers pre-invoke predicted-
+    #: reject rows still decoding upstream. Opt-in; never changes
+    #: answers, charged cost, stopped_at, or tier_counts (speculation
+    #: only moves wall-clock): results are committed through the normal
+    #: ``tier_step`` path and charged only if the row actually escalates
+    speculate: bool = False
+    #: how many tiers ahead of a row's current position may speculate on
+    #: it (1 = only the immediate next tier)
+    spec_depth: int = 1
+    #: router-probability floor: a tier speculates on a row only when
+    #: every intermediate tier's predicted accept probability is below
+    #: this bar; with no router attached, all decoding rows qualify
+    spec_bar: float = 0.5
+    #: cap on wasted (cancelled-speculation) device-seconds as a
+    #: fraction of elapsed stream time; None = unlimited idle burn
+    spec_idle_frac: float | None = 0.5
 
     def __post_init__(self):
         if self.overload not in OVERLOAD_POLICIES:
@@ -77,6 +107,13 @@ class SLOConfig:
             raise ValueError("deadline_s must be > 0")
         if self.service_safety <= 0:
             raise ValueError("service_safety must be > 0")
+        if self.spec_depth < 1:
+            raise ValueError("spec_depth must be >= 1")
+        if not 0.0 <= self.spec_bar <= 1.0:
+            raise ValueError("spec_bar must be in [0, 1]")
+        if self.spec_idle_frac is not None and self.spec_idle_frac <= 0:
+            raise ValueError("spec_idle_frac must be > 0 (or None for "
+                             "unlimited idle burn)")
 
     def deadline_for(self, arrival: float,
                      explicit: float | None = None) -> float | None:
@@ -89,13 +126,19 @@ class SLOConfig:
         return float(arrival) + self.deadline_s
 
 
-def holdback_timeout(head, est, now: float, slo: SLOConfig) -> float:
+def holdback_timeout(head, est, now: float, slo: SLOConfig,
+                     max_holdback_s: float | None = None) -> float:
     """Seconds tier ``head.tier_pos`` may keep holding its partial chunk
     before dispatching, given the head-of-line request and the tier's
     estimator. ``<= 0`` means ship NOW: either the head has aged past
     ``max_holdback_s``, or its predicted completion
-    (now + safety x EWMA service) would miss its deadline."""
-    t_age = head.t_enqueued + slo.max_holdback_s - now
+    (now + safety x EWMA service) would miss its deadline.
+    ``max_holdback_s`` overrides the config window when given — the
+    budget governor's holdback dial stretches/shrinks it under
+    under/overspend without rebuilding the frozen ``SLOConfig``."""
+    if max_holdback_s is None:
+        max_holdback_s = slo.max_holdback_s
+    t_age = head.t_enqueued + max_holdback_s - now
     if head.deadline is None:
         return t_age
     est_s = slo.service_safety * est.predicted_service(slo.init_service_s)
@@ -134,3 +177,31 @@ def admit_decision(queue_len: int, slo: SLOConfig, *, est=None,
     if slo.overload == "degrade" and queue_len < 2 * cap:
         return DEGRADE
     return SHED
+
+
+def speculation_candidate(probs, cur: int, target: int, bar: float) -> bool:
+    """May tier ``target`` speculate on a row currently decoding at tier
+    ``cur``? Yes when the router predicts *every* tier in
+    ``[cur, target)`` rejects the row (accept probability below
+    ``bar``) — a predicted accept anywhere in between means the row
+    likely never reaches ``target`` and the prefill would be wasted.
+    ``probs`` is the row's per-tier accept-probability vector from the
+    contextual router; ``None`` (no router / cold router) falls back to
+    treating every decoding row as a candidate."""
+    if probs is None:
+        return True
+    return bool(np.all(np.asarray(probs)[cur:target] < bar))
+
+
+def may_speculate(slo: SLOConfig, wasted_s: float, elapsed: float,
+                  predicted_s: float = 0.0) -> bool:
+    """Idle-budget gate: may a tier issue one more speculative chunk?
+    ``wasted_s`` is the stream's cancelled-speculation device-seconds so
+    far; ``predicted_s`` the speculating tier's EWMA-predicted service
+    time for the chunk about to be issued — counted *before* issue so
+    the budget check leads the spend instead of trailing it."""
+    if not slo.speculate:
+        return False
+    if slo.spec_idle_frac is None:
+        return True
+    return wasted_s + predicted_s <= slo.spec_idle_frac * max(elapsed, 1e-9)

@@ -70,6 +70,25 @@ returns bit-identical answers and per-request costs to
 ``ServingPipeline.serve``: a request's cost is still its own row-wise
 ``ApiCost`` terms summed in ascending tier order on float64, regardless
 of which chunks it rode or what was decoding concurrently.
+
+**Speculative cascade execution** (``SLOConfig.speculate``): a tier
+worker with an empty queue may *pre-invoke* rows still decoding on
+earlier tiers, picked by the contextual router's predicted-reject
+probabilities (``policy.speculation_candidate``) under an idle-device
+budget (``policy.may_speculate``). The speculative result is parked in
+``_spec_ready``; if the row really escalates here, ``_run_chunk`` hands
+it to ``tier_step(prefilled=...)`` — the cold invoke is skipped and the
+tier's wall-clock overlaps the upstream decode — and if the row is
+accepted upstream instead, the entry is cancelled and its device-seconds
+count as waste. Scoring, the accept rule, escalation, and cost charging
+all still run through the identical ``tier_step`` path on commit, and a
+speculative chunk runs on the *same* worker thread as the tier's real
+chunks (the one-thread-per-backend contract holds), so speculation can
+only move wall-clock: answers, charged cost, ``stopped_at`` and
+``tier_counts`` are bit-identical to ``speculate=False`` (the
+speculative legs of tests/test_placement.py). The known tradeoff: a
+real arrival during a speculative chunk waits for it to finish —
+bounded by one chunk's service time, gated by the policy dials.
 """
 from __future__ import annotations
 
@@ -87,7 +106,9 @@ from repro.serving.ingress import (IngressQueue, RequestState,
                                    stage1_lookup)
 from repro.serving.sched.estimator import TierEstimator
 from repro.serving.sched.policy import (ADMIT, DEGRADE, SLOConfig,
-                                        admit_decision, holdback_timeout)
+                                        admit_decision, holdback_timeout,
+                                        may_speculate,
+                                        speculation_candidate)
 
 
 class TierScheduler:
@@ -155,6 +176,26 @@ class TierScheduler:
         self.latency = {"embed": 0.0, "cache": 0.0, "cascade": 0.0,
                         "insert": 0.0}
 
+        # speculation state (all under _mu; see module docstring).
+        # _decoding[j]: rid -> request for rows inside tier j's running
+        # chunk — the candidate pool downstream tiers speculate over.
+        # _spec_ready[t]: rid -> (answer, cost, row_s) pre-invoked on
+        # tier t, awaiting commit (row escalates to t) or cancel (row
+        # accepted upstream). _spec_inflight[t]: rids being pre-invoked
+        # right now. Every _spec_ready entry resolves: a row's position
+        # only ever increases, so it either reaches t (consumed by
+        # _take_speculation) or is accepted at some j < t with
+        # t <= j + spec_depth (cancelled by _run_chunk's scan).
+        self._decoding: list[dict] = [dict() for _ in range(m)]
+        self._spec_ready: list[dict] = [dict() for _ in range(m)]
+        self._spec_inflight: list[set] = [set() for _ in range(m)]
+        self.spec_issued = 0        # rows pre-invoked
+        self.spec_committed = 0     # rows whose pre-invoke was consumed
+        self.spec_cancelled = 0     # rows pre-invoked in vain
+        self.spec_wasted_s = 0.0    # device-seconds of cancelled rows
+        self.spec_busy_s = [0.0] * m   # speculative busy time per tier
+        self.spec_chunks = [0] * m
+
     # -- admission (driver thread) -----------------------------------------
     def _admit(self, reqs: Sequence[RequestState], now: float):
         """Stage-1 a burst of arrivals: embed + cache lookup (and, with
@@ -217,6 +258,8 @@ class TierScheduler:
                     r.entry = j0
                     if probs is not None:
                         r.pred_accept = float(probs[i, j0])
+                        r.probs = probs[i]  # speculation candidates read
+                                            # the full per-tier vector
                     if keep_emb:            # only queued misses keep the
                         r.emb = emb[i]      # embedding (insert-on-finish);
                     self._enqueue_locked(r, j0, now)
@@ -257,6 +300,28 @@ class TierScheduler:
             r.future.get_loop().call_soon_threadsafe(
                 lambda f=r.future, rr=r: f.done() or f.set_result(rr))
 
+    # -- governor dials ----------------------------------------------------
+    def _governor(self):
+        strat = self._strategy
+        return getattr(strat, "governor", None) if strat is not None else None
+
+    def _effective_chunk(self) -> int:
+        """Chunk-size cap with the budget governor's dial applied:
+        overspend grows chunks (fuller buckets, better amortization),
+        spare budget shrinks them (lower holdback latency). Read at
+        each dispatch decision — racing a governor window update just
+        means this decision uses the previous window's dial."""
+        gov = self._governor()
+        return self.max_chunk if gov is None else gov.max_chunk(
+            self.max_chunk)
+
+    def _effective_holdback(self) -> float | None:
+        """Holdback-window override from the governor's dial (None =
+        use the SLOConfig window unchanged)."""
+        gov = self._governor()
+        return None if gov is None else gov.holdback_s(
+            self.slo.max_holdback_s)
+
     # -- dispatch decision (under _mu) -------------------------------------
     def _upstream_quiet(self, j: int) -> bool:
         """Nothing can ever flow into tier j again: ingress is drained
@@ -272,21 +337,121 @@ class TierScheduler:
         q = self._waiting[j]
         if not q:
             return None, None
-        if len(q) >= self.max_chunk:
+        if len(q) >= self._effective_chunk():
             return self._pop_locked(j, now), 0.0
-        wait = holdback_timeout(q[0], self.estimators[j], now, self.slo)
+        wait = holdback_timeout(q[0], self.estimators[j], now, self.slo,
+                                max_holdback_s=self._effective_holdback())
         if wait <= 0.0 or self._upstream_quiet(j):
             return self._pop_locked(j, now), 0.0
         return None, wait
 
     def _pop_locked(self, j: int, now: float) -> list[RequestState]:
         q = self._waiting[j]
-        batch = [q.popleft() for _ in range(min(self.max_chunk, len(q)))]
+        batch = [q.popleft()
+                 for _ in range(min(self._effective_chunk(), len(q)))]
         for r in batch:
             self.estimators[j].observe_wait(now - r.t_enqueued)
         self._busy[j] += len(batch)
+        if self.slo.speculate:
+            # expose the chunk as downstream speculation candidates for
+            # the duration of the decode (cleared in _run_chunk)
+            self._decoding[j] = {r.rid: r for r in batch}
         self._cv.notify_all()       # wake workers blocked on a full queue
         return batch
+
+    # -- speculation (see module docstring) --------------------------------
+    def _next_speculation_locked(self, t: int, now: float):
+        """Rows tier ``t``'s idle worker should pre-invoke now, or None.
+        Only consulted when tier t has no real chunk to run; real work
+        always wins. Candidates are rows decoding at positions within
+        ``spec_depth`` upstream whose router probabilities predict
+        rejection all the way here (cold router: every row qualifies),
+        excluding rows already speculated on and degraded rows (their
+        forced accept upstream makes the pre-invoke guaranteed waste),
+        gated by the idle budget with the tier's EWMA-predicted chunk
+        time counted up front."""
+        if t == 0 or not self.slo.speculate or self._waiting[t]:
+            return None
+        predicted = self.estimators[t].predicted_service(
+            self.slo.init_service_s)
+        if not may_speculate(self.slo, self.spec_wasted_s, now,
+                             predicted_s=predicted):
+            return None
+        cap = self._effective_chunk()
+        rows = []
+        for i in range(max(0, t - self.slo.spec_depth), t):
+            for r in self._decoding[i].values():
+                if (r.rid in self._spec_ready[t]
+                        or r.rid in self._spec_inflight[t]
+                        or r.degraded):
+                    continue
+                if not speculation_candidate(r.probs, i, t,
+                                             self.slo.spec_bar):
+                    continue
+                rows.append(r)
+                if len(rows) >= cap:
+                    break
+            if len(rows) >= cap:
+                break
+        if not rows:
+            return None
+        for r in rows:
+            self._spec_inflight[t].add(r.rid)
+        self.spec_issued += len(rows)
+        return rows
+
+    def _run_speculation(self, t: int, rows: list[RequestState]):
+        """Pre-invoke tier t on ``rows`` (no scheduler lock held) and
+        park the per-row (answer, cost) for commit. Runs on tier t's own
+        worker thread — the same thread that runs its real chunks — so
+        the one-invoke-at-a-time backend contract holds. Rows that were
+        accepted upstream while we were invoking are cancelled here."""
+        toks, b = pad_pow2_rows(np.stack([r.tokens for r in rows]))
+        t0 = time.perf_counter()
+        a, c = self._tiers[t].invoke(toks)
+        spent = time.perf_counter() - t0
+        a = np.asarray(a)[:b]
+        c = np.asarray(c, np.float64)[:b]
+        row_s = spent / len(rows)
+        with self._cv:
+            self.spec_busy_s[t] += spent
+            self.spec_chunks[t] += 1
+            for i, r in enumerate(rows):
+                self._spec_inflight[t].discard(r.rid)
+                if r.done:          # accepted upstream mid-invoke
+                    self.spec_cancelled += 1
+                    self.spec_wasted_s += row_s
+                else:
+                    self._spec_ready[t][r.rid] = (a[i], float(c[i]), row_s)
+            self._cv.notify_all()
+
+    def _take_speculation(self, j: int, batch: list[RequestState],
+                          padded: int, b: int):
+        """Collect parked speculative results for this real chunk as the
+        ``tier_step(prefilled=...)`` triple, or None when no row of the
+        chunk was speculated on. The pow2 filler rows replicate the last
+        true row (``pad_pow2_rows``), so its prefilled answer/cost are
+        replicated onto them too — keeping the padded invoke exact."""
+        with self._mu:
+            ready = self._spec_ready[j]
+            hits = [(i, ready.pop(r.rid)) for i, r in enumerate(batch)
+                    if r.rid in ready]
+            if not hits:
+                return None
+            self.spec_committed += len(hits)
+        mask = np.zeros(padded, bool)
+        pa = np.empty(padded, object)
+        pc = np.zeros(padded, np.float64)
+        for i, (ans, cost, _row_s) in hits:
+            mask[i] = True
+            pa[i] = ans
+            pc[i] = cost
+        if mask[b - 1]:
+            mask[b:] = True
+            for k in range(b, padded):
+                pa[k] = pa[b - 1]
+            pc[b:] = pc[b - 1]
+        return mask, pa, pc
 
     # -- the per-tier worker ----------------------------------------------
     def _run_chunk(self, j: int, batch: list[RequestState]):
@@ -300,11 +465,13 @@ class TierScheduler:
         thresholds = (self._strategy.thresholds(pipe.thresholds)
                       if self._strategy is not None else pipe.thresholds)
         toks, b = pad_pow2_rows(np.stack([r.tokens for r in batch]))
+        prefilled = (self._take_speculation(j, batch, len(toks), b)
+                     if self.slo.speculate else None)
         t0 = time.perf_counter()
         ans, cost, scores, accept = tier_step(
             self._tiers[j], toks, j, scorer=pipe._pos_scorer,
             threshold=None if last else thresholds[j], last=last,
-            scorer_lock=self._scorer_mu)
+            scorer_lock=self._scorer_mu, prefilled=prefilled)
         ans, cost, scores, accept = (ans[:b], cost[:b], scores[:b],
                                      accept[:b])
         chunk_s = time.perf_counter() - t0
@@ -339,14 +506,27 @@ class TierScheduler:
             insert_s = time.perf_counter() - t0
         for r in finished:                  # embedding served its purpose
             r.emb = None
+        m = len(self._tiers)
         with self._cv:
             self.estimators[j].observe_chunk(chunk_s, len(batch))
             self.chunks_per_tier[j] += 1
             self._fill.append(len(batch) / self.max_chunk)
             self.latency["cascade"] += chunk_s   # summed busy time: with
             self.latency["insert"] += insert_s   # parallel tiers this can
-            for r in finished:                   # exceed wall clock
+            if self.slo.speculate:               # exceed wall clock
+                self._decoding[j] = {}
+            for r in finished:
                 self._finish_locked(r, now)
+                if self.slo.speculate:
+                    # the row stops here: cancel any speculation parked
+                    # for it downstream (targets can only be within
+                    # spec_depth of some earlier position <= j)
+                    hi = min(j + self.slo.spec_depth, m - 1)
+                    for t2 in range(j + 1, hi + 1):
+                        hit = self._spec_ready[t2].pop(r.rid, None)
+                        if hit is not None:
+                            self.spec_cancelled += 1
+                            self.spec_wasted_s += hit[2]
             # bounded escalation: block (releasing the lock) while the
             # downstream queue is full — strictly forward flow, so this
             # backpressure cannot deadlock; _busy[j] stays raised until
@@ -366,17 +546,27 @@ class TierScheduler:
         clock = self._clock
         try:
             while True:
+                spec = None
                 with self._cv:
                     batch = None
                     while batch is None:
                         if self._stop:
                             return
                         batch, wait = self._next_chunk_locked(j, clock())
-                        if batch is None:
-                            timeout = (self.IDLE_POLL if wait is None else
-                                       min(max(wait, 1e-4), self.IDLE_POLL))
-                            self._cv.wait(timeout)
-                self._run_chunk(j, batch)
+                        if batch is not None:
+                            break
+                        # idle: maybe burn the wait on speculation —
+                        # real work always wins the next loop iteration
+                        spec = self._next_speculation_locked(j, clock())
+                        if spec is not None:
+                            break
+                        timeout = (self.IDLE_POLL if wait is None else
+                                   min(max(wait, 1e-4), self.IDLE_POLL))
+                        self._cv.wait(timeout)
+                if batch is not None:
+                    self._run_chunk(j, batch)
+                elif spec is not None:
+                    self._run_speculation(j, spec)
         except BaseException as e:         # surface worker crashes to the
             with self._cv:                 # driver instead of hanging it
                 self._error = e
@@ -491,6 +681,20 @@ class TierScheduler:
             "tier_meshes": [None if getattr(s, "mesh", None) is None
                             else _mesh_desc(s.mesh)
                             for s in self.pipeline.tiers],
+            # speculative execution (None when the dial is off):
+            # committed/cancelled row counts, the device-seconds burnt on
+            # cancelled rows, and per-tier speculative busy time — the
+            # overlap the cascade's wall clock gained
+            "speculation": None if not self.slo.speculate else {
+                "issued": self.spec_issued,
+                "committed": self.spec_committed,
+                "cancelled": self.spec_cancelled,
+                "wasted_s": self.spec_wasted_s,
+                "spec_busy_s": list(self.spec_busy_s),
+                "spec_chunks": list(self.spec_chunks),
+                "overlap_frac": [sb / total_s if total_s > 0 else 0.0
+                                 for sb in self.spec_busy_s],
+            },
         }
 
     def result(self, total_s: float):

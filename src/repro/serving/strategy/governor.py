@@ -18,7 +18,17 @@ scalar *shift* applied to every control surface:
   * the completion cache's ``min_score`` confidence floor:
     ``floor - shift`` — overspending loosens the floor so more answers
     become reusable (cache hits are free), spare budget tightens it so
-    only high-confidence answers are ever replayed.
+    only high-confidence answers are ever replayed;
+  * the completion cache's *similarity threshold*: overspending lowers
+    it toward the slack's share of the shift (more near-duplicates hit
+    the free cache), spare budget raises it back toward exactness —
+    scaled by ``1 - base`` so a 0.99-tight base moves by basis points,
+    not the raw shift (``cache_threshold``);
+  * the scheduler's chunk cap and holdback window (``max_chunk``,
+    ``holdback_s``, multiplier dials ``base x (1 + shift)``):
+    overspending grows chunks and lets them fill longer — fuller pow2
+    buckets amortize better, trading latency for $ — while spare budget
+    shrinks them, spending $ on lower holdback latency.
 
 Both updates happen once per ``window`` observed queries, so the
 controller reacts within a few windows of a drift and cannot thrash on
@@ -52,6 +62,8 @@ class BudgetGovernor:
     base_thresholds: tuple              # the learned (offline) taus
     base_bar: float = 0.5               # the router's entry bar
     base_min_score: float | None = None  # completion-cache score floor
+    base_threshold: float | None = None  # completion-cache similarity
+                                         # threshold (None = not owned)
     window: int = 64                    # queries per controller update
     eta: float = 0.5                    # dual step size (per window)
     max_shift: float = 0.35             # saturation of the threshold shift
@@ -136,6 +148,33 @@ class BudgetGovernor:
             return None
         return float(np.clip(self.base_min_score - self.shift, 0.0, 1.0))
 
+    def cache_threshold(self) -> float | None:
+        """Current completion-cache similarity threshold (None when not
+        owned). Overspend lowers it — near-duplicates start hitting the
+        free cache — spare budget raises it toward exactness. The move
+        is scaled by the slack ``1 - base``: similarity thresholds live
+        within basis points of 1.0, where the raw threshold shift would
+        be a sledgehammer."""
+        if self.base_threshold is None:
+            return None
+        return float(np.clip(
+            self.base_threshold - self.shift * (1.0 - self.base_threshold),
+            0.0, 1.0))
+
+    def max_chunk(self, base: int) -> int:
+        """Scheduler chunk cap under the dial: ``base x (1 + shift)``,
+        never below 1. Overspend grows chunks (fuller pow2 buckets,
+        better batch amortization per $), spare budget shrinks them
+        (lower holdback latency). Like ``thresholds(base)``, the base
+        lives with the caller; the governor only owns the scale."""
+        return max(1, int(round(base * (1.0 + self.shift))))
+
+    def holdback_s(self, base: float) -> float:
+        """Scheduler holdback window under the same multiplier dial:
+        overspend lets partial chunks wait longer for fill, spare budget
+        ships them sooner."""
+        return max(0.0, float(base * (1.0 + self.shift)))
+
     # -- telemetry ---------------------------------------------------------
     def realized_rate(self) -> float:
         """Lifetime $/query over everything observed."""
@@ -151,5 +190,8 @@ class BudgetGovernor:
             "thresholds": self.thresholds(),
             "entry_bar": self.entry_bar(),
             "min_score": self.min_score(),
+            "cache_threshold": self.cache_threshold(),
+            "chunk_scale": 1.0 + self.shift,
+            "holdback_scale": 1.0 + self.shift,
             "trace": list(self.trace),
         }

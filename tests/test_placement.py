@@ -24,6 +24,7 @@ through the full matrix:
 import os
 import subprocess
 import sys
+import time
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +35,7 @@ from repro.core.approx import CompletionCache
 from repro.core.cost import ApiCost
 from repro.core.prompt import PromptSpec
 from repro.serving.pipeline import ServingPipeline, TierSpec
+from repro.serving.sched import SLOConfig
 from repro.sharding.placement import place_params, plan_placement
 from repro.sharding.tier_mesh import (TierMeshPlan, batch_sharding,
                                       plan_tier_meshes, shard_params)
@@ -159,6 +161,15 @@ def _run_matrix(seed: int, n: int = 16, n_tiers: int = 3,
                                         with_cache).serve_stream(
                              toks, arrivals, parallel=True),
                          tag + "/sched")
+        # speculative scheduler leg: idle tiers pre-invoke rows still
+        # decoding upstream; commit/cancel must leave everything
+        # bit-identical — speculation only moves wall-clock
+        _assert_same(ref, _pipeline(mp, "host", placement,
+                                    with_cache).serve_stream(
+                         toks, arrivals, parallel=True,
+                         slo=SLOConfig(speculate=True, spec_depth=2,
+                                       spec_idle_frac=None)),
+                     f"seed={seed} {pname}/speculate")
     return ref
 
 
@@ -399,6 +410,157 @@ def test_scheduler_reports_tier_devices():
     assert len(devs) == 2 and all(d is not None for d in devs)
     res = _pipeline(mp, "host", None, False).serve_stream(_tokens(0, 8))
     assert res.ingress["tier_devices"] == [None, None]
+
+
+# ---------------------------------------------------------------------------
+# speculative execution: commit/cancel edge cases (ISSUE 7). The matrix
+# legs above prove bit-identity when speculation engages incidentally;
+# these tiers are slow enough (time.sleep in invoke) that downstream
+# workers reliably catch rows mid-decode, so each edge case is exercised
+# deterministically rather than by racing the toy tiers.
+# ---------------------------------------------------------------------------
+
+
+def _slow_pipeline(scorer, delay: float = 0.08, n_tiers: int = 3,
+                   fail: tuple[int, int] | None = None,
+                   strategy=None, batch_size: int = 8) -> ServingPipeline:
+    """Tiers that sleep inside invoke (slow 'decode'); ``fail=(j, k)``
+    makes tier j's k-th invoke raise — the mid-decode shutdown case."""
+    calls: dict[int, int] = {}
+    tiers = []
+    for j in range(n_tiers):
+        def fn(t, j=j):
+            calls[j] = calls.get(j, 0) + 1
+            if fail is not None and fail == (j, calls[j]):
+                raise RuntimeError("tier exploded mid-stream")
+            time.sleep(delay)
+            return t[:, 0].astype(np.int64) * 10 + j
+        tiers.append(TierSpec(
+            f"t{j}", fn, ApiCost(10.0 * 3 ** j, 10.0 * 3 ** j, 0.0),
+            prompt=PromptSpec(tuple(range(j + 1)), 100, 40)))
+
+    def embed(tokens):
+        e = np.zeros((len(tokens), 8), np.float32)
+        e[:, 0] = tokens[:, 0].astype(np.float32)
+        return e
+
+    return ServingPipeline(
+        tiers=tiers, thresholds=[0.5] * (n_tiers - 1), scorer=scorer,
+        strategy=strategy, embed=embed if strategy is not None else None,
+        full_prompt_tokens=840, pad_token=-1, batch_size=batch_size)
+
+
+def _spec_slo(**kw) -> SLOConfig:
+    return SLOConfig(max_holdback_s=0.005, speculate=True, spec_depth=2,
+                     spec_idle_frac=None, **kw)
+
+
+def test_speculation_all_reject_commits():
+    """Every row escalates to the last tier, so every speculative
+    pre-invoke is eventually consumed: committed == issued > 0, nothing
+    cancelled — and the stream is bit-identical to the non-speculative
+    one (cost charged only on commit, through the same tier_step)."""
+    def scorer(t, a):
+        return np.zeros(len(t))
+
+    toks = _tokens(11, 8)
+    ref = _slow_pipeline(scorer).serve_stream(toks, parallel=True)
+    res = _slow_pipeline(scorer).serve_stream(toks, parallel=True,
+                                              slo=_spec_slo())
+    _assert_same(ref, res, "all-reject")
+    spec = res.ingress["speculation"]
+    assert spec["issued"] > 0
+    assert spec["committed"] == spec["issued"]
+    assert spec["cancelled"] == 0
+    assert spec["wasted_s"] == 0.0
+    for key in ("spec_busy_s", "spec_chunks", "overlap_frac"):
+        assert len(spec[key]) == 3, spec
+    assert all(f == 0.0 for f in spec["overlap_frac"][:1])  # tier 0 never
+    assert any(f > 0.0 for f in spec["overlap_frac"][1:])   # speculates
+    # the summary surfaces the commit/cancel telemetry
+    assert "speculation:" in res.summary()
+    # the non-speculative stream reports no speculation block at all
+    assert ref.ingress["speculation"] is None
+
+
+def test_speculation_all_accept_cancels():
+    """Every row is accepted at tier 0, so every speculative pre-invoke
+    is wasted: committed == 0, cancelled == issued, wasted seconds
+    accounted — and the stream is still bit-identical (cancelled work
+    never charges cost or leaks answers)."""
+    def scorer(t, a):
+        return np.ones(len(t))
+
+    toks = _tokens(12, 8)
+    ref = _slow_pipeline(scorer).serve_stream(toks, parallel=True)
+    res = _slow_pipeline(scorer).serve_stream(toks, parallel=True,
+                                              slo=_spec_slo())
+    _assert_same(ref, res, "all-accept")
+    spec = res.ingress["speculation"]
+    assert spec["issued"] > 0
+    assert spec["committed"] == 0
+    assert spec["cancelled"] == spec["issued"]
+    assert spec["wasted_s"] > 0.0
+    assert (res.stopped_at == 0).all()
+
+
+def test_speculation_mid_decode_shutdown():
+    """A tier crashing while downstream speculations are in flight must
+    tear the scheduler down promptly (error surfaced, threads joined) —
+    parked speculative state must not wedge shutdown."""
+    def scorer(t, a):
+        return np.zeros(len(t))
+
+    toks = _tokens(13, 16)
+    pipe = _slow_pipeline(scorer, fail=(0, 2))  # 2nd tier-0 chunk raises
+    with pytest.raises(RuntimeError, match="exploded"):
+        pipe.serve_stream(toks, max_chunk=8, parallel=True,
+                          slo=_spec_slo())
+
+
+def test_speculation_router_floor_and_cold_fallback():
+    """With no router the candidate filter falls back to every decoding
+    row (cold start must not disable speculation); with a router that
+    predicts accept everywhere, the ``spec_bar`` probability floor
+    suppresses all speculative work. Both streams stay bit-identical."""
+    class _ConfidentRouter:
+        # duck-typed ServingStrategy: predicts accept-at-entry for every
+        # row, so no row ever qualifies under the probability floor
+        governor = None
+        router = object()            # scheduler only checks `is not None`
+
+        def route(self, emb):
+            n = len(emb)
+            return np.zeros(n, np.int64), np.ones((n, 3), np.float64)
+
+        def thresholds(self, base):
+            return base
+
+        def degrade_entry(self, probs, m):
+            return 0
+
+        def observe_request(self, cost, **kw):
+            pass
+
+        def snapshot(self, m):
+            return None
+
+    def scorer(t, a):
+        return np.zeros(len(t))
+
+    toks = _tokens(14, 8)
+    ref = _slow_pipeline(scorer).serve_stream(toks, parallel=True)
+    # cold: probs is None -> speculation_candidate fallback admits rows
+    cold = _slow_pipeline(scorer).serve_stream(toks, parallel=True,
+                                               slo=_spec_slo())
+    _assert_same(ref, cold, "cold-router")
+    assert cold.ingress["speculation"]["committed"] > 0
+    # routed, all predicted-accept: the floor keeps workers from
+    # speculating at all — same answers, zero speculative traffic
+    routed = _slow_pipeline(scorer, strategy=_ConfidentRouter())
+    res = routed.serve_stream(toks, parallel=True, slo=_spec_slo())
+    _assert_same(ref, res, "confident-router")
+    assert res.ingress["speculation"]["issued"] == 0
 
 
 # ---------------------------------------------------------------------------

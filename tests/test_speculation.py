@@ -1,0 +1,258 @@
+"""Speculative cascade execution (ISSUE 7): the split engine entry
+points, the pool's speculative-future tracking, the speculation policy
+units, and the scheduler end to end.
+
+The contract:
+
+  * ``generate`` IS ``decode_from(prefill_async(...))`` — the split is
+    bit-identical by construction, greedy or sampled;
+  * a ``PrefillFuture`` resolves exactly once: commit (KV handoff into
+    the decode loop) or cancel (device references dropped, never
+    charged) — double resolution raises;
+  * ``EnginePool.speculate/commit/cancel/cancel_all`` track in-flight
+    futures per (tier, placement) engine and count issue/commit/cancel;
+  * the policy layer gates candidates on the router's per-tier accept
+    probabilities (cold fallback: everything qualifies) and the idle
+    budget *leading* (predicted service counts before issue);
+  * a speculative stream is bit-identical to the non-speculative one —
+    answers, charged cost, stopped_at, tier_counts — with the
+    commit/cancel split surfaced in telemetry. (The full placement x
+    compaction matrix and the cancellation edge cases live in
+    tests/test_placement.py.)
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.core.cost import ApiCost
+from repro.core.prompt import PromptSpec
+from repro.models import transformer as T
+from repro.serving.engine import EnginePool, GenerationEngine
+from repro.serving.pipeline import ServingPipeline, TierSpec
+from repro.serving.sched import SLOConfig, may_speculate, speculation_candidate
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = ARCHS["gemma3-1b"].reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _toks(b=3, s=5, seed=1):
+    return (np.random.default_rng(seed)
+            .integers(1, 200, size=(b, s)).astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# the split engine entry points
+# ---------------------------------------------------------------------------
+
+
+def test_split_matches_generate_greedy(small_model):
+    cfg, params = small_model
+    eng = GenerationEngine(cfg, params)
+    toks = _toks()
+    ref = eng.generate(toks, n_new=4)
+    fut = eng.prefill_async(toks, n_new=4)
+    assert fut.live and fut.b == 3 and fut.n_new == 4
+    out = eng.decode_from(fut)
+    assert np.array_equal(out, ref)
+    assert fut.consumed and not fut.live
+
+
+def test_split_matches_generate_sampled(small_model):
+    """Temperature sampling threads the PRNG state through the future —
+    same seed, same tokens on both halves of the split."""
+    cfg, params = small_model
+    eng = GenerationEngine(cfg, params, temperature=0.8)
+    toks = _toks(seed=2)
+    ref = eng.generate(toks, n_new=4, seed=9)
+    out = eng.decode_from(eng.prefill_async(toks, n_new=4, seed=9))
+    assert np.array_equal(out, ref)
+    # a different seed genuinely diverges (the sampling path is live)
+    other = eng.decode_from(eng.prefill_async(toks, n_new=4, seed=10))
+    assert not np.array_equal(out, other)
+
+
+def test_future_resolves_exactly_once(small_model):
+    cfg, params = small_model
+    eng = GenerationEngine(cfg, params)
+    toks = _toks()
+    # cancel retires the device references; decode after cancel raises
+    fut = eng.prefill_async(toks, n_new=2)
+    fut.cancel()
+    assert fut.cancelled and not fut.live
+    assert fut._cache is None and fut._tok is None
+    with pytest.raises(RuntimeError, match="cancelled"):
+        eng.decode_from(fut)
+    fut.cancel()                              # idempotent
+    # double consume raises
+    fut2 = eng.prefill_async(toks, n_new=2)
+    eng.decode_from(fut2)
+    with pytest.raises(RuntimeError, match="consumed"):
+        eng.decode_from(fut2)
+    fut2.cancel()                             # no-op after consume
+    assert not fut2.cancelled
+    # a future only commits on the engine that issued it
+    fut3 = eng.prefill_async(toks, n_new=2)
+    with pytest.raises(ValueError, match="different engine"):
+        GenerationEngine(cfg, params).decode_from(fut3)
+    fut3.cancel()
+
+
+def test_future_empty_decode(small_model):
+    cfg, params = small_model
+    eng = GenerationEngine(cfg, params)
+    out = eng.decode_from(eng.prefill_async(_toks(), n_new=0))
+    assert out.shape == (3, 0) and out.dtype == np.int32
+
+
+# ---------------------------------------------------------------------------
+# pool tracking
+# ---------------------------------------------------------------------------
+
+
+def test_pool_speculate_commit_cancel(small_model):
+    cfg, params = small_model
+    pool = EnginePool()
+    toks = _toks()
+    ref = pool.get(cfg, params).generate(toks, n_new=3)
+    f1 = pool.speculate(cfg, params, toks, n_new=3)
+    f2 = pool.speculate(cfg, params, toks, n_new=3)
+    assert pool.inflight() == 2
+    assert np.array_equal(pool.commit(f1), ref)   # commit == generate
+    assert pool.inflight() == 1                   # commit untracks
+    pool.cancel(f2)
+    assert pool.inflight() == 0
+    pool.cancel(f2)                               # idempotent, not counted
+    assert pool.spec_stats == {"issued": 2, "committed": 1, "cancelled": 1}
+    with pytest.raises(RuntimeError, match="retired"):
+        pool.commit(f2)
+
+
+def test_pool_cancel_all_scopes_by_engine(small_model):
+    cfg, params = small_model
+    pool = EnginePool()
+    dev = jax.local_devices()[0]
+    toks = _toks()
+    f_shared = pool.speculate(cfg, params, toks, n_new=2)
+    f_pinned = pool.speculate(cfg, params, toks, n_new=2, device=dev)
+    assert pool.inflight() == 2
+    # scoped cancel: only the pinned engine's speculation retires
+    assert pool.cancel_all(cfg, params, device=dev) == 1
+    assert f_pinned.cancelled and f_shared.live
+    assert pool.inflight() == 1
+    # blanket cancel sweeps the rest
+    assert pool.cancel_all() == 1
+    assert not f_shared.live and pool.inflight() == 0
+    assert pool.spec_stats["cancelled"] == 2
+
+
+# ---------------------------------------------------------------------------
+# policy units
+# ---------------------------------------------------------------------------
+
+
+def test_speculation_candidate_rules():
+    # cold router: everything qualifies
+    assert speculation_candidate(None, 0, 2, 0.5)
+    probs = np.array([0.1, 0.2, 0.9])
+    # every intermediate tier predicted to reject -> qualify
+    assert speculation_candidate(probs, 0, 2, 0.5)
+    # a predicted accept anywhere in [cur, target) kills the candidate
+    assert not speculation_candidate(probs, 1, 3, 0.5)
+    assert not speculation_candidate(probs, 0, 3, 0.5)
+    # the bar is strict: prob == bar counts as predicted accept
+    assert not speculation_candidate(np.array([0.5]), 0, 1, 0.5)
+
+
+def test_may_speculate_budget_gate():
+    off = SLOConfig()
+    assert not may_speculate(off, 0.0, 10.0)          # opt-in only
+    unlimited = SLOConfig(speculate=True, spec_idle_frac=None)
+    assert may_speculate(unlimited, 1e9, 1.0)
+    slo = SLOConfig(speculate=True, spec_idle_frac=0.5)
+    assert may_speculate(slo, 0.4, 1.0)               # under budget
+    assert not may_speculate(slo, 0.6, 1.0)           # over budget
+    # the gate is *leading*: predicted service counts before issue
+    assert not may_speculate(slo, 0.4, 1.0, predicted_s=0.2)
+    assert may_speculate(slo, 0.4, 1.0, predicted_s=0.05)
+
+
+def test_slo_speculation_validation():
+    with pytest.raises(ValueError, match="spec_depth"):
+        SLOConfig(spec_depth=0)
+    with pytest.raises(ValueError, match="spec_bar"):
+        SLOConfig(spec_bar=1.5)
+    with pytest.raises(ValueError, match="spec_idle_frac"):
+        SLOConfig(spec_idle_frac=0.0)
+    SLOConfig(speculate=True, spec_depth=3, spec_bar=0.0,
+              spec_idle_frac=None)                    # all valid knobs
+
+
+# ---------------------------------------------------------------------------
+# scheduler end to end: mixed accept/escalate traffic — some
+# speculations commit, some cancel, everything bit-identical
+# ---------------------------------------------------------------------------
+
+
+def _mixed_pipeline(delay=0.08):
+    """3 tiers, slow invokes; rows with even leading token accept at
+    tier 0, multiples of 3 at tier 1, the rest escalate to the top."""
+    tiers = [TierSpec(f"t{j}",
+                      (lambda t, j=j: (time.sleep(delay),
+                                       t[:, 0].astype(np.int64) * 10 + j)[1]),
+                      ApiCost(10.0 * 3 ** j, 10.0 * 3 ** j, 0.0),
+                      prompt=PromptSpec(tuple(range(j + 1)), 100, 40))
+             for j in range(3)]
+
+    def scorer(t, a):
+        lead = t[:, 0]
+        return np.where(lead % 2 == 0, 0.9,
+                        np.where(lead % 3 == 0, 0.6, 0.1))
+
+    return ServingPipeline(tiers=tiers, thresholds=[0.8, 0.5],
+                           scorer=scorer, full_prompt_tokens=840,
+                           pad_token=-1, batch_size=8)
+
+
+def test_scheduler_speculation_bit_identical_mixed():
+    toks = np.zeros((12, 4), np.int32)
+    toks[:, 0] = np.arange(12)
+    slo = SLOConfig(max_holdback_s=0.005, speculate=True, spec_depth=2,
+                    spec_idle_frac=None)
+    ref = _mixed_pipeline().serve_stream(toks, parallel=True)
+    res = _mixed_pipeline().serve_stream(toks, parallel=True, slo=slo)
+    assert np.array_equal(ref.answers, res.answers)
+    assert (ref.cost == res.cost).all()               # charged cost exact
+    assert np.array_equal(ref.stopped_at, res.stopped_at)
+    assert ref.tier_counts == res.tier_counts
+    spec = res.ingress["speculation"]
+    # mixed traffic: escalating rows commit, accepted rows cancel
+    assert spec["committed"] > 0 and spec["cancelled"] > 0
+    assert spec["issued"] == spec["committed"] + spec["cancelled"]
+    assert spec["wasted_s"] > 0.0
+    assert "speculation:" in res.summary()
+
+
+def test_scheduler_speculation_respects_idle_budget():
+    """A tiny idle budget throttles speculative issue without breaking
+    bit-identity: the gate only decides whether to burn idle cycles."""
+    toks = np.zeros((12, 4), np.int32)
+    toks[:, 0] = np.arange(12)
+    slo = SLOConfig(max_holdback_s=0.005, speculate=True, spec_depth=2,
+                    spec_idle_frac=1e-6, init_service_s=0.05)
+    ref = _mixed_pipeline().serve_stream(toks, parallel=True)
+    res = _mixed_pipeline().serve_stream(toks, parallel=True, slo=slo)
+    assert np.array_equal(ref.answers, res.answers)
+    assert (ref.cost == res.cost).all()
+    spec = res.ingress["speculation"]
+    # the gate is *leading*: the cold-start service guess alone blows
+    # the near-zero budget, so not even a first probe is issued — no
+    # wasted device-seconds ever accrue
+    assert spec["issued"] == 0
+    assert spec["wasted_s"] == 0.0

@@ -348,6 +348,92 @@ def test_pipeline_cache_floor_follows_governor():
     assert pipe.cache.min_score < 0.9
 
 
+def test_governor_chunk_and_holdback_dials():
+    """The multiplier dials (base x (1 + shift)): overspend grows chunks
+    and holdback (fuller pow2 buckets, better $ amortization), spare
+    budget shrinks them (lower latency). The base lives with the caller,
+    like thresholds(base)."""
+    gov = BudgetGovernor(1.0, (0.5,), window=8)
+    assert gov.max_chunk(32) == 32             # zero shift: identity
+    assert gov.holdback_s(0.02) == pytest.approx(0.02)
+    for _ in range(16):
+        gov.observe(3.0)                       # 3x over budget
+    assert gov.shift > 0
+    assert gov.max_chunk(32) == int(round(32 * (1 + gov.shift))) > 32
+    assert gov.holdback_s(0.02) == pytest.approx(0.02 * (1 + gov.shift))
+    snap = gov.snapshot()
+    assert snap["chunk_scale"] == pytest.approx(1 + gov.shift)
+    assert snap["holdback_scale"] == pytest.approx(1 + gov.shift)
+    for _ in range(200):
+        gov.observe(0.01)                      # deep under budget
+    assert gov.shift < 0
+    assert gov.max_chunk(32) < 32
+    assert gov.holdback_s(0.02) < 0.02
+    assert gov.max_chunk(1) >= 1               # never starves the chunk
+    assert gov.holdback_s(0.0) == 0.0
+
+
+def test_governor_cache_threshold_dial():
+    """The similarity-threshold dial is slack-scaled: the shift moves
+    the threshold by shift x (1 - base), so a 0.99-tight base moves by
+    basis points while a loose base moves proportionally more."""
+    assert BudgetGovernor(1.0, (0.5,), window=8).cache_threshold() is None
+    gov = BudgetGovernor(1.0, (0.5,), base_threshold=0.99, window=8)
+    assert gov.cache_threshold() == pytest.approx(0.99)
+    for _ in range(16):
+        gov.observe(3.0)                       # over budget: loosen
+    assert gov.shift > 0
+    want = 0.99 - gov.shift * (1 - 0.99)
+    assert gov.cache_threshold() == pytest.approx(want)
+    assert 0.98 < gov.cache_threshold() < 0.99     # basis points, not raw
+    assert gov.snapshot()["cache_threshold"] == \
+        pytest.approx(gov.cache_threshold())
+    for _ in range(200):
+        gov.observe(0.01)                      # spare budget: tighten
+    assert gov.shift < 0
+    assert 0.99 < gov.cache_threshold() <= 1.0
+
+
+def test_pipeline_cache_threshold_follows_governor():
+    """Builder wiring, end to end at the pipeline layer: a governor that
+    owns the similarity threshold drives the live CompletionCache
+    threshold on every lookup — overspend admits near-duplicates as free
+    hits."""
+    gov = BudgetGovernor(1e-9, (0.5,), base_threshold=0.99, window=8)
+    pipe = _routed_pipeline(governor=gov)
+    pipe.cache = CompletionCache(capacity=256, threshold=0.99)
+    pipe.embed = lambda t: (_feature_embed(t)
+                            / np.linalg.norm(_feature_embed(t), axis=1,
+                                             keepdims=True))
+    pipe.serve(_feature_tokens(64, seed=8))
+    assert gov.shift > 0   # impossible target: permanently over budget
+    pipe.serve(_feature_tokens(64, seed=9))
+    # the live similarity threshold is the governor's dial, not 0.99
+    assert pipe.cache.threshold == pytest.approx(gov.cache_threshold())
+    assert pipe.cache.threshold < 0.99
+
+
+def test_scheduler_chunk_and_holdback_follow_governor():
+    """The parallel scheduler reads its chunk cap and holdback window
+    through the governor on every pop, so a mid-stream shift re-tunes
+    batching without a rebuild."""
+    gov = BudgetGovernor(1.0, (0.5,), window=8)
+    pipe = _routed_pipeline(governor=gov)
+    slo = SLOConfig(max_holdback_s=0.02)
+    sched = TierScheduler(pipe, max_chunk=16, slo=slo)
+    assert sched._effective_chunk() == 16
+    assert sched._effective_holdback() == pytest.approx(0.02)
+    for _ in range(16):
+        gov.observe(3.0)                       # push the dial mid-stream
+    assert sched._effective_chunk() == gov.max_chunk(16) > 16
+    assert sched._effective_holdback() == \
+        pytest.approx(gov.holdback_s(0.02))
+    # without a governor the scheduler runs on its static knobs
+    plain = TierScheduler(_routed_pipeline(), max_chunk=16, slo=slo)
+    assert plain._effective_chunk() == 16
+    assert plain._effective_holdback() is None   # None = SLO unchanged
+
+
 def test_scheduler_matches_serve_with_router():
     router = _toy_router()
     toks = _feature_tokens(48, seed=5)

@@ -120,6 +120,40 @@ def test_sharded_engine_bit_identical_and_compile_o1_in_depth():
     assert stats[0]["prefill_compiles"] == 1
 
 
+def test_mesh_decode_out_shardings_pinned():
+    """Mesh engines pin the decode pjit's in/out shardings to the
+    prefill's committed layout (tokens over "data", KV cache per
+    ``sharding.rules``), recorded per (batch, cache-length) bucket in
+    ``decode_shardings`` — so the KV layout cannot drift across decode
+    steps or the prefill->decode handoff. The split entry points
+    (``prefill_async`` + ``decode_from``) are the halves of ``generate``
+    and stay bit-identical on the mesh."""
+    cfg = _cfg(2, prefix=1, suffix=1)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = _tokens()
+    plain = GenerationEngine(cfg, params)
+    ref = plain.generate(toks, n_new=4)
+    assert plain.decode_shardings == {}    # single device: shared jit,
+    mesh = tier_mesh.plan_tier_meshes(1).for_tier(0)  # nothing pinned
+    eng = GenerationEngine(cfg, params, mesh=mesh)
+    assert eng.decode_shardings == {}      # nothing decoded yet
+    out = eng.decode_from(eng.prefill_async(toks, n_new=4))
+    assert np.array_equal(out, ref)        # split call == one-shot call
+    assert len(eng.decode_shardings) == 1
+    ((b_b, max_len), (tok_sh, cache_sh)), = eng.decode_shardings.items()
+    assert b_b >= len(toks)                # pow2 batch bucket covers B
+    assert tok_sh == tier_mesh.batch_sharding(mesh, b_b)
+    for sh in jax.tree_util.tree_leaves(
+            cache_sh, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding)):
+        assert isinstance(sh, jax.sharding.NamedSharding)
+        assert sh.mesh.devices.size == mesh.devices.size
+    # the pinned pjit variant exists for exactly the recorded buckets
+    assert set(eng._decode_fns) == set(eng.decode_shardings)
+    # one-shot generate reuses the same pinned bucket (no new entries)
+    assert np.array_equal(eng.generate(toks, n_new=4), ref)
+    assert len(eng.decode_shardings) == 1
+
+
 def test_engine_rejects_device_and_mesh_together():
     cfg = _cfg(2)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
@@ -198,6 +232,17 @@ out = eng.generate(toks, n_new=4)
 assert np.array_equal(ref_out, out)
 # and the padded batch genuinely lives split over the two devices
 assert eng.params["embed"]["tok"].sharding.mesh.devices.size == 2
+# 4. the decode pjit is pinned to the 2-device layout (tokens over
+# "data", cache per sharding.rules) and the split prefill/decode
+# entry points hand the sharded KV cache off bit-identically
+assert len(eng.decode_shardings) == 1
+(tok_sh, cache_sh), = eng.decode_shardings.values()
+assert tok_sh.mesh.devices.size == 2
+for sh in jax.tree_util.tree_leaves(
+        cache_sh, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding)):
+    assert sh.mesh.devices.size == 2
+out_split = eng.decode_from(eng.prefill_async(toks, n_new=4))
+assert np.array_equal(ref_out, out_split)
 print("TIER-MESH-8DEV-OK")
 """
     here = os.path.dirname(__file__)
