@@ -205,7 +205,8 @@ COMPACT_MODES = ("host", "device", "pallas")
 def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
                     scorer: Callable, queries, *,
                     batch_size: int = 256, entry=None,
-                    compact: str = "host") -> dict:
+                    compact: str = "host", retry=None, breaker=None,
+                    clock=None, sleep=None) -> dict:
     """THE cascade executor: tier-by-tier compaction over ``queries``.
 
     queries: (n, ...) array — rows are whatever the tier backend consumes
@@ -228,6 +229,20 @@ def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
     host round-trip at all; ``"pallas"`` uses the Pallas kernel variant
     of the same step. All three are bit-identical in every output
     (tests/test_placement.py).
+
+    ``retry`` / ``breaker`` (optional, ``repro.serving.resilience``)
+    opt the executor into fault tolerance: a ``RetryPolicy`` re-invokes
+    chunks that raise ``TierFault`` (bounded attempts, deterministic
+    backoff), a ``BreakerConfig`` — or a live ``TierHealth`` shared
+    across calls — tracks per-tier availability and skips tiers whose
+    circuit is open. Rows whose chunk still fails escalate
+    forward with zero charged cost (failover); a row failing at the
+    *last* tier resolves to its best-scoring earlier rejected answer
+    (``stopped_at`` = that tier) or, with none, an accounted shed
+    (``stopped_at = -2``). The result then gains a ``"resilience"``
+    counters dict. ``clock``/``sleep`` are injectable for tests; both
+    ``None`` (the default, with no retry/breaker) keeps every code path
+    structurally identical to the pre-resilience executor.
 
     All tier and scorer calls are chunked to ``batch_size``. Returns
     dict(answers, cost, stopped_at (cascade position, -1 = unanswered),
@@ -257,6 +272,51 @@ def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
     scores = np.full(n, np.nan)
     pending = (np.arange(n) if entry is None
                else np.flatnonzero(entry == 0))
+    # fault tolerance is strictly opt-in: without a retry policy or a
+    # breaker config every TierFault propagates (a fault-injected run is
+    # *supposed* to crash when nobody asked for resilience) and none of
+    # the machinery below is even imported
+    resilient = retry is not None or breaker is not None
+    health = rmeta = None
+    if resilient:
+        import time as _time
+
+        from repro.serving.resilience import (TierFault, TierHealth,
+                                              invoke_with_retry)
+        if clock is None:
+            _t0 = _time.perf_counter()
+            clock = lambda: _time.perf_counter() - _t0  # noqa: E731
+        if sleep is None:
+            sleep = _time.sleep
+        # breaker may be a BreakerConfig (fresh breakers for this call)
+        # or a live TierHealth shared across calls — a repeatedly-invoked
+        # executor then *starts* a pass with tiers already tripped open
+        # and skips them outright
+        health = None
+        if breaker is not None:
+            health = (breaker if isinstance(breaker, TierHealth)
+                      else TierHealth(m, breaker))
+            if len(health.breakers) != m:
+                raise ValueError(f"TierHealth tracks "
+                                 f"{len(health.breakers)} tiers, cascade "
+                                 f"has {m}")
+        # best-scoring rejected answer per row: the failover fallback
+        # when the last tier fails the row
+        best_ans = np.empty(n, object)
+        best_score = np.full(n, -np.inf)
+        best_tier = np.full(n, -1, np.int32)
+        rmeta = {"retries": 0, "backoff_s": 0.0, "failovers": 0,
+                 "fallback_answers": 0, "shed": 0}
+
+        def _resolve_failed(g: int):
+            if best_tier[g] >= 0:
+                answers[g] = best_ans[g]
+                scores[g] = best_score[g]
+                stopped_at[g] = best_tier[g]
+                rmeta["fallback_answers"] += 1
+            else:
+                stopped_at[g] = -2
+                rmeta["shed"] += 1
     # on-device compaction: the pending indices (and, for numeric
     # queries, the query matrix) live on device between tiers; the host
     # mirror is refreshed from the device array so bookkeeping (cost
@@ -287,21 +347,77 @@ def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
             if on_device:
                 pending_dev = jnp.asarray(pending, jnp.int32)
         tier_counts.append(len(pending))
+        last = j == m - 1
         if len(pending) == 0:
             accepted_counts.append(0)
+            continue
+        if health is not None and not health.available(j, clock()):
+            # circuit open: the whole pending set skips this tier
+            # (forward-only escalation). At the last tier there is no
+            # forward — every row resolves via its fallback or sheds.
+            accepted_counts.append(0)
+            rmeta["failovers"] += len(pending)
+            if last:
+                for g in pending:
+                    _resolve_failed(g)
+                pending = pending[:0]
             continue
         qs = (np.asarray(jnp.take(dev_queries, pending_dev, axis=0))
               if dev_queries is not None else queries[pending])
         b = len(pending)
         ans_chunks, cost_chunks, score_chunks, accept_chunks = [], [], [], []
         dev_masks: list = []
-        last = j == m - 1
+        eff_tier, failed = tier, None
+        if resilient:
+            failed = np.zeros(b, bool)
+            if retry is not None:
+                def _call(ch, _t=tier, _j=j):
+                    fails = [0]
+
+                    def _fail(_attempt, _exc):
+                        fails[0] += 1
+
+                    try:
+                        a_, c_, attempts, waited = invoke_with_retry(
+                            _t, ch, retry, clock=clock, sleep=sleep,
+                            token=_j, on_attempt_fail=_fail)
+                    except TierFault:
+                        rmeta["retries"] += max(0, fails[0] - 1)
+                        raise
+                    rmeta["retries"] += attempts - 1
+                    rmeta["backoff_s"] += waited
+                    return a_, c_
+
+                eff_tier = CascadeTier(tier.name, _call)
         for i in range(0, b, batch_size):
             chunk = qs[i:i + batch_size]
-            a, c, s, acc = tier_step(
-                tier, chunk, j, scorer=scorer,
-                threshold=None if last else thresholds[j], last=last,
-                device_masks=dev_masks if on_device else None)
+            if resilient:
+                try:
+                    a, c, s, acc = tier_step(
+                        eff_tier, chunk, j, scorer=scorer,
+                        threshold=None if last else thresholds[j],
+                        last=last,
+                        device_masks=dev_masks if on_device else None)
+                except TierFault:
+                    # retries exhausted (or no retry policy): the chunk
+                    # fails forward — zero charged cost, no score, no
+                    # accept; the rows stay pending for the next tier
+                    nl = len(chunk)
+                    failed[i:i + nl] = True
+                    a = np.empty(nl, object)
+                    c = np.zeros(nl, np.float64)
+                    s = np.full(nl, np.nan)
+                    acc = np.zeros(nl, bool)
+                    if health is not None:
+                        health.record(j, False, clock())
+                else:
+                    if health is not None:
+                        health.record(j, True, clock())
+            else:
+                a, c, s, acc = tier_step(
+                    tier, chunk, j, scorer=scorer,
+                    threshold=None if last else thresholds[j], last=last,
+                    device_masks=dev_masks if on_device else None)
             ans_chunks.append(a)
             cost_chunks.append(c)
             score_chunks.append(s)
@@ -318,6 +434,22 @@ def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
             answers[done] = ans[accept]
         stopped_at[done] = j
         accepted_counts.append(int(accept.sum()))
+        if resilient:
+            n_failed = int(failed.sum())
+            rmeta["failovers"] += n_failed
+            if not last:
+                # remember each rejected row's best-scoring answer — the
+                # failover fallback if every remaining tier fails it too
+                sc = np.concatenate(score_chunks)
+                for i_local in np.flatnonzero(~accept & ~failed):
+                    g = pending[i_local]
+                    if sc[i_local] > best_score[g]:
+                        best_score[g] = sc[i_local]
+                        best_ans[g] = ans[i_local]
+                        best_tier[g] = j
+            elif n_failed:
+                for g in pending[failed]:
+                    _resolve_failed(g)
         if on_device:
             if len(dev_masks) == len(accept_chunks):
                 # every chunk's accept mask was fused on device
@@ -341,7 +473,7 @@ def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
         answers_arr = dense if dense.ndim == 1 else answers
     except ValueError:                       # heterogeneous answer objects
         answers_arr = answers
-    return {
+    out = {
         "answers": answers_arr,
         "cost": cost,
         "stopped_at": stopped_at,
@@ -349,6 +481,13 @@ def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
         "tier_counts": tier_counts,
         "accepted_counts": accepted_counts,
     }
+    if resilient:
+        if health is not None:
+            rmeta["trips"] = health.trips
+            rmeta["recoveries"] = health.recoveries
+            rmeta["breakers"] = health.snapshot(clock())
+        out["resilience"] = rmeta
+    return out
 
 
 def replay_tiers(data: MarketData, apis: Sequence[int]) -> list[CascadeTier]:

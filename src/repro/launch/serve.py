@@ -51,6 +51,35 @@ def _parse_mesh(spec: str | None) -> tuple[int, int] | None:
     return int(parts[0]), int(parts[1])
 
 
+def _parse_faults(spec: str, n_tiers: int):
+    """--faults grammar: one FaultSpec broadcast to every tier, or
+    pipe-separated ``J:SPEC`` entries targeting tier J (mixing the two
+    forms is an error). The per-entry grammar is ``FaultSpec.parse``'s.
+    A window value like ``outage=0.1:0.5`` also contains a colon, so a
+    tier prefix only counts when the head is a bare integer."""
+    from repro.serving.resilience import FaultSpec
+    entries = [e.strip() for e in spec.split("|") if e.strip()]
+    per_tier: list = [None] * n_tiers
+    broadcast = None
+    for e in entries:
+        head, sep, rest = e.partition(":")
+        if sep and "=" not in head and head.strip().isdigit():
+            j = int(head)
+            if not 0 <= j < n_tiers:
+                raise ValueError(f"tier {j} out of range for "
+                                 f"{n_tiers} tiers")
+            per_tier[j] = FaultSpec.parse(rest)
+        else:
+            if broadcast is not None:
+                raise ValueError("multiple broadcast entries; use "
+                                 "'J:SPEC' to target tiers")
+            broadcast = FaultSpec.parse(e)
+    if broadcast is not None and any(s is not None for s in per_tier):
+        raise ValueError("mix of broadcast and per-tier 'J:SPEC' "
+                         "entries; pick one form")
+    return broadcast if broadcast is not None else per_tier
+
+
 _n = _preparse(sys.argv, "--devices")
 _mesh = _parse_mesh(_preparse(sys.argv, "--mesh"))
 if _mesh is not None and (_n is None or not _n.isdigit()
@@ -149,6 +178,33 @@ def main():
     ap.add_argument("--spec-idle-frac", type=float, default=0.5,
                     help="speculation: cap on wasted device-seconds as a "
                          "fraction of elapsed stream time")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="inject a deterministic seeded fault schedule "
+                         "into the tiers. SPEC is comma-separated "
+                         "key=value pairs (error=RATE, timeout=RATE, "
+                         "spike=RATE@SECS, rlim=START:END, "
+                         "outage=START:END, max=N, seed=N) broadcast to "
+                         "every tier, or pipe-separated 'J:SPEC' entries "
+                         "targeting tier J in --tiers order (the learned "
+                         "cascade may keep a subset; specs for dropped "
+                         "tiers are dropped with it), e.g. "
+                         "'1:error=0.2|2:outage=0.1:0.5'. Without "
+                         "--retry/--breaker an injected fault is fatal "
+                         "(the no-resilience baseline)")
+    ap.add_argument("--retry", type=int, default=None, metavar="N",
+                    help="retry TierFault invokes up to N attempts per "
+                         "tier call (exponential backoff, deterministic "
+                         "jitter, deadline-aware)")
+    ap.add_argument("--retry-backoff-ms", type=float, default=20.0,
+                    help="base backoff before the first retry")
+    ap.add_argument("--breaker", action="store_true",
+                    help="per-tier circuit breakers: a tier whose "
+                         "recent invokes keep failing trips open and "
+                         "pending rows fail over past it until a "
+                         "half-open probe succeeds")
+    ap.add_argument("--breaker-cooldown-ms", type=float, default=500.0,
+                    help="seconds(ms) an open breaker waits before its "
+                         "half-open probe")
     ap.add_argument("--on-device-compact", nargs="?", const="device",
                     choices=["device", "pallas"], default=None,
                     help="keep the cascade's pending-set compaction on "
@@ -192,6 +248,27 @@ def main():
     if args.speculate and (not args.stream or args.serial):
         ap.error("--speculate needs the parallel stream scheduler's idle "
                  "tier workers; add --stream and drop --serial")
+    if args.serial and (args.retry is not None or args.breaker
+                        or args.faults is not None):
+        ap.error("--faults/--retry/--breaker run on the batch executor "
+                 "or the parallel stream scheduler; drop --serial")
+    if args.retry is not None and args.retry < 1:
+        ap.error("--retry must be >= 1 (total attempts)")
+    n_tiers = len(args.tiers.split(","))
+    faults = retry_pol = breaker_cfg = None
+    if args.faults is not None:
+        try:
+            faults = _parse_faults(args.faults, n_tiers)
+        except ValueError as e:
+            ap.error(f"--faults: {e}")
+    if args.retry is not None:
+        from repro.serving.resilience import RetryPolicy
+        retry_pol = RetryPolicy(max_attempts=args.retry,
+                                backoff_s=args.retry_backoff_ms / 1e3)
+    if args.breaker:
+        from repro.serving.resilience import BreakerConfig
+        breaker_cfg = BreakerConfig(
+            cooldown_s=args.breaker_cooldown_ms / 1e3)
 
     pipe, _ = build_pipeline(BuildConfig(
         task=args.task, tiers=tuple(args.tiers.split(",")),
@@ -205,6 +282,7 @@ def main():
         shard_tiers=mesh_shape is not None, mesh_shape=mesh_shape,
         compact=args.on_device_compact or "host",
         speculate=args.speculate,
+        faults=faults, retry=retry_pol, breaker=breaker_cfg,
         router=RouterConfig(top_lists=10, sample=256)))
 
     test = synthetic.sample(args.task, args.requests, seed=77)
@@ -229,7 +307,8 @@ def main():
                 queue_cap=args.queue_cap, overload=args.overload,
                 speculate=args.speculate, spec_depth=args.spec_depth,
                 spec_bar=args.spec_bar,
-                spec_idle_frac=args.spec_idle_frac)
+                spec_idle_frac=args.spec_idle_frac,
+                retry=retry_pol, breaker=breaker_cfg)
             res = pipe.serve_stream(test.tokens, arrivals,
                                     max_chunk=args.max_chunk, slo=slo)
     else:

@@ -34,6 +34,14 @@ Modules
               queues, reject/degrade overload policies) and per-tier
               EWMA service-time estimators. The default executor behind
               ``serve_stream``/``aserve``.
+``resilience`` fault-tolerant serving: seeded deterministic fault
+              injection (``FaultSpec``/``FaultyTier``), per-tier
+              ``RetryPolicy`` (bounded attempts, deterministic backoff,
+              deadline-aware), per-tier circuit breakers
+              (``BreakerConfig``/``TierHealth``), and the failover
+              semantics threaded through the cascade executor and the
+              parallel scheduler (escalate past a sick tier; fall back
+              to the best earlier answer on last-tier failure).
 ``strategy``  contextual routing + online budget governance: a
               ``ContextualRouter`` (jax MLP over the scorer-encoder
               embeddings) predicts each query's cascade entry tier, a
@@ -71,6 +79,16 @@ from repro.serving.ingress import (  # noqa: F401
     IngressQueue,
     RequestState,
     poisson_arrivals,
+)
+from repro.serving.resilience import (  # noqa: F401
+    BreakerConfig,
+    CircuitBreaker,
+    FaultSpec,
+    FaultyTier,
+    RetryPolicy,
+    TierFault,
+    TierHealth,
+    wrap_tiers,
 )
 from repro.serving.sched import (  # noqa: F401
     SLOConfig,

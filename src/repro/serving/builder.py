@@ -87,6 +87,18 @@ class BuildConfig:
     # wall-clock. Dials (depth, probability bar, idle budget) live on
     # the SLOConfig passed to the stream entry points.
     speculate: bool = False
+    # fault tolerance (repro.serving.resilience). ``faults`` injects a
+    # deterministic seeded fault schedule into the assembled tiers (one
+    # FaultSpec broadcast to every tier, or a list indexed by the
+    # *marketplace* tier order — the learned cascade keeps a subsequence
+    # of the marketplace, so the builder maps the list onto whichever
+    # tiers were selected and drops the rest; None = the tiers are not
+    # even wrapped). ``retry``/``breaker`` opt the serving paths into
+    # retry + circuit-breaker failover; all three default off and off
+    # is bit-identical to not having the subsystem at all.
+    faults: object | None = None        # FaultSpec | list | None
+    retry: object | None = None         # RetryPolicy | None
+    breaker: object | None = None       # BreakerConfig | None
     # joint prompt x cascade search (core.joint) instead of greedy
     # per-tier prompt selection: one shared prompt size chosen jointly
     # with the cascade under the budget
@@ -140,6 +152,20 @@ def _reprice(data: MarketData, apis, prompts, full_tokens: int) -> MarketData:
                                                      data.n_out))
     return MarketData(data.names, data.correct, jnp.asarray(cost),
                       data.n_in, data.n_out, data.difficulty)
+
+
+def _select_tier_faults(faults, n_market: int, selected):
+    """Map a marketplace-indexed per-tier fault list onto the tiers the
+    learned cascade actually kept (``selected`` = marketplace indices,
+    in cascade order). Broadcast specs and ``None`` pass through."""
+    if not isinstance(faults, (list, tuple)):
+        return faults
+    if len(faults) != n_market:
+        raise ValueError(
+            f"{len(faults)} fault specs for a {n_market}-tier "
+            "marketplace (per-tier fault lists are indexed by the "
+            "marketplace order, not the learned cascade)")
+    return [faults[i] for i in selected]
 
 
 def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
@@ -300,12 +326,14 @@ def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
     # savings baseline = the marketplace's most expensive tier, NOT the
     # cascade's last tier (a tight budget can drop the top tier entirely)
     top = int(np.argmax(np.asarray(priced.cost).mean(0)))
+    faults = _select_tier_faults(cfg.faults, len(apis), cas.apis)
     pipeline = ServingPipeline(
         tiers=tiers, thresholds=cas.thresholds,
         scorer=lambda toks, ans: SC.score(sp, toks, ans),
         cache=cache, embed=embed, full_prompt_tokens=full_tokens,
         pad_token=synthetic.PAD, baseline_price=apis[top].price,
-        strategy=strategy, compact=cfg.compact, speculate=cfg.speculate)
+        strategy=strategy, compact=cfg.compact, speculate=cfg.speculate,
+        faults=faults, retry=cfg.retry, breaker=cfg.breaker)
     report = {"apis": apis, "data": data, "priced": priced,
               "answers": answers, "scorer": sp, "scores": s_train,
               "cascade": cas, "metrics": metrics, "budget": budget,

@@ -190,6 +190,13 @@ class RequestState:
     n_chunks: int = 0               # tier chunks this request rode in
     emb: np.ndarray | None = None   # cache-stage embedding (misses only)
     future: asyncio.Future | None = None
+    # failover fallback (repro.serving.resilience, populated only when
+    # the scheduler runs resilient): the best-scoring answer an earlier
+    # tier produced but the scorer rejected — served as a degraded
+    # answer when every remaining tier is down
+    fb_answer: object = None
+    fb_score: float = float("-inf")
+    fb_tier: int = -1
 
     @property
     def done(self) -> bool:

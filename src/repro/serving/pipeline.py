@@ -166,6 +166,14 @@ class ServeResult:
             extra += (f" | speculation: {spec['committed']}/{spec['issued']}"
                       f" committed, {spec['cancelled']} cancelled "
                       f"({spec['wasted_s'] * 1e3:.0f}ms wasted)")
+        res = (self.ingress or {}).get("resilience")
+        if res is not None:
+            extra += (f" | resilience: {res['retries']} retries "
+                      f"(+{res['backoff_s'] * 1e3:.0f}ms backoff), "
+                      f"{res['failovers']} failovers, {res['trips']} trips/"
+                      f"{res['recoveries']} recoveries, "
+                      f"{res['fallback_answers']} degraded answers, "
+                      f"{res['shed']} shed")
         if self.strategy is not None:
             extra += (f" | entry tiers {self.strategy['entry_hist']} "
                       f"(bar {self.strategy['entry_bar']:.2f}) | spend "
@@ -216,6 +224,22 @@ class ServingPipeline:
     # closed. An explicit slo= passed to the stream entry points wins
     # (it carries its own speculation dials).
     speculate: bool = False
+    # fault tolerance (repro.serving.resilience) — all three default
+    # off, and off means structurally absent (no wrappers, no extra
+    # branches), which is what keeps every serve path bit-identical:
+    # per-tier fault injection (a FaultSpec, an index-aligned list of
+    # FaultSpec/None, or None), ...
+    faults: object | None = None
+    # ... per-tier retry for TierFault invoke failures, ...
+    retry: object | None = None
+    # ... and per-tier circuit breakers (BreakerConfig) driving
+    # failover escalation past unavailable tiers. An explicit slo=
+    # passed to the stream entry points wins, as for speculate.
+    breaker: object | None = None
+    # the EnginePool backing generation tiers, when there is one — a
+    # breaker trip cancels its in-flight speculative prefills
+    # (EnginePool.cancel_all); None for marketplace/toy tiers
+    engine_pool: object | None = None
 
     def __post_init__(self):
         from repro.core.cascade import COMPACT_MODES
@@ -265,11 +289,19 @@ class ServingPipeline:
     # -- pieces shared with the continuous batcher (serving.ingress) -------
     def _cascade_tiers(self) -> list[CascadeTier]:
         """The live tiers as cascade stages: one invoke = answer + the
-        exact adapted-prompt cost for the same chunk."""
-        return [CascadeTier(
-                    s.name,
-                    lambda q, s=s: (s.answer(q), self._tier_cost(s, q)))
-                for s in self.tiers]
+        exact adapted-prompt cost for the same chunk. With ``faults``
+        configured, the affected tiers come back wrapped in
+        ``FaultyTier`` (the stream scheduler wires its clock into the
+        wrappers at start; the batch path sees draw-based faults at
+        t=0)."""
+        tiers = [CascadeTier(
+                     s.name,
+                     lambda q, s=s: (s.answer(q), self._tier_cost(s, q)))
+                 for s in self.tiers]
+        if self.faults is not None:
+            from repro.serving.resilience import wrap_tiers
+            tiers = wrap_tiers(tiers, self.faults)
+        return tiers
 
     def _pos_scorer(self, q, a, _j):
         return self.scorer(q, a)
@@ -376,7 +408,8 @@ class ServingPipeline:
             res = execute_cascade(self._cascade_tiers(), thresholds,
                                   self._pos_scorer, tokens[miss],
                                   batch_size=self.batch_size, entry=entries,
-                                  compact=self.compact)
+                                  compact=self.compact, retry=self.retry,
+                                  breaker=self.breaker)
             res_ans = np.asarray(res["answers"])
             cost[miss] = res["cost"]
             stopped_at[miss] = res["stopped_at"]
@@ -426,7 +459,8 @@ class ServingPipeline:
             from repro.serving.sched import SLOConfig, TierScheduler
             if slo is None:
                 slo = SLOConfig(max_holdback_s=0.02 if holdback is None
-                                else holdback, speculate=self.speculate)
+                                else holdback, speculate=self.speculate,
+                                retry=self.retry, breaker=self.breaker)
             return TierScheduler(self, max_chunk=max_chunk, slo=slo)
         from repro.serving.ingress import ContinuousBatcher
         if slo is not None:

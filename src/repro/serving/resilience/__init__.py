@@ -1,0 +1,53 @@
+"""``repro.serving.resilience`` — fault-tolerant cascade serving.
+
+FrugalGPT's cascade runs over commercial-API-style tiers that rate-
+limit, time out, and throw transient errors. This package turns tier
+failure from a fatal event into a *routing signal* — the cascade
+structure already provides the failover path (escalate past the sick
+tier):
+
+``faults``   deterministic, seeded fault injection: ``FaultSpec`` (a
+             reproducible schedule of transient errors, timeouts,
+             latency spikes, rate-limit windows, sustained outages) and
+             ``FaultyTier`` (wraps any tier; injectable clock/sleep;
+             ``wrap_tiers`` leaves disabled tiers untouched — zero
+             overhead off). ``TierFault`` and its subclasses are the
+             only exceptions the resilience machinery absorbs.
+``retry``    per-tier ``RetryPolicy``: bounded attempts, exponential
+             backoff with deterministic jitter, deadline awareness
+             (never retry past the request's SLO deadline), and the
+             ``"success"``/``"all_attempts"`` cost-accounting modes;
+             ``invoke_with_retry`` is the shared execution helper.
+``breaker``  per-tier circuit breakers (closed/open/half-open over a
+             sliding failure-rate window; explicit ``now`` everywhere,
+             so fake clocks drive them) feeding a ``TierHealth``
+             registry — the scheduler's availability map.
+
+Failover itself lives at the call sites: ``core.cascade.
+execute_cascade(retry=, breaker=)`` and the parallel scheduler
+(``SLOConfig.retry``/``SLOConfig.breaker``) route rows past open or
+exhausted tiers (forward-only escalation), fall back to the best-scoring
+earlier answer on last-tier failure (or an accounted shed), and report
+everything under ``ingress["resilience"]``.
+"""
+from repro.serving.resilience.breaker import (  # noqa: F401
+    BREAKER_STATES,
+    BreakerConfig,
+    CircuitBreaker,
+    TierHealth,
+)
+from repro.serving.resilience.faults import (  # noqa: F401
+    FAULT_KINDS,
+    FaultSpec,
+    FaultyTier,
+    RateLimitError,
+    TierFault,
+    TierTimeout,
+    TransientError,
+    wrap_tiers,
+)
+from repro.serving.resilience.retry import (  # noqa: F401
+    RETRY_ACCOUNTING,
+    RetryPolicy,
+    invoke_with_retry,
+)

@@ -1,0 +1,134 @@
+"""Per-tier circuit breakers feeding a ``TierHealth`` registry.
+
+The classic three-state machine over a sliding failure-rate window:
+
+  * **closed**    — traffic flows; outcomes land in a bounded window of
+    the most recent results. When at least ``min_samples`` have been
+    seen and the window's failure fraction reaches ``fail_rate``, the
+    breaker **trips** to open.
+  * **open**      — the tier is presumed down; ``available`` is False,
+    so the scheduler routes rows *past* it (failover escalation)
+    instead of burning retries. After ``cooldown_s`` the breaker moves
+    to half-open.
+  * **half-open** — one probe's worth of traffic is allowed through.
+    Success closes the breaker (a **recovery**, window reset); failure
+    re-trips it for another cooldown.
+
+Every method takes an explicit ``now`` — the breaker holds no clock, so
+fake-clock tests (and the scheduler's injected stream clock) drive state
+transitions without wall time. Each breaker is only ever touched by its
+tier's worker thread (the scheduler's one-worker-per-tier contract), so
+no internal locking is needed; the registry's cross-tier counters are
+summed at snapshot time.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+BREAKER_STATES = ("closed", "open", "half_open")
+
+
+@dataclasses.dataclass(frozen=True)
+class BreakerConfig:
+    """Dials for one tier's circuit breaker."""
+
+    #: sliding outcome window (most recent invokes)
+    window: int = 16
+    #: trip when failures/window >= this, once min_samples seen
+    fail_rate: float = 0.5
+    min_samples: int = 4
+    #: seconds open before allowing a half-open probe
+    cooldown_s: float = 0.5
+
+    def __post_init__(self):
+        if self.window < 1:
+            raise ValueError("window must be >= 1")
+        if not 0.0 < self.fail_rate <= 1.0:
+            raise ValueError("fail_rate must be in (0, 1]")
+        if self.min_samples < 1 or self.min_samples > self.window:
+            raise ValueError("min_samples must be in [1, window]")
+        if self.cooldown_s < 0:
+            raise ValueError("cooldown_s must be >= 0")
+
+
+class CircuitBreaker:
+    """One tier's breaker (see module docstring for the state machine)."""
+
+    def __init__(self, cfg: BreakerConfig):
+        self.cfg = cfg
+        self._state = "closed"
+        self._outcomes = collections.deque(maxlen=cfg.window)
+        self._opened_at = 0.0
+        self.trips = 0
+        self.recoveries = 0
+
+    def state(self, now: float) -> str:
+        """Current state, applying the open -> half-open cooldown edge."""
+        if (self._state == "open"
+                and now - self._opened_at >= self.cfg.cooldown_s):
+            self._state = "half_open"
+        return self._state
+
+    def available(self, now: float) -> bool:
+        """May traffic be sent to this tier right now? False only while
+        open and still cooling down; half-open admits the probe."""
+        return self.state(now) != "open"
+
+    def record(self, ok: bool, now: float) -> bool:
+        """Record one invoke outcome. Returns True when this outcome
+        *tripped* the breaker (closed/half-open -> open) — the caller's
+        hook for cancelling in-flight speculation against the tier."""
+        state = self.state(now)
+        if state == "half_open":
+            if ok:                      # probe succeeded: recover
+                self._state = "closed"
+                self._outcomes.clear()
+                self.recoveries += 1
+                return False
+            self._state = "open"        # probe failed: re-trip
+            self._opened_at = now
+            self.trips += 1
+            return True
+        self._outcomes.append(bool(ok))
+        if state == "closed" and len(self._outcomes) >= self.cfg.min_samples:
+            fails = sum(1 for o in self._outcomes if not o)
+            if fails / len(self._outcomes) >= self.cfg.fail_rate:
+                self._state = "open"
+                self._opened_at = now
+                self._outcomes.clear()
+                self.trips += 1
+                return True
+        return False
+
+    def snapshot(self, now: float) -> dict:
+        return {"state": self.state(now), "trips": self.trips,
+                "recoveries": self.recoveries,
+                "window_fails": sum(1 for o in self._outcomes if not o),
+                "window_n": len(self._outcomes)}
+
+
+class TierHealth:
+    """Registry of per-tier breakers — the scheduler's availability map."""
+
+    def __init__(self, n_tiers: int, cfg: BreakerConfig):
+        self.cfg = cfg
+        self.breakers = [CircuitBreaker(cfg) for _ in range(n_tiers)]
+
+    def available(self, j: int, now: float) -> bool:
+        return self.breakers[j].available(now)
+
+    def record(self, j: int, ok: bool, now: float) -> bool:
+        """Record tier j's invoke outcome; True when it tripped."""
+        return self.breakers[j].record(ok, now)
+
+    @property
+    def trips(self) -> int:
+        return sum(b.trips for b in self.breakers)
+
+    @property
+    def recoveries(self) -> int:
+        return sum(b.recoveries for b in self.breakers)
+
+    def snapshot(self, now: float) -> list[dict]:
+        return [b.snapshot(now) for b in self.breakers]

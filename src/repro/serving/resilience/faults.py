@@ -1,0 +1,226 @@
+"""Deterministic, seeded fault injection for cascade tiers.
+
+FrugalGPT cascades run over *commercial LLM APIs* — services that
+rate-limit, time out, and throw transient 5xx errors. This module makes
+those failure modes reproducible: a ``FaultSpec`` describes a seeded
+schedule of faults and ``FaultyTier`` wraps any ``CascadeTier``-shaped
+object (``.name`` + ``.invoke``) so its invokes raise (or stall) exactly
+where the schedule says, run after run.
+
+Determinism contract: each wrapper owns one ``numpy`` generator seeded
+from its spec, and draws exactly one uniform per invoke — so the fault
+sequence is a pure function of ``(seed, invoke index)``. Tier backends
+are only ever entered by one thread at a time (the scheduler's
+one-worker-per-tier contract), so the invoke index is well defined.
+Window faults (rate-limit windows, sustained outages) are keyed off an
+*injectable clock* instead of the draw, so fake-clock tests can walk a
+tier into and out of an outage without wall time passing.
+
+Zero overhead when disabled: ``wrap_tiers`` returns the original tier
+object untouched for a ``None``/inactive spec — the disabled path has no
+wrapper at all, which is what keeps it trivially bit-identical.
+
+The exception taxonomy mirrors what API clients actually see:
+
+  ``TransientError``  — retryable 5xx-style failure (also used for
+                        sustained outage windows);
+  ``TierTimeout``     — the call gave up waiting;
+  ``RateLimitError``  — 429 inside a configured rate-limit window.
+
+All three subclass ``TierFault`` — the *only* exception type the
+retry/failover machinery treats as a routing signal. Anything else a
+tier raises is still a programming error and still surfaces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+
+class TierFault(RuntimeError):
+    """A tier invoke failed in a way the resilience layer may absorb."""
+
+
+class TransientError(TierFault):
+    """Retryable transient failure (injected 5xx / sustained outage)."""
+
+
+class TierTimeout(TierFault):
+    """The tier call exceeded its time budget."""
+
+
+class RateLimitError(TierFault):
+    """The tier is rate-limiting (429) for a window."""
+
+
+def _window(w):
+    if w is None:
+        return None
+    lo, hi = float(w[0]), float(w[1])
+    if not lo < hi:
+        raise ValueError(f"fault window needs start < end, got ({lo}, {hi})")
+    return (lo, hi)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Seeded fault schedule for one tier.
+
+    Rates are per-invoke probabilities drawn from one deterministic
+    generator (at most one rate fault fires per invoke; error wins over
+    timeout wins over spike). Windows are ``(start_s, end_s)`` on the
+    stream clock and fire regardless of the draw.
+    """
+
+    #: P(TransientError) per invoke
+    error_rate: float = 0.0
+    #: P(TierTimeout) per invoke
+    timeout_rate: float = 0.0
+    #: P(latency spike) per invoke — the invoke still succeeds, after
+    #: ``spike_s`` extra seconds
+    spike_rate: float = 0.0
+    spike_s: float = 0.05
+    #: RateLimitError window (start_s, end_s) on the stream clock
+    rate_limit: tuple | None = None
+    #: sustained-outage window (start_s, end_s): every invoke inside it
+    #: raises TransientError — the breaker-trip scenario
+    outage: tuple | None = None
+    #: cap on total injected faults (None = unlimited); spikes count
+    max_faults: int | None = None
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in ("error_rate", "timeout_rate", "spike_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        if self.error_rate + self.timeout_rate + self.spike_rate > 1.0:
+            raise ValueError("error_rate + timeout_rate + spike_rate "
+                             "must be <= 1 (one draw decides the invoke)")
+        if self.spike_s < 0:
+            raise ValueError("spike_s must be >= 0")
+        if self.max_faults is not None and self.max_faults < 0:
+            raise ValueError("max_faults must be >= 0")
+        object.__setattr__(self, "rate_limit", _window(self.rate_limit))
+        object.__setattr__(self, "outage", _window(self.outage))
+
+    @property
+    def enabled(self) -> bool:
+        return (self.error_rate > 0 or self.timeout_rate > 0
+                or self.spike_rate > 0 or self.rate_limit is not None
+                or self.outage is not None)
+
+    @staticmethod
+    def parse(spec: str) -> "FaultSpec":
+        """Parse the launcher's ``--faults`` grammar: comma-separated
+        ``key=value`` pairs — ``error``/``timeout`` (rates),
+        ``spike=RATE@SECONDS``, ``rlim=START:END``, ``outage=START:END``,
+        ``max=N``, ``seed=N``. E.g. ``error=0.05,outage=0.5:2.0,seed=1``.
+        """
+        kw: dict = {}
+        for part in filter(None, (p.strip() for p in spec.split(","))):
+            if "=" not in part:
+                raise ValueError(f"--faults entry {part!r} is not key=value")
+            k, v = part.split("=", 1)
+            k = k.strip()
+            if k == "error":
+                kw["error_rate"] = float(v)
+            elif k == "timeout":
+                kw["timeout_rate"] = float(v)
+            elif k == "spike":
+                rate, _, secs = v.partition("@")
+                kw["spike_rate"] = float(rate)
+                if secs:
+                    kw["spike_s"] = float(secs)
+            elif k in ("rlim", "outage"):
+                lo, _, hi = v.partition(":")
+                kw["rate_limit" if k == "rlim" else k] = (float(lo),
+                                                          float(hi))
+            elif k == "max":
+                kw["max_faults"] = int(v)
+            elif k == "seed":
+                kw["seed"] = int(v)
+            else:
+                raise ValueError(f"unknown --faults key {k!r}")
+        return FaultSpec(**kw)
+
+
+#: fault kinds counted by FaultyTier.injected
+FAULT_KINDS = ("error", "timeout", "spike", "rate_limit", "outage")
+
+
+class FaultyTier:
+    """A ``CascadeTier`` wrapped with a ``FaultSpec`` schedule.
+
+    Duck-typed to the tier contract (``.name``, ``.invoke``), so every
+    call site — ``tier_step``, the scheduler workers, speculation —
+    takes it unchanged. ``clock``/``sleep`` are injectable: the stream
+    scheduler wires its own clock in at start (fake clocks included),
+    and tests inject a recording ``sleep`` so latency spikes advance
+    virtual time instead of stalling pytest.
+    """
+
+    def __init__(self, tier, spec: FaultSpec, clock=None, sleep=None):
+        self.name = tier.name
+        self.inner = tier
+        self.spec = spec
+        self.clock = clock              # None until a driver wires one in
+        self.sleep = sleep if sleep is not None else time.sleep
+        self._rng = np.random.default_rng(spec.seed)
+        self.calls = 0
+        self.injected = dict.fromkeys(FAULT_KINDS, 0)
+
+    def _now(self) -> float:
+        return float(self.clock()) if self.clock is not None else 0.0
+
+    def _in(self, w, now: float) -> bool:
+        return w is not None and w[0] <= now < w[1]
+
+    def _fire(self, kind: str, exc: TierFault):
+        self.injected[kind] += 1
+        raise exc
+
+    def invoke(self, chunk):
+        sp = self.spec
+        self.calls += 1
+        u = self._rng.random()          # always drawn: the fault sequence
+        now = self._now()               # is a function of (seed, call #)
+        if (sp.max_faults is None
+                or sum(self.injected.values()) < sp.max_faults):
+            if self._in(sp.outage, now):
+                self._fire("outage", TransientError(
+                    f"{self.name}: injected outage at t={now:.3f}s"))
+            if self._in(sp.rate_limit, now):
+                self._fire("rate_limit", RateLimitError(
+                    f"{self.name}: injected rate limit at t={now:.3f}s"))
+            if u < sp.error_rate:
+                self._fire("error", TransientError(
+                    f"{self.name}: injected transient error "
+                    f"(call {self.calls})"))
+            if u < sp.error_rate + sp.timeout_rate:
+                self._fire("timeout", TierTimeout(
+                    f"{self.name}: injected timeout (call {self.calls})"))
+            if u < sp.error_rate + sp.timeout_rate + sp.spike_rate:
+                self.injected["spike"] += 1
+                self.sleep(sp.spike_s)
+        return self.inner.invoke(chunk)
+
+
+def wrap_tiers(tiers, specs, clock=None, sleep=None) -> list:
+    """Wrap each tier with its (index-aligned) spec; ``None``/inactive
+    specs return the original tier object — no wrapper, no overhead.
+    ``specs`` may also be a single ``FaultSpec`` applied to every tier
+    (each wrapper still draws from its own per-tier generator, offset by
+    the tier index so tiers don't fault in lockstep)."""
+    if specs is None:
+        return list(tiers)
+    if isinstance(specs, FaultSpec):
+        specs = [dataclasses.replace(specs, seed=specs.seed + 7919 * j)
+                 for j in range(len(tiers))]
+    if len(specs) != len(tiers):
+        raise ValueError(f"{len(specs)} fault specs for {len(tiers)} tiers")
+    return [t if s is None or not s.enabled
+            else FaultyTier(t, s, clock=clock, sleep=sleep)
+            for t, s in zip(tiers, specs)]

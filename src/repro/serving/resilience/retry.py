@@ -1,0 +1,123 @@
+"""Per-tier retry with bounded attempts, exponential backoff,
+deterministic jitter, and deadline awareness.
+
+A ``RetryPolicy`` is a frozen value object; ``invoke_with_retry`` is the
+one execution helper both cascade paths share (the offline executor and
+the parallel scheduler). Three properties the tests pin down:
+
+  * **deterministic jitter** — the jitter multiplier is drawn from a
+    generator seeded by ``(seed, token, attempt)``, so a retried chunk
+    backs off by the exact same amounts run after run (``token`` is the
+    caller's stable identity, e.g. the tier index);
+  * **deadline awareness** — a retry is never issued when
+    ``now + backoff + predicted_s`` already overshoots the request's SLO
+    deadline: failing fast into failover beats answering late;
+  * **accounting modes** — only ``TierFault`` attempts are retried, and
+    failed attempts return no cost, so what retries *charge* is a
+    policy: ``"success"`` bills only the attempt that answered (the
+    provider refunded the 5xx), ``"all_attempts"`` bills every attempt
+    at the same per-row price (the provider bills timeouts too) by
+    scaling the successful cost by the attempt count.
+
+Clocks and sleeps are injected by the caller: the scheduler passes its
+stream clock (fake clocks included) and a no-op sleep when time is
+virtual, so retry tests never wall-sleep (tier-1 discipline from PR 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.serving.resilience.faults import TierFault
+
+#: what retried invokes charge: only the successful attempt, or every
+#: attempt at the same per-row price
+RETRY_ACCOUNTING = ("success", "all_attempts")
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded, deadline-aware retry for one tier's invokes."""
+
+    #: total attempts including the first (1 = no retry)
+    max_attempts: int = 3
+    #: backoff before retry k (0-indexed) is ``backoff_s * mult**k``,
+    #: capped at ``max_backoff_s``, jittered by ``±jitter_frac``
+    backoff_s: float = 0.02
+    backoff_mult: float = 2.0
+    max_backoff_s: float = 1.0
+    jitter_frac: float = 0.25
+    accounting: str = "success"
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if self.backoff_s < 0 or self.max_backoff_s < 0:
+            raise ValueError("backoff_s and max_backoff_s must be >= 0")
+        if self.backoff_mult < 1.0:
+            raise ValueError("backoff_mult must be >= 1")
+        if not 0.0 <= self.jitter_frac < 1.0:
+            raise ValueError("jitter_frac must be in [0, 1)")
+        if self.accounting not in RETRY_ACCOUNTING:
+            raise ValueError(f"unknown accounting {self.accounting!r}; "
+                             f"expected one of {RETRY_ACCOUNTING}")
+
+    def backoff(self, attempt: int, token: int = 0) -> float:
+        """Seconds to wait before retry ``attempt`` (0-indexed), with
+        deterministic jitter keyed by ``(seed, token, attempt)``."""
+        base = min(self.backoff_s * self.backoff_mult ** attempt,
+                   self.max_backoff_s)
+        if self.jitter_frac == 0.0:
+            return base
+        u = np.random.default_rng([self.seed, token, attempt]).random()
+        return base * (1.0 + self.jitter_frac * (2.0 * u - 1.0))
+
+    def may_retry(self, attempt: int, *, now: float,
+                  deadline: float | None, predicted_s: float = 0.0,
+                  token: int = 0) -> bool:
+        """May attempt ``attempt`` (0-indexed, just failed) be retried?
+        Bounded by ``max_attempts``, and never past the deadline: the
+        retry only makes sense if backoff + the tier's predicted service
+        time still lands before it."""
+        if attempt + 1 >= self.max_attempts:
+            return False
+        if deadline is None:
+            return True
+        return now + self.backoff(attempt, token) + predicted_s <= deadline
+
+
+def invoke_with_retry(tier, chunk, policy: RetryPolicy, *, clock, sleep,
+                      deadline: float | None = None,
+                      predicted_s: float = 0.0, token: int = 0,
+                      on_attempt_fail=None):
+    """Run ``tier.invoke(chunk)`` under ``policy``.
+
+    Returns ``(answers, costs, attempts, backoff_total_s)``; re-raises
+    the last ``TierFault`` once attempts are exhausted or the deadline
+    forbids another try. Only ``TierFault`` is retried — anything else
+    is a programming error and propagates immediately. ``costs`` come
+    back scaled by the attempt count under ``"all_attempts"``
+    accounting. ``on_attempt_fail(attempt, exc)`` (optional) observes
+    each failed attempt — the circuit breaker's failure-rate signal.
+    """
+    attempt = 0
+    backoff_total = 0.0
+    while True:
+        try:
+            a, c = tier.invoke(chunk)
+        except TierFault as e:
+            if on_attempt_fail is not None:
+                on_attempt_fail(attempt, e)
+            if not policy.may_retry(attempt, now=clock(), deadline=deadline,
+                                    predicted_s=predicted_s, token=token):
+                raise
+            wait = policy.backoff(attempt, token)
+            backoff_total += wait
+            sleep(wait)
+            attempt += 1
+            continue
+        if attempt and policy.accounting == "all_attempts":
+            c = np.asarray(c, np.float64) * (attempt + 1)
+        return a, c, attempt + 1, backoff_total

@@ -23,6 +23,8 @@ from repro.serving.sched.policy import (  # noqa: F401
     admit_decision,
     holdback_timeout,
     may_speculate,
+    rank_speculation,
     speculation_candidate,
+    speculation_ev,
 )
 from repro.serving.sched.scheduler import TierScheduler  # noqa: F401

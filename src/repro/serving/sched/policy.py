@@ -44,6 +44,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.serving.resilience import BreakerConfig, RetryPolicy
+
 OVERLOAD_POLICIES = ("reject", "degrade")
 
 #: admission verdicts
@@ -89,6 +91,14 @@ class SLOConfig:
     #: cap on wasted (cancelled-speculation) device-seconds as a
     #: fraction of elapsed stream time; None = unlimited idle burn
     spec_idle_frac: float | None = 0.5
+    #: per-tier retry for TierFault invoke failures
+    #: (repro.serving.resilience.retry) — None = fail straight into the
+    #: breaker/failover path
+    retry: RetryPolicy | None = None
+    #: per-tier circuit breakers (repro.serving.resilience.breaker) —
+    #: None = no availability tracking; rows bound for an open tier skip
+    #: it and escalate forward
+    breaker: BreakerConfig | None = None
 
     def __post_init__(self):
         if self.overload not in OVERLOAD_POLICIES:
@@ -114,6 +124,14 @@ class SLOConfig:
         if self.spec_idle_frac is not None and self.spec_idle_frac <= 0:
             raise ValueError("spec_idle_frac must be > 0 (or None for "
                              "unlimited idle burn)")
+        if self.retry is not None and not isinstance(self.retry,
+                                                     RetryPolicy):
+            raise ValueError(f"retry must be a RetryPolicy or None, got "
+                             f"{type(self.retry).__name__}")
+        if self.breaker is not None and not isinstance(self.breaker,
+                                                       BreakerConfig):
+            raise ValueError(f"breaker must be a BreakerConfig or None, "
+                             f"got {type(self.breaker).__name__}")
 
     def deadline_for(self, arrival: float,
                      explicit: float | None = None) -> float | None:
@@ -191,6 +209,41 @@ def speculation_candidate(probs, cur: int, target: int, bar: float) -> bool:
     if probs is None:
         return True
     return bool(np.all(np.asarray(probs)[cur:target] < bar))
+
+
+def speculation_ev(probs, cur: int, target: int,
+                   predicted_s: float) -> float:
+    """Expected value of tier ``target`` pre-invoking a row currently
+    decoding at tier ``cur``: P(the row actually escalates all the way
+    to ``target``) x the tier's EWMA-predicted service time — i.e. the
+    expected wall-clock the pre-invoke removes from the critical path.
+    P(reach) is the product of the router's per-tier *reject*
+    probabilities over ``[cur, target)``; with no router attached
+    (``probs`` None) the EV is the bare ``predicted_s``, so all cold
+    rows tie and a stable sort preserves queue order — bit-identical to
+    the pre-EV selection."""
+    if probs is None:
+        return float(predicted_s)
+    p = np.asarray(probs, np.float64)[cur:target]
+    return float(np.prod(1.0 - p)) * float(predicted_s)
+
+
+def rank_speculation(rows, positions, target: int,
+                     predicted_s: float, cap: int) -> list:
+    """Order speculation candidates by descending expected value and
+    keep the best ``cap`` — the policy for an idle budget that covers
+    only some candidates (ROADMAP item 4 follow-up (a)). ``rows`` and
+    ``positions`` are parallel: each row's current decode position.
+    Stable: ties (and the no-router cold path, where every EV equals
+    ``predicted_s``) keep queue order, so ranking only reorders when the
+    router actually distinguishes the candidates."""
+    if len(rows) <= cap:
+        return list(rows)
+    order = sorted(
+        range(len(rows)),
+        key=lambda i: -speculation_ev(rows[i].probs, positions[i], target,
+                                      predicted_s))
+    return [rows[i] for i in sorted(order[:cap])]
 
 
 def may_speculate(slo: SLOConfig, wasted_s: float, elapsed: float,

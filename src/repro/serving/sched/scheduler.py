@@ -89,6 +89,23 @@ only move wall-clock: answers, charged cost, ``stopped_at`` and
 speculative legs of tests/test_placement.py). The known tradeoff: a
 real arrival during a speculative chunk waits for it to finish —
 bounded by one chunk's service time, gated by the policy dials.
+
+**Fault tolerance** (``repro.serving.resilience``): with
+``SLOConfig.retry``/``SLOConfig.breaker`` set (or fault-injected tiers
+wired in), a ``TierFault`` from an invoke is a *routing signal*, not a
+crash. The invoke is retried under the bounded, deadline-aware
+``RetryPolicy``; the final outcome feeds the tier's circuit breaker; and
+a chunk whose tier still fails escalates forward — the cascade structure
+IS the failover path. Rows waiting on a tier whose breaker is open skip
+it without invoking (``_skip_open_tier_locked``); a failed *last* tier
+resolves each row from the best-scoring answer an earlier tier produced
+(a degraded answer) or as an accounted shed, so every admitted request
+always resolves. A breaker trip cancels speculation parked against the
+tier (and engine-level prefill futures via ``EnginePool.cancel_all``
+when the pipeline exposes a pool). With no resilience dials the
+TierFault path is structurally unreachable and the scheduler is
+bit-identical to the pre-resilience one (the zero-fault legs of
+tests/test_placement.py).
 """
 from __future__ import annotations
 
@@ -100,14 +117,16 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.cascade import tier_step
+from repro.core.cascade import CascadeTier, tier_step
 from repro.serving.ingress import (IngressQueue, RequestState,
                                    fold_stream_result, pad_pow2_rows,
                                    stage1_lookup)
+from repro.serving.resilience import (FaultyTier, TierFault, TierHealth,
+                                      invoke_with_retry)
 from repro.serving.sched.estimator import TierEstimator
 from repro.serving.sched.policy import (ADMIT, DEGRADE, SLOConfig,
                                         admit_decision, holdback_timeout,
-                                        may_speculate,
+                                        may_speculate, rank_speculation,
                                         speculation_candidate)
 
 
@@ -195,6 +214,27 @@ class TierScheduler:
         self.spec_wasted_s = 0.0    # device-seconds of cancelled rows
         self.spec_busy_s = [0.0] * m   # speculative busy time per tier
         self.spec_chunks = [0] * m
+
+        # resilience (repro.serving.resilience): per-tier circuit
+        # breakers, retry, and failover-past-failed-tier semantics.
+        # _resilient is the single gate, and it is an explicit opt-in
+        # (a retry or breaker dial): False keeps every code path —
+        # including the TierFault catch in _run_chunk — structurally
+        # identical to the pre-resilience scheduler, so disabled runs
+        # stay bit-identical AND a fault-injected run without the dials
+        # still crashes (the bench's no-resilience baseline).
+        self._health = (TierHealth(m, self.slo.breaker)
+                        if self.slo.breaker is not None else None)
+        self._resilient = (self.slo.retry is not None
+                           or self._health is not None)
+        self._sleep = time.sleep    # no-op under an injected clock
+        self.retry_count = 0        # failed attempts that were retried
+        self.retry_backoff_s = 0.0  # added latency spent backing off
+        self.failover_count = 0     # rows escalated past a failed tier
+        self.fallback_count = 0     # last-tier failures answered from an
+                                    # earlier tier's best-scoring answer
+        self.res_shed = 0           # last-tier failures with no fallback
+        self.spec_aborted = 0       # speculative invokes killed by faults
 
     # -- admission (driver thread) -----------------------------------------
     def _admit(self, reqs: Sequence[RequestState], now: float):
@@ -372,13 +412,15 @@ class TierScheduler:
         time counted up front."""
         if t == 0 or not self.slo.speculate or self._waiting[t]:
             return None
+        if self._health is not None and not self._health.available(t, now):
+            return None         # never speculate against a tripped tier
         predicted = self.estimators[t].predicted_service(
             self.slo.init_service_s)
         if not may_speculate(self.slo, self.spec_wasted_s, now,
                              predicted_s=predicted):
             return None
         cap = self._effective_chunk()
-        rows = []
+        rows, pos = [], []
         for i in range(max(0, t - self.slo.spec_depth), t):
             for r in self._decoding[i].values():
                 if (r.rid in self._spec_ready[t]
@@ -389,12 +431,14 @@ class TierScheduler:
                                              self.slo.spec_bar):
                     continue
                 rows.append(r)
-                if len(rows) >= cap:
-                    break
-            if len(rows) >= cap:
-                break
+                pos.append(i)
         if not rows:
             return None
+        # idle budget covers one chunk: when more rows qualify, keep
+        # the best by expected value (router reject-probability product
+        # x predicted service) — queue order only breaks EV ties, so the
+        # cold-router path selects exactly what it did before ranking
+        rows = rank_speculation(rows, pos, t, predicted, cap)
         for r in rows:
             self._spec_inflight[t].add(r.rid)
         self.spec_issued += len(rows)
@@ -408,8 +452,25 @@ class TierScheduler:
         accepted upstream while we were invoking are cancelled here."""
         toks, b = pad_pow2_rows(np.stack([r.tokens for r in rows]))
         t0 = time.perf_counter()
-        a, c = self._tiers[t].invoke(toks)
+        try:
+            a, c = self._tiers[t].invoke(toks)
+        except TierFault:
+            # speculation is opportunistic — no retries, just release
+            # the rows (they stay eligible for the real escalation
+            # path) and feed the breaker its free failure signal
+            with self._cv:
+                self.spec_aborted += len(rows)
+                self.spec_issued -= len(rows)
+                for r in rows:
+                    self._spec_inflight[t].discard(r.rid)
+                self._cv.notify_all()
+            if (self._health is not None
+                    and self._health.record(t, False, self._clock())):
+                self._on_trip(t)
+            return
         spent = time.perf_counter() - t0
+        if self._health is not None:
+            self._health.record(t, True, self._clock())
         a = np.asarray(a)[:b]
         c = np.asarray(c, np.float64)[:b]
         row_s = spent / len(rows)
@@ -453,6 +514,157 @@ class TierScheduler:
             pc[b:] = pc[b - 1]
         return mask, pa, pc
 
+    # -- resilience: retry, breaker feed, failover -------------------------
+    def _resilient_tier(self, j: int, deadline: float | None,
+                        meta: dict) -> CascadeTier:
+        """Tier j's invoke wrapped with the retry policy (bounded,
+        deadline-aware, deterministic backoff jitter) and breaker
+        outcome recording. ``meta`` accumulates the chunk's retry count
+        and backoff seconds for telemetry; the breaker sees the *final*
+        outcome of each invoke (an invoke that succeeds on retry is a
+        success — the window measures availability, not flakiness)."""
+        inner = self._tiers[j]
+        pol = self.slo.retry
+
+        def call(chunk):
+            fails = [0]
+
+            def _fail(_attempt, _exc):
+                fails[0] += 1
+
+            try:
+                if pol is None:
+                    try:
+                        a, c = inner.invoke(chunk)
+                    except TierFault as e:
+                        _fail(0, e)
+                        raise
+                    attempts = 1
+                else:
+                    predicted = self.estimators[j].predicted_service(
+                        self.slo.init_service_s)
+                    a, c, attempts, waited = invoke_with_retry(
+                        inner, chunk, pol, clock=self._clock,
+                        sleep=self._sleep, deadline=deadline,
+                        predicted_s=predicted, token=j,
+                        on_attempt_fail=_fail)
+                    meta["backoff"] += waited
+            except TierFault:
+                meta["retries"] += max(0, fails[0] - 1)
+                if (self._health is not None
+                        and self._health.record(j, False, self._clock())):
+                    self._on_trip(j)
+                raise
+            meta["retries"] += attempts - 1
+            if self._health is not None:
+                self._health.record(j, True, self._clock())
+            return a, c
+
+        return CascadeTier(inner.name, call)
+
+    def _on_trip(self, t: int):
+        """Tier t's breaker tripped: in-flight speculation against it is
+        dead weight. Drop its parked speculative results (counted as
+        cancelled waste) and cancel engine-level prefill futures through
+        the pool's existing ``cancel_all`` when the pipeline exposes
+        one."""
+        with self._cv:
+            for _a, _c, row_s in self._spec_ready[t].values():
+                self.spec_cancelled += 1
+                self.spec_wasted_s += row_s
+            self._spec_ready[t].clear()
+            self._cv.notify_all()
+        pool = getattr(self.pipeline, "engine_pool", None)
+        if pool is not None:
+            pool.cancel_all()
+
+    def _resolve_failed_locked(self, r: RequestState, now: float):
+        """The last reachable tier failed for this row: serve the
+        best-scoring answer an earlier tier produced (a degraded answer
+        — availability over accuracy), or account the row as shed when
+        no tier ever answered it."""
+        if r.fb_tier >= 0:
+            r.answer = r.fb_answer
+            r.score = r.fb_score
+            r.stopped_at = r.fb_tier
+            r.degraded = True
+            self.fallback_count += 1
+            self.degraded_count += 1
+        else:
+            r.shed = True
+            r.stopped_at = -2
+            self.res_shed += 1
+            self.shed_count += 1
+        self._finish_locked(r, now)
+
+    def _failover_chunk(self, j: int, batch: list[RequestState],
+                        prefilled, meta: dict):
+        """Tier j failed this chunk even after retries: escalate the
+        rows forward — the cascade structure IS the failover path — or,
+        at the last tier, resolve each row from its recorded fallback
+        (or as an accounted shed). The failed invoke returned no
+        answers, so nothing is charged for tier j itself."""
+        clock = self._clock
+        last = j == len(self._tiers) - 1
+        now = clock()
+        with self._cv:
+            self.retry_count += meta["retries"]
+            self.retry_backoff_s += meta["backoff"]
+            self.failover_count += len(batch)
+            if self.slo.speculate:
+                self._decoding[j] = {}
+                if prefilled is not None:
+                    # pre-invokes consumed by this chunk died with it:
+                    # they were counted committed in _take_speculation
+                    n_hit = int(np.asarray(
+                        prefilled[0], bool)[:len(batch)].sum())
+                    self.spec_committed -= n_hit
+                    self.spec_cancelled += n_hit
+            if last:
+                for r in batch:
+                    self._resolve_failed_locked(r, now)
+            else:
+                cap = self.slo.queue_cap
+                for r in batch:
+                    while (cap is not None
+                           and len(self._waiting[j + 1]) >= cap
+                           and not self._stop):
+                        self._cv.notify_all()
+                        self._cv.wait(self.IDLE_POLL)
+                    self._enqueue_locked(r, j + 1, clock())
+            self._busy[j] -= len(batch)
+            self._cv.notify_all()
+
+    def _skip_open_tier_locked(self, j: int, now: float):
+        """Tier j's breaker is open: rows waiting on it skip the tier
+        and escalate to j+1 (forward-only, no invoke, nothing charged).
+        Called with the scheduler lock held, from tier j's own worker.
+        The last tier never skips — its worker instead waits out the
+        cooldown and lets the half-open probe chunk through (a failed
+        probe resolves via the failover path), so a recovering top tier
+        starts answering again without a full outage window of sheds."""
+        rows = list(self._waiting[j])
+        self._waiting[j].clear()
+        self._busy[j] += len(rows)      # drain detection holds off
+        self.failover_count += len(rows)
+        cap = self.slo.queue_cap
+        for r in rows:
+            while (cap is not None and len(self._waiting[j + 1]) >= cap
+                   and not self._stop):
+                self._cv.notify_all()
+                self._cv.wait(self.IDLE_POLL)
+            self._enqueue_locked(r, j + 1, self._clock())
+        self._busy[j] -= len(rows)
+        self._cv.notify_all()
+
+    @staticmethod
+    def _batch_deadline(batch: list[RequestState]) -> float | None:
+        """The chunk's binding SLO deadline: the earliest row deadline —
+        a retry that would push past it serves nobody in the chunk on
+        time."""
+        return min((r.deadline for r in batch if r.deadline is not None),
+                   default=None)
+
     # -- the per-tier worker ----------------------------------------------
     def _run_chunk(self, j: int, batch: list[RequestState]):
         """Execute one chunk on tier j (no scheduler lock held)."""
@@ -467,11 +679,20 @@ class TierScheduler:
         toks, b = pad_pow2_rows(np.stack([r.tokens for r in batch]))
         prefilled = (self._take_speculation(j, batch, len(toks), b)
                      if self.slo.speculate else None)
+        meta = {"retries": 0, "backoff": 0.0}
+        tier = (self._resilient_tier(j, self._batch_deadline(batch), meta)
+                if self._resilient else self._tiers[j])
         t0 = time.perf_counter()
-        ans, cost, scores, accept = tier_step(
-            self._tiers[j], toks, j, scorer=pipe._pos_scorer,
-            threshold=None if last else thresholds[j], last=last,
-            scorer_lock=self._scorer_mu, prefilled=prefilled)
+        try:
+            ans, cost, scores, accept = tier_step(
+                tier, toks, j, scorer=pipe._pos_scorer,
+                threshold=None if last else thresholds[j], last=last,
+                scorer_lock=self._scorer_mu, prefilled=prefilled)
+        except TierFault:
+            if not self._resilient:     # no resilience layer: fatal, as
+                raise                   # any tier exception always was
+            self._failover_chunk(j, batch, prefilled, meta)
+            return
         ans, cost, scores, accept = (ans[:b], cost[:b], scores[:b],
                                      accept[:b])
         chunk_s = time.perf_counter() - t0
@@ -494,6 +715,12 @@ class TierScheduler:
                 if accept[i]:
                     cacheable.append(r)
             else:
+                if self._resilient:
+                    # remember the best-scoring rejected answer: the
+                    # failover fallback if every remaining tier is down
+                    s_i = float(scores[i])
+                    if s_i > r.fb_score:
+                        r.fb_answer, r.fb_score, r.fb_tier = ans[i], s_i, j
                 escalate.append(r)
         insert_s = 0.0
         if pipe.cache is not None and cacheable:
@@ -508,6 +735,8 @@ class TierScheduler:
             r.emb = None
         m = len(self._tiers)
         with self._cv:
+            self.retry_count += meta["retries"]
+            self.retry_backoff_s += meta["backoff"]
             self.estimators[j].observe_chunk(chunk_s, len(batch))
             self.chunks_per_tier[j] += 1
             self._fill.append(len(batch) / self.max_chunk)
@@ -544,6 +773,7 @@ class TierScheduler:
 
     def _worker(self, j: int):
         clock = self._clock
+        last = j == len(self._tiers) - 1
         try:
             while True:
                 spec = None
@@ -552,12 +782,22 @@ class TierScheduler:
                     while batch is None:
                         if self._stop:
                             return
-                        batch, wait = self._next_chunk_locked(j, clock())
+                        now = clock()
+                        if (self._health is not None and self._waiting[j]
+                                and not self._health.available(j, now)):
+                            if not last:    # open breaker: route past it
+                                self._skip_open_tier_locked(j, now)
+                                continue
+                            # last tier: wait out the cooldown — the
+                            # half-open probe (or its failover) resolves
+                            self._cv.wait(self.IDLE_POLL)
+                            continue
+                        batch, wait = self._next_chunk_locked(j, now)
                         if batch is not None:
                             break
                         # idle: maybe burn the wait on speculation —
                         # real work always wins the next loop iteration
-                        spec = self._next_speculation_locked(j, clock())
+                        spec = self._next_speculation_locked(j, now)
                         if spec is not None:
                             break
                         timeout = (self.IDLE_POLL if wait is None else
@@ -571,7 +811,22 @@ class TierScheduler:
             with self._cv:                 # driver instead of hanging it
                 self._error = e
                 self._stop = True
+                self._fail_pending_locked(e)
                 self._cv.notify_all()
+
+    def _fail_pending_locked(self, exc: BaseException):
+        """A worker died: no chunk will ever finish the admitted
+        requests still in flight, so fail their futures NOW — a caller
+        awaiting one would otherwise hang past the driver's next poll
+        (and forever, once the driver re-raised and stopped polling)."""
+        for r in self._requests:
+            if not r.done and r.future is not None and not r.future.done():
+                try:
+                    r.future.get_loop().call_soon_threadsafe(
+                        lambda f=r.future, e=exc: f.done()
+                        or f.set_exception(e))
+                except RuntimeError:        # event loop already closed
+                    pass
 
     # -- drivers -----------------------------------------------------------
     def _start(self, clock):
@@ -579,6 +834,10 @@ class TierScheduler:
             raise RuntimeError("scheduler already started; build a fresh "
                                "TierScheduler per stream")
         self._clock = clock
+        for t in self._tiers:               # wire the stream clock into
+            if isinstance(t, FaultyTier):   # fault windows and spikes
+                t.clock = clock
+                t.sleep = self._sleep
         for j in range(len(self._tiers)):
             t = threading.Thread(target=self._worker, args=(j,),
                                  name=f"tier-worker-{j}", daemon=True)
@@ -602,6 +861,11 @@ class TierScheduler:
         if clock is None:
             def clock() -> float:
                 return time.perf_counter() - t_start
+        else:
+            # an injected clock owns time: backoff and latency-spike
+            # waits are recorded in the telemetry, not slept — the test
+            # (or its fake clock) advances time itself
+            self._sleep = lambda _s: None
         self._start(clock)
         try:
             while True:
@@ -694,6 +958,26 @@ class TierScheduler:
                 "spec_chunks": list(self.spec_chunks),
                 "overlap_frac": [sb / total_s if total_s > 0 else 0.0
                                  for sb in self.spec_busy_s],
+            },
+            # resilience (None when no retry/breaker/faults are wired):
+            # retry volume and its added latency, failover escalations,
+            # degraded fallback answers, accounted sheds, and breaker
+            # trip/recovery state per tier
+            "resilience": None if not self._resilient else {
+                "retries": self.retry_count,
+                "backoff_s": self.retry_backoff_s,
+                "failovers": self.failover_count,
+                "fallback_answers": self.fallback_count,
+                "shed": self.res_shed,
+                "spec_aborted": self.spec_aborted,
+                "trips": self._health.trips if self._health else 0,
+                "recoveries": (self._health.recoveries
+                               if self._health else 0),
+                "breakers": (self._health.snapshot(total_s)
+                             if self._health else None),
+                "faults_injected": {
+                    t.name: dict(t.injected) for t in self._tiers
+                    if isinstance(t, FaultyTier)} or None,
             },
         }
 

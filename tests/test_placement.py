@@ -35,6 +35,7 @@ from repro.core.approx import CompletionCache
 from repro.core.cost import ApiCost
 from repro.core.prompt import PromptSpec
 from repro.serving.pipeline import ServingPipeline, TierSpec
+from repro.serving.resilience import BreakerConfig, RetryPolicy
 from repro.serving.sched import SLOConfig
 from repro.sharding.placement import place_params, plan_placement
 from repro.sharding.tier_mesh import (TierMeshPlan, batch_sharding,
@@ -170,6 +171,20 @@ def _run_matrix(seed: int, n: int = 16, n_tiers: int = 3,
                          slo=SLOConfig(speculate=True, spec_depth=2,
                                        spec_idle_frac=None)),
                      f"seed={seed} {pname}/speculate")
+        # resilience-enabled leg, zero faults injected: retry + breaker
+        # dials wired through both cascade paths but nothing ever fails
+        # — the fault-tolerance machinery must be observably inert
+        # (ISSUE 8: disabled-or-idle == bit-identical)
+        rp, bc = RetryPolicy(), BreakerConfig()
+        res_batch = _pipeline(mp, "host", placement, with_cache)
+        res_batch.retry, res_batch.breaker = rp, bc
+        _assert_same(ref, res_batch.serve(toks),
+                     f"seed={seed} {pname}/resilient-serve")
+        _assert_same(ref, _pipeline(mp, "host", placement,
+                                    with_cache).serve_stream(
+                         toks, arrivals, parallel=True,
+                         slo=SLOConfig(retry=rp, breaker=bc)),
+                     f"seed={seed} {pname}/resilient-sched")
     return ref
 
 

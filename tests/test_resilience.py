@@ -1,0 +1,650 @@
+"""Fault-tolerant cascade serving (repro.serving.resilience): seeded
+deterministic fault injection, retry/backoff on fake clocks, circuit
+breaker transitions, and the failover semantics through both cascade
+paths — the offline executor and the parallel tier scheduler.
+
+Tier-1 discipline: every time-dependent test runs on an injected fake
+clock (no wall-clock sleeps) — backoffs are recorded against virtual
+time, breaker cooldowns are walked by advancing a variable.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core.cascade import CascadeTier, execute_cascade
+from repro.core.cost import ApiCost
+from repro.core.prompt import PromptSpec
+from repro.serving.ingress import IngressQueue
+from repro.serving.pipeline import ServingPipeline, TierSpec
+from repro.serving.resilience import (BreakerConfig, CircuitBreaker,
+                                      FaultSpec, FaultyTier, RateLimitError,
+                                      RetryPolicy, TierFault, TierHealth,
+                                      TierTimeout, TransientError,
+                                      invoke_with_retry, wrap_tiers)
+from repro.serving.sched import (SLOConfig, TierScheduler, rank_speculation,
+                                 speculation_ev)
+
+
+def _tier(name="t", base=0.0):
+    return CascadeTier(name, lambda q, b=base: (
+        np.asarray(q, np.float64) + b, np.full(len(q), b + 1.0)))
+
+
+class _FakeClock:
+    def __init__(self):
+        self.now = 0.0
+        self.slept: list[float] = []
+
+    def __call__(self):
+        return self.now
+
+    def sleep(self, s):
+        self.slept.append(s)
+        self.now += s
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+
+
+def test_fault_spec_validation_and_parse():
+    with pytest.raises(ValueError, match="error_rate"):
+        FaultSpec(error_rate=1.5)
+    with pytest.raises(ValueError, match="<= 1"):
+        FaultSpec(error_rate=0.6, timeout_rate=0.6)
+    with pytest.raises(ValueError, match="start < end"):
+        FaultSpec(outage=(2.0, 1.0))
+    with pytest.raises(ValueError, match="max_faults"):
+        FaultSpec(max_faults=-1)
+    assert not FaultSpec().enabled
+    assert FaultSpec(outage=(0.0, 1.0)).enabled
+    sp = FaultSpec.parse("error=0.05,timeout=0.1,spike=0.2@0.03,"
+                         "rlim=1:2,outage=3:4,max=7,seed=9")
+    assert sp.error_rate == 0.05 and sp.timeout_rate == 0.1
+    assert sp.spike_rate == 0.2 and sp.spike_s == 0.03
+    assert sp.rate_limit == (1.0, 2.0) and sp.outage == (3.0, 4.0)
+    assert sp.max_faults == 7 and sp.seed == 9
+    with pytest.raises(ValueError, match="unknown"):
+        FaultSpec.parse("explode=1.0")
+    with pytest.raises(ValueError, match="key=value"):
+        FaultSpec.parse("error")
+
+
+def test_faulty_tier_deterministic_schedule():
+    """The fault sequence is a pure function of (seed, invoke index):
+    two wrappers of the same spec fire on exactly the same calls."""
+    spec = FaultSpec(error_rate=0.3, timeout_rate=0.2, seed=42)
+    chunk = np.arange(4.0)
+
+    def trace(ft):
+        out = []
+        for _ in range(40):
+            try:
+                ft.invoke(chunk)
+                out.append("ok")
+            except TierTimeout:
+                out.append("timeout")
+            except TransientError:
+                out.append("error")
+        return out
+
+    t1, t2 = FaultyTier(_tier(), spec), FaultyTier(_tier(), spec)
+    run1, run2 = trace(t1), trace(t2)
+    assert run1 == run2
+    assert run1.count("error") > 0 and run1.count("timeout") > 0
+    assert t1.injected == t2.injected
+    assert t1.calls == 40
+    # a different seed produces a different schedule
+    assert trace(FaultyTier(_tier(), FaultSpec(
+        error_rate=0.3, timeout_rate=0.2, seed=43))) != run1
+
+
+def test_faulty_tier_windows_and_spike_on_fake_clock():
+    clk = _FakeClock()
+    spec = FaultSpec(rate_limit=(1.0, 2.0), outage=(3.0, 4.0))
+    ft = FaultyTier(_tier(), spec, clock=clk, sleep=clk.sleep)
+    chunk = np.arange(3.0)
+    ft.invoke(chunk)                              # t=0: clean
+    clk.now = 1.5
+    with pytest.raises(RateLimitError):
+        ft.invoke(chunk)
+    clk.now = 3.5
+    with pytest.raises(TransientError):
+        ft.invoke(chunk)
+    clk.now = 4.5                                 # windows passed: clean
+    ft.invoke(chunk)
+    assert ft.injected["rate_limit"] == 1 and ft.injected["outage"] == 1
+    # spikes sleep on the injected sleep and still succeed
+    sp = FaultyTier(_tier(), FaultSpec(spike_rate=1.0, spike_s=0.07),
+                    clock=clk, sleep=clk.sleep)
+    a, c = sp.invoke(chunk)
+    assert clk.slept == [0.07] and len(a) == 3
+    assert sp.injected["spike"] == 1
+
+
+def test_faulty_tier_max_faults_budget():
+    ft = FaultyTier(_tier(), FaultSpec(error_rate=1.0, max_faults=2))
+    chunk = np.arange(2.0)
+    for _ in range(2):
+        with pytest.raises(TransientError):
+            ft.invoke(chunk)
+    ft.invoke(chunk)                              # budget spent: clean
+    assert ft.injected["error"] == 2
+
+
+def test_wrap_tiers_disabled_is_absent():
+    tiers = [_tier("a"), _tier("b")]
+    assert wrap_tiers(tiers, None) == tiers       # same objects
+    out = wrap_tiers(tiers, [None, FaultSpec(error_rate=0.5)])
+    assert out[0] is tiers[0] and isinstance(out[1], FaultyTier)
+    # inactive spec: also untouched
+    out = wrap_tiers(tiers, [FaultSpec(), FaultSpec()])
+    assert out[0] is tiers[0] and out[1] is tiers[1]
+    # broadcast offsets the per-tier seeds so tiers don't fault in step
+    out = wrap_tiers(tiers, FaultSpec(error_rate=0.5, seed=3))
+    assert out[0].spec.seed != out[1].spec.seed
+    with pytest.raises(ValueError, match="fault specs"):
+        wrap_tiers(tiers, [FaultSpec(error_rate=0.5)])
+
+
+def test_builder_maps_marketplace_faults_onto_learned_cascade():
+    # per-tier fault lists handed to BuildConfig are indexed by the
+    # marketplace order; the learned cascade keeps a subsequence, so the
+    # builder selects the matching entries (a 3-tier marketplace pruned
+    # to tiers [0, 2] keeps specs 0 and 2, dropping spec 1)
+    from repro.serving.builder import _select_tier_faults
+
+    specs = [None, FaultSpec(error_rate=0.5), FaultSpec(timeout_rate=0.2)]
+    assert _select_tier_faults(specs, 3, [0, 2]) == [None, specs[2]]
+    assert _select_tier_faults(specs, 3, [1]) == [specs[1]]
+    # broadcast / disabled pass straight through, length-independent
+    bcast = FaultSpec(error_rate=0.1)
+    assert _select_tier_faults(bcast, 3, [0]) is bcast
+    assert _select_tier_faults(None, 3, [0, 1]) is None
+    with pytest.raises(ValueError, match="marketplace"):
+        _select_tier_faults(specs[:2], 3, [0, 2])
+
+
+# ---------------------------------------------------------------------------
+# retry policy
+# ---------------------------------------------------------------------------
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError, match="max_attempts"):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError, match="backoff_mult"):
+        RetryPolicy(backoff_mult=0.5)
+    with pytest.raises(ValueError, match="jitter_frac"):
+        RetryPolicy(jitter_frac=1.0)
+    with pytest.raises(ValueError, match="accounting"):
+        RetryPolicy(accounting="free")
+
+
+def test_backoff_deterministic_jitter():
+    pol = RetryPolicy(backoff_s=0.1, backoff_mult=2.0, max_backoff_s=0.3,
+                      jitter_frac=0.25, seed=5)
+    for attempt, base in ((0, 0.1), (1, 0.2), (2, 0.3), (5, 0.3)):
+        b = pol.backoff(attempt, token=3)
+        assert base * 0.75 <= b <= base * 1.25
+        assert b == pol.backoff(attempt, token=3)      # deterministic
+    assert pol.backoff(0, token=3) != pol.backoff(0, token=4)
+    # zero jitter: exact exponential with cap
+    flat = RetryPolicy(backoff_s=0.1, jitter_frac=0.0, max_backoff_s=0.25)
+    assert [flat.backoff(k) for k in range(3)] == [0.1, 0.2, 0.25]
+
+
+def test_may_retry_bounded_and_deadline_aware():
+    pol = RetryPolicy(max_attempts=3, backoff_s=0.1, jitter_frac=0.0)
+    assert pol.may_retry(0, now=0.0, deadline=None)
+    assert pol.may_retry(1, now=0.0, deadline=None)
+    assert not pol.may_retry(2, now=0.0, deadline=None)   # exhausted
+    # backoff + predicted service must land before the deadline
+    assert pol.may_retry(0, now=0.0, deadline=0.5, predicted_s=0.3)
+    assert not pol.may_retry(0, now=0.0, deadline=0.5, predicted_s=0.5)
+    assert not pol.may_retry(0, now=0.45, deadline=0.5)
+
+
+def _flaky(fail_n: int, kind=TransientError):
+    """A tier whose first ``fail_n`` invokes raise ``kind``."""
+    calls = {"n": 0}
+
+    def invoke(q):
+        calls["n"] += 1
+        if calls["n"] <= fail_n:
+            raise kind(f"injected #{calls['n']}")
+        return np.asarray(q, np.float64), np.full(len(q), 2.0)
+
+    t = CascadeTier("flaky", invoke)
+    return t, calls
+
+
+def test_invoke_with_retry_success_and_accounting():
+    clk = _FakeClock()
+    pol = RetryPolicy(max_attempts=4, backoff_s=0.1, jitter_frac=0.0)
+    tier, calls = _flaky(2)
+    seen = []
+    a, c, attempts, waited = invoke_with_retry(
+        tier, np.arange(3.0), pol, clock=clk, sleep=clk.sleep,
+        on_attempt_fail=lambda k, e: seen.append(k))
+    assert attempts == 3 and calls["n"] == 3
+    assert seen == [0, 1]
+    assert waited == pytest.approx(0.1 + 0.2)
+    assert clk.now == pytest.approx(0.3)          # virtual time only
+    assert (c == 2.0).all()                       # "success": one bill
+    # "all_attempts": the successful cost is scaled by the attempt count
+    tier, _ = _flaky(2)
+    _, c, _, _ = invoke_with_retry(
+        tier, np.arange(3.0), RetryPolicy(
+            max_attempts=4, backoff_s=0.1, jitter_frac=0.0,
+            accounting="all_attempts"),
+        clock=clk, sleep=clk.sleep)
+    assert (c == 6.0).all()
+
+
+def test_invoke_with_retry_exhausted_and_deadline():
+    clk = _FakeClock()
+    pol = RetryPolicy(max_attempts=2, backoff_s=0.1, jitter_frac=0.0)
+    tier, calls = _flaky(99)
+    with pytest.raises(TransientError):
+        invoke_with_retry(tier, np.arange(2.0), pol,
+                          clock=clk, sleep=clk.sleep)
+    assert calls["n"] == 2                        # bounded
+    # a deadline that forbids the retry fails fast on attempt 1
+    tier, calls = _flaky(99)
+    with pytest.raises(TransientError):
+        invoke_with_retry(tier, np.arange(2.0),
+                          RetryPolicy(max_attempts=5, backoff_s=0.1,
+                                      jitter_frac=0.0),
+                          clock=clk, sleep=clk.sleep,
+                          deadline=clk.now + 0.05)
+    assert calls["n"] == 1
+    # non-TierFault exceptions are programming errors: never retried
+    boom = CascadeTier("boom", lambda q: 1 / 0)
+    with pytest.raises(ZeroDivisionError):
+        invoke_with_retry(boom, np.arange(2.0), pol,
+                          clock=clk, sleep=clk.sleep)
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker
+# ---------------------------------------------------------------------------
+
+
+def test_breaker_config_validation():
+    with pytest.raises(ValueError, match="window"):
+        BreakerConfig(window=0)
+    with pytest.raises(ValueError, match="fail_rate"):
+        BreakerConfig(fail_rate=0.0)
+    with pytest.raises(ValueError, match="min_samples"):
+        BreakerConfig(window=4, min_samples=5)
+    with pytest.raises(ValueError, match="cooldown_s"):
+        BreakerConfig(cooldown_s=-1.0)
+
+
+def test_breaker_state_machine_on_explicit_now():
+    b = CircuitBreaker(BreakerConfig(window=4, fail_rate=0.5,
+                                     min_samples=2, cooldown_s=1.0))
+    assert b.state(0.0) == "closed" and b.available(0.0)
+    assert not b.record(False, 0.0)               # 1 sample < min_samples
+    assert b.record(False, 0.1)                   # 2/2 failed: TRIP
+    assert b.state(0.2) == "open" and not b.available(0.2)
+    assert b.trips == 1
+    # cooldown elapses -> half-open admits the probe
+    assert b.state(1.2) == "half_open" and b.available(1.2)
+    # failed probe re-trips for another cooldown
+    assert b.record(False, 1.3)
+    assert b.state(1.4) == "open" and b.trips == 2
+    # successful probe recovers
+    assert b.state(2.4) == "half_open"
+    assert not b.record(True, 2.5)
+    assert b.state(2.6) == "closed" and b.recoveries == 1
+    snap = b.snapshot(2.6)
+    assert snap["state"] == "closed" and snap["trips"] == 2
+    # a mixed window below the rate stays closed
+    for ok in (True, True, True, False):
+        b.record(ok, 3.0)
+    assert b.state(3.0) == "closed"
+
+
+def test_tier_health_registry_sums_counters():
+    h = TierHealth(3, BreakerConfig(window=2, fail_rate=0.5,
+                                    min_samples=1, cooldown_s=10.0))
+    assert h.record(1, False, 0.0)                # tier 1 trips
+    assert not h.available(1, 0.1)
+    assert h.available(0, 0.1) and h.available(2, 0.1)
+    h.record(1, True, 20.0)                       # half-open probe: recover
+    assert h.trips == 1 and h.recoveries == 1
+    assert len(h.snapshot(20.0)) == 3
+
+
+def test_slo_config_validates_resilience_dials():
+    with pytest.raises(ValueError, match="retry"):
+        SLOConfig(retry=3)
+    with pytest.raises(ValueError, match="breaker"):
+        SLOConfig(breaker="on")
+    slo = SLOConfig(retry=RetryPolicy(), breaker=BreakerConfig())
+    assert slo.retry.max_attempts == 3
+
+
+# ---------------------------------------------------------------------------
+# offline executor failover (core.cascade.execute_cascade)
+# ---------------------------------------------------------------------------
+
+
+def _mk_tiers():
+    return [_tier("a", 0.0), _tier("b", 10.0), _tier("c", 100.0)]
+
+
+def _scorer(q, a, j):
+    return np.full(len(q), 0.9 if j else 0.3)
+
+
+def test_offline_faults_without_dials_crash():
+    """No retry, no breaker: an injected fault is fatal — the
+    no-resilience baseline keeps failing loudly."""
+    ft = wrap_tiers(_mk_tiers(), FaultSpec(error_rate=1.0, seed=1))
+    with pytest.raises(TransientError):
+        execute_cascade(ft, [0.5, 0.5], _scorer, np.arange(8.0),
+                        batch_size=4)
+
+
+def test_offline_failover_past_sick_tier():
+    clk = _FakeClock()
+    specs = [None, FaultSpec(error_rate=1.0, seed=2), None]
+    res = execute_cascade(
+        wrap_tiers(_mk_tiers(), specs), [0.5, 0.5], _scorer,
+        np.arange(8.0), batch_size=2,
+        retry=RetryPolicy(max_attempts=2, backoff_s=0.01, jitter_frac=0.0),
+        breaker=BreakerConfig(window=4, fail_rate=0.5, min_samples=2,
+                              cooldown_s=100.0),
+        clock=clk, sleep=clk.sleep)
+    # every row failed over tier b and answered at tier c
+    assert (res["stopped_at"] == 2).all()
+    assert np.array_equal(np.asarray(res["answers"], np.float64),
+                          np.arange(8.0) + 100.0)
+    r = res["resilience"]
+    assert r["failovers"] == 8 and r["retries"] == 4
+    assert r["trips"] == 1 and r["shed"] == 0
+    assert r["breakers"][1]["state"] == "open"
+    # failed invokes charge nothing: cost = tier a + tier c only
+    assert (res["cost"] == 1.0 + 101.0).all()
+
+
+def test_offline_last_tier_failure_falls_back_or_sheds():
+    # last tier down: rows fall back to their best-scoring earlier
+    # rejected answer (tier b, score 0.9 > tier a's 0.3)
+    specs = [None, None, FaultSpec(error_rate=1.0, seed=3)]
+    res = execute_cascade(
+        wrap_tiers(_mk_tiers(), specs), [0.95, 0.95], _scorer,
+        np.arange(6.0), batch_size=3, retry=RetryPolicy(max_attempts=1))
+    assert (res["stopped_at"] == 1).all()
+    assert np.array_equal(np.asarray(res["answers"], np.float64),
+                          np.arange(6.0) + 10.0)
+    assert (res["scores"] == 0.9).all()
+    assert res["resilience"]["fallback_answers"] == 6
+    # every tier down: nothing was ever scored -> accounted shed
+    specs = [FaultSpec(error_rate=1.0, seed=4),
+             FaultSpec(error_rate=1.0, seed=5),
+             FaultSpec(error_rate=1.0, seed=6)]
+    res = execute_cascade(
+        wrap_tiers(_mk_tiers(), specs), [0.5, 0.5], _scorer,
+        np.arange(6.0), batch_size=3, retry=RetryPolicy(max_attempts=1))
+    assert (res["stopped_at"] == -2).all()
+    assert (res["cost"] == 0.0).all()
+    assert res["resilience"]["shed"] == 6
+
+
+def test_offline_shared_tier_health_skips_open_tier():
+    """A live TierHealth shared across calls: the first call trips tier
+    b's breaker; the second call starts with it open and never invokes
+    it at all."""
+    health = TierHealth(3, BreakerConfig(window=4, fail_rate=0.5,
+                                         min_samples=1, cooldown_s=1e9))
+    clk = _FakeClock()
+    specs = [None, FaultSpec(error_rate=1.0, seed=7), None]
+    execute_cascade(wrap_tiers(_mk_tiers(), specs), [0.5, 0.5], _scorer,
+                    np.arange(4.0), batch_size=4,
+                    retry=RetryPolicy(max_attempts=1), breaker=health,
+                    clock=clk, sleep=clk.sleep)
+    assert health.trips == 1
+    tiers = _mk_tiers()
+    counted = FaultyTier(tiers[1], FaultSpec())    # inert wrapper counts
+    tiers[1] = counted
+    res = execute_cascade(tiers, [0.5, 0.5], _scorer, np.arange(4.0),
+                          batch_size=4, breaker=health,
+                          clock=clk, sleep=clk.sleep)
+    assert counted.calls == 0                      # skipped outright
+    assert res["resilience"]["failovers"] == 4
+    assert (res["stopped_at"] == 2).all()
+    # size mismatch is an error, not silent misrouting
+    with pytest.raises(ValueError, match="TierHealth"):
+        execute_cascade(_mk_tiers()[:2], [0.5], _scorer, np.arange(2.0),
+                        breaker=health)
+
+
+def test_offline_zero_faults_bit_identical():
+    """Retry + breaker wired but nothing fails: every output is
+    bit-identical to the plain executor."""
+    q = np.arange(16.0)
+    ref = execute_cascade(_mk_tiers(), [0.5, 0.5], _scorer, q, batch_size=4)
+    assert "resilience" not in ref
+    res = execute_cascade(_mk_tiers(), [0.5, 0.5], _scorer, q, batch_size=4,
+                          retry=RetryPolicy(), breaker=BreakerConfig())
+    for k in ("answers", "cost", "stopped_at"):
+        assert np.array_equal(np.asarray(ref[k]), np.asarray(res[k])), k
+    assert np.array_equal(ref["scores"], res["scores"], equal_nan=True)
+    assert ref["tier_counts"] == res["tier_counts"]
+    assert ref["accepted_counts"] == res["accepted_counts"]
+    r = res["resilience"]
+    assert r["retries"] == 0 and r["failovers"] == 0 and r["trips"] == 0
+
+
+# ---------------------------------------------------------------------------
+# parallel scheduler failover (repro.serving.sched)
+# ---------------------------------------------------------------------------
+
+
+def _toy_pipeline(n_tiers=2, faults=None, retry=None, breaker=None,
+                  batch_size=8, answer_hook=None):
+    """The test_sched toy marketplace: even leading token accepts at
+    tier 0, odd escalates; middle tiers (n_tiers=3) score 0.1 too."""
+    def mk(v):
+        def answer(t):
+            if answer_hook is not None:
+                answer_hook(v, t)
+            return np.full(len(t), v, np.int32)
+        return answer
+
+    tiers = [TierSpec(f"t{j}", mk(j), ApiCost(10.0 * 3 ** j,
+                                              10.0 * 3 ** j, 0.0),
+                      prompt=PromptSpec(tuple(range(j + 1)), 100, 40))
+             for j in range(n_tiers)]
+
+    def scorer(t, ans):
+        return np.where(t[:, 0] % 2 == 0, 0.9, 0.1)
+
+    return ServingPipeline(
+        tiers=tiers, thresholds=[0.5] * (n_tiers - 1), scorer=scorer,
+        full_prompt_tokens=840, pad_token=-1, batch_size=batch_size,
+        faults=faults, retry=retry, breaker=breaker)
+
+
+def _tokens(n):
+    toks = np.arange(n * 4, dtype=np.int32).reshape(n, 4)
+    toks[:, 0] = np.arange(n)
+    return toks
+
+
+def test_scheduler_transient_faults_absorbed_by_retry():
+    """Transient errors + a generous retry budget: the trace completes
+    with the exact answers of a clean run, and the retries are visible
+    in the resilience telemetry."""
+    toks = _tokens(24)
+    clean = TierScheduler(_toy_pipeline(), max_chunk=4).run_trace(toks)
+    pol = RetryPolicy(max_attempts=8, backoff_s=0.0005)
+    faults = [FaultSpec(error_rate=0.5, timeout_rate=0.2, seed=11), None]
+    sched = TierScheduler(_toy_pipeline(faults=faults, retry=pol),
+                          max_chunk=4, slo=SLOConfig(retry=pol))
+    res = sched.run_trace(toks)
+    assert np.array_equal(clean.answers, res.answers)
+    assert (clean.cost == res.cost).all()
+    r = res.ingress["resilience"]
+    assert r["retries"] > 0
+    assert r["faults_injected"]["t0"]["error"] > 0
+    assert "resilience:" in res.summary()
+    # the clean scheduler reports no resilience block at all
+    assert clean.ingress["resilience"] is None
+
+
+def test_scheduler_outage_trips_breaker_and_fails_over():
+    """The acceptance scenario: a sustained mid-tier outage under a
+    Poisson trace — the breaker trips, rows escalate past the sick tier,
+    every request resolves, zero crashed workers."""
+    toks = _tokens(24)
+    arrivals = np.linspace(0.0, 0.01, 24)
+    slo = SLOConfig(retry=RetryPolicy(max_attempts=2, backoff_s=0.0005),
+                    breaker=BreakerConfig(window=4, fail_rate=0.5,
+                                          min_samples=2, cooldown_s=30.0))
+    faults = [None, FaultSpec(error_rate=1.0, seed=7), None]
+    sched = TierScheduler(
+        _toy_pipeline(n_tiers=3, faults=faults, retry=slo.retry,
+                      breaker=slo.breaker),
+        max_chunk=8, slo=slo)
+    res = sched.run_trace(toks, arrivals)
+    assert (res.stopped_at != -1).all()            # every request resolved
+    assert set(np.unique(res.stopped_at)) == {0, 2}  # nobody stops at t1
+    r = res.ingress["resilience"]
+    assert r["trips"] >= 1 and r["failovers"] > 0
+    assert r["breakers"][1]["state"] in ("open", "half_open")
+    # odd rows answered by tier 2 (value 2), evens by tier 0
+    odd = toks[:, 0] % 2 == 1
+    assert (res.answers[odd] == 2).all() and (res.answers[~odd] == 0).all()
+
+
+def test_scheduler_last_tier_failure_degrades_to_fallback():
+    """The last tier is down: rows that reach it resolve to their
+    best-scoring earlier rejected answer, marked degraded — the trace
+    still completes."""
+    toks = _tokens(16)
+    pol = RetryPolicy(max_attempts=2, backoff_s=0.0005)
+    faults = [None, FaultSpec(error_rate=1.0, seed=9)]
+    sched = TierScheduler(_toy_pipeline(faults=faults, retry=pol),
+                          max_chunk=8, slo=SLOConfig(retry=pol))
+    res = sched.run_trace(toks)
+    odd = toks[:, 0] % 2 == 1
+    assert (res.stopped_at[odd] == 0).all()        # fallback = tier 0
+    assert (res.answers[odd] == 0).all()
+    assert (res.stopped_at[~odd] == 0).all()       # evens: normal accept
+    r = res.ingress["resilience"]
+    assert r["fallback_answers"] == int(odd.sum())
+    assert res.ingress["degraded"] >= int(odd.sum())
+
+
+def test_scheduler_every_tier_down_sheds_accountably():
+    toks = _tokens(8)
+    pol = RetryPolicy(max_attempts=1)
+    faults = [FaultSpec(error_rate=1.0, seed=3),
+              FaultSpec(error_rate=1.0, seed=4)]
+    sched = TierScheduler(_toy_pipeline(faults=faults, retry=pol),
+                          max_chunk=8, slo=SLOConfig(retry=pol))
+    res = sched.run_trace(toks)
+    assert (res.stopped_at == -2).all()
+    assert (res.cost == 0.0).all()
+    assert res.ingress["resilience"]["shed"] == 8
+
+
+def test_scheduler_zero_faults_with_dials_bit_identical():
+    toks = _tokens(24)
+    ref = TierScheduler(_toy_pipeline(), max_chunk=8).run_trace(toks)
+    slo = SLOConfig(retry=RetryPolicy(), breaker=BreakerConfig())
+    res = TierScheduler(_toy_pipeline(), max_chunk=8, slo=slo).run_trace(toks)
+    assert np.array_equal(ref.answers, res.answers)
+    assert (ref.cost == res.cost).all()
+    assert np.array_equal(ref.stopped_at, res.stopped_at)
+    assert ref.tier_counts == res.tier_counts
+    r = res.ingress["resilience"]
+    assert r["retries"] == 0 and r["failovers"] == 0 and r["trips"] == 0
+
+
+def test_worker_crash_fails_pending_futures():
+    """A non-TierFault tier crash mid-trace must surface promptly: the
+    driver raises AND every pending per-request future is failed (not
+    left hanging for a consumer awaiting it)."""
+    calls = {"n": 0}
+
+    def hook(v, t):
+        if v == 1:
+            calls["n"] += 1
+            if calls["n"] == 2:
+                raise ValueError("tier exploded mid-stream")
+
+    async def go():
+        pipe = _toy_pipeline(answer_hook=hook, batch_size=4)
+        sched = TierScheduler(pipe, max_chunk=4)
+        queue = IngressQueue()
+        reqs = queue.submit_burst(_tokens(16), with_future=True)
+        queue.close()
+        with pytest.raises(ValueError, match="exploded"):
+            await asyncio.wait_for(sched.serve_async(queue), timeout=30.0)
+        # every future is settled — finished rows with results, the rest
+        # with the crash exception; none is left pending
+        hung = [r for r in reqs if not r.future.done()]
+        assert not hung
+        failed = [r for r in reqs
+                  if r.future.done() and r.future.exception() is not None]
+        assert failed, "no future carried the crash"
+        for r in failed:
+            assert "exploded" in str(r.future.exception())
+
+    asyncio.run(go())
+
+
+def test_worker_crash_still_fatal_with_resilience_on():
+    """Resilience absorbs TierFault only: a programming error in a tier
+    still tears the stream down even with retry/breaker dials set."""
+    def hook(v, t):
+        if v == 0:
+            raise KeyError("bug")
+
+    slo = SLOConfig(retry=RetryPolicy(), breaker=BreakerConfig())
+    sched = TierScheduler(_toy_pipeline(answer_hook=hook, retry=slo.retry,
+                                        breaker=slo.breaker),
+                          max_chunk=8, slo=slo)
+    with pytest.raises(KeyError):
+        sched.run_trace(_tokens(8))
+
+
+# ---------------------------------------------------------------------------
+# speculation EV ranking (sched.policy)
+# ---------------------------------------------------------------------------
+
+
+class _Row:
+    def __init__(self, probs):
+        self.probs = probs
+
+
+def test_speculation_ev_math():
+    # P(reach) = prod of reject probabilities over [cur, target)
+    assert speculation_ev([0.1, 0.2], 0, 2, 2.0) == \
+        pytest.approx(0.9 * 0.8 * 2.0)
+    assert speculation_ev([0.1, 0.2], 1, 2, 2.0) == pytest.approx(1.6)
+    # cold (no router): EV is the bare predicted service time
+    assert speculation_ev(None, 0, 2, 0.7) == 0.7
+
+
+def test_rank_speculation_orders_by_ev_and_keeps_queue_order():
+    rows = [_Row([0.9, 0.0]), _Row([0.1, 0.0]),
+            _Row([0.5, 0.0]), _Row([0.0, 0.0])]
+    # EVs at target=1: 0.1, 0.9, 0.5, 1.0 -> best two are rows 3 and 1,
+    # returned in queue order (1 before 3)
+    out = rank_speculation(rows, [0, 0, 0, 0], 1, 1.0, cap=2)
+    assert out == [rows[1], rows[3]]
+    # under-cap: untouched (and not re-ordered)
+    assert rank_speculation(rows, [0] * 4, 1, 1.0, cap=4) == rows
+    # cold rows all tie -> stable: the first `cap` in queue order
+    cold = [_Row(None) for _ in range(4)]
+    assert rank_speculation(cold, [0] * 4, 1, 1.0, cap=2) == cold[:2]
