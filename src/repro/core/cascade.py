@@ -377,15 +377,21 @@ def execute_cascade(tiers: Sequence[CascadeTier], thresholds: Sequence[float],
                     def _fail(_attempt, _exc):
                         fails[0] += 1
 
+                    def _waited(w):
+                        # credited per backoff, not from the returned
+                        # total, so a terminally-failed chunk's wasted
+                        # backoff seconds still land in the telemetry
+                        rmeta["backoff_s"] += w
+
                     try:
-                        a_, c_, attempts, waited = invoke_with_retry(
+                        a_, c_, attempts, _ = invoke_with_retry(
                             _t, ch, retry, clock=clock, sleep=sleep,
-                            token=_j, on_attempt_fail=_fail)
+                            token=_j, on_attempt_fail=_fail,
+                            on_backoff=_waited)
                     except TierFault:
                         rmeta["retries"] += max(0, fails[0] - 1)
                         raise
                     rmeta["retries"] += attempts - 1
-                    rmeta["backoff_s"] += waited
                     return a_, c_
 
                 eff_tier = CascadeTier(tier.name, _call)

@@ -9,6 +9,8 @@ Demo (CPU):
       --deadline-ms 100 --queue-cap 64 --overload degrade   # SLO mode
   PYTHONPATH=src python -m repro.launch.serve --requests 200 \\
       --contextual --budget-rate 3e-5     # entry routing + spend governor
+  PYTHONPATH=src python -m repro.launch.serve --requests 200 \\
+      --assign --window-budget 1e-3       # budgeted window assignment
   PYTHONPATH=src python -m repro.launch.serve --requests 200 --stream \\
       --devices 4 --on-device-compact     # per-tier device placement
   PYTHONPATH=src python -m repro.launch.serve --requests 200 --stream \\
@@ -140,6 +142,25 @@ def main():
     ap.add_argument("--entry-bar", type=float, default=0.5,
                     help="contextual mode: predicted-accept probability "
                          "needed to enter a tier")
+    ap.add_argument("--assign", action="store_true",
+                    help="window-assignment routing (third mode, beside "
+                         "the fixed cascade and --contextual): score "
+                         "each arrival window's (query, tier) grid with "
+                         "a trained meta-model and solve every entry "
+                         "tier jointly, on device, under a per-window "
+                         "$ budget and per-tier capacity caps")
+    ap.add_argument("--window-size", type=int, default=32,
+                    help="assign mode: queries assigned together per "
+                         "window")
+    ap.add_argument("--window-budget", type=float, default=None,
+                    help="assign mode: $ per full window (pro-rated to "
+                         "actual fill); default derives the budget from "
+                         "--budget-rate's governor, or unbounded with "
+                         "neither")
+    ap.add_argument("--capacity-frac", type=float, default=None,
+                    help="assign mode: cap each tier at this fraction "
+                         "of a window (derated by live tier utilization "
+                         "on the stream scheduler)")
     ap.add_argument("--budget-rate", type=float, default=None,
                     help="target spend rate (USD/query): an online "
                          "governor shifts the cascade thresholds and "
@@ -205,6 +226,12 @@ def main():
     ap.add_argument("--breaker-cooldown-ms", type=float, default=500.0,
                     help="seconds(ms) an open breaker waits before its "
                          "half-open probe")
+    ap.add_argument("--virtual-clock", action="store_true",
+                    help="batch mode: run the offline executor's "
+                         "resilience path on a virtual clock — fault "
+                         "windows, retry backoff and latency spikes "
+                         "advance virtual time instead of wall-"
+                         "sleeping, with identical accounting")
     ap.add_argument("--on-device-compact", nargs="?", const="device",
                     choices=["device", "pallas"], default=None,
                     help="keep the cascade's pending-set compaction on "
@@ -242,6 +269,21 @@ def main():
     if args.serial and (args.contextual or args.budget_rate is not None):
         ap.error("--contextual/--budget-rate run on the parallel "
                  "scheduler; drop --serial")
+    if args.assign and args.serial:
+        ap.error("--assign runs on the batch path or the parallel "
+                 "scheduler; drop --serial")
+    if args.assign and args.contextual:
+        ap.error("--assign and --contextual are different routing "
+                 "modes; pick one")
+    if not args.assign and (args.window_budget is not None
+                            or args.capacity_frac is not None):
+        ap.error("--window-budget/--capacity-frac are assign-mode "
+                 "dials; add --assign")
+    if args.assign and args.window_size < 1:
+        ap.error("--window-size must be >= 1")
+    if args.virtual_clock and args.stream:
+        ap.error("--virtual-clock drives the offline batch executor; "
+                 "drop --stream (the stream scheduler owns its clock)")
     if args.overload != "reject" and args.queue_cap is None:
         ap.error("--overload degrade only acts on a bounded queue; "
                  "set --queue-cap")
@@ -269,6 +311,12 @@ def main():
         from repro.serving.resilience import BreakerConfig
         breaker_cfg = BreakerConfig(
             cooldown_s=args.breaker_cooldown_ms / 1e3)
+    assign_cfg = None
+    if args.assign:
+        from repro.serving.assign import AssignConfig
+        assign_cfg = AssignConfig(window_size=args.window_size,
+                                  window_budget=args.window_budget,
+                                  capacity_frac=args.capacity_frac)
 
     pipe, _ = build_pipeline(BuildConfig(
         task=args.task, tiers=tuple(args.tiers.split(",")),
@@ -276,7 +324,7 @@ def main():
         enable_cache=not args.no_cache,
         enable_prompt_adaptation=not args.no_prompt_adaptation,
         contextual=args.contextual, entry_bar=args.entry_bar,
-        budget_rate=args.budget_rate,
+        budget_rate=args.budget_rate, assign=assign_cfg,
         governor_window=args.governor_window,
         place_tiers=args.devices is not None,
         shard_tiers=mesh_shape is not None, mesh_shape=mesh_shape,
@@ -311,6 +359,10 @@ def main():
                 retry=retry_pol, breaker=breaker_cfg)
             res = pipe.serve_stream(test.tokens, arrivals,
                                     max_chunk=args.max_chunk, slo=slo)
+    elif args.virtual_clock:
+        from repro.serving.resilience import VirtualClock
+        vc = VirtualClock()
+        res = pipe.serve(test.tokens, clock=vc, sleep=vc.sleep)
     else:
         res = pipe.serve(test.tokens)
     served = res.stopped_at != -2

@@ -1,0 +1,38 @@
+"""Fleet-scale window assignment: the third routing mode.
+
+FrugalGPT's cascade routes every query greedily and independently. At
+fleet scale the right abstraction is an *assignment problem* over an
+arrival window: a meta-model scores each (query, tier) pair
+(``assign.meta`` — predicted success probability and expected
+downstream cost, the meta-modeling framing of Šakota et al. combined
+with Zhang et al.'s budget-constrained entry rule), and a jit-compiled
+on-device solver (``assign.solver`` — LP relaxation via iterative
+proportional scaling + pair-move local search) picks entry tiers that
+maximize expected accuracy under a global $/window budget and per-tier
+capacity caps. ``assign.window`` accumulates arrivals into windows and
+dispatches through the existing ``execute_cascade(entry=)`` mechanism.
+
+Opt-in beside fixed-threshold and contextual entry routing:
+``ServingStrategy(mode="assign", assigner=...)`` /
+``BuildConfig(assign=AssignConfig(...))`` — off means structurally
+absent from every serving path.
+"""
+from repro.serving.assign.meta import (WindowMeta, correctness_labels,
+                                       train_window_meta)
+from repro.serving.assign.solver import (SOLVER_METHODS, SolverConfig,
+                                         pow2_rows, solve_assignment)
+from repro.serving.assign.window import (AssignConfig, WindowAssigner,
+                                         WindowBuffer)
+
+__all__ = [
+    "AssignConfig",
+    "SOLVER_METHODS",
+    "SolverConfig",
+    "WindowAssigner",
+    "WindowBuffer",
+    "WindowMeta",
+    "correctness_labels",
+    "pow2_rows",
+    "solve_assignment",
+    "train_window_meta",
+]

@@ -1,0 +1,197 @@
+"""Window meta-model: per-(query, tier) success and downstream cost.
+
+The contextual router (``strategy.router``) predicts, per query, which
+cascade position would *accept* — and picks an entry greedily against a
+bar. The assignment subsystem needs more: for a whole arrival window at
+once, an (n × m) matrix of what each entry choice is *worth* and what
+it is *expected to cost*, so a global solver can trade queries against
+each other under a shared budget (Šakota et al.'s meta-modeling framing
+combined with Zhang et al.'s budget-constrained entry rule).
+
+``WindowMeta`` is a two-head MLP over the same scorer-encoder
+embeddings the router and the completion cache already use (no extra
+encoder): a shared gelu trunk with an *accept* head (would position
+k's answer clear its threshold — the router's target, reused verbatim
+via ``strategy.router.accept_labels``) and a *correct* head (would
+position k's answer actually be right — supervised by the recorded
+correctness of the offline build's MarketData). The two heads compose
+into entry-conditional expectations by unrolling the cascade chain:
+entering at ``e``, the query reaches position ``k`` with probability
+``prod_{l in [e, k)} (1 - p_acc[l])``, stops there with probability
+``reach * p_acc[k]`` (the final position stops unconditionally), and
+pays that position's price whenever it reaches it. Hence
+
+    utility[:, e]  = sum_k stop[k | e] * p_correct[:, k]
+    exp_cost[:, e] = sum_{k >= e} reach[k | e] * price[:, k]
+
+— expected answer quality and expected realized $ of entering each
+query at each tier, exactly the matrices ``assign.solver`` consumes.
+This also subsumes the cost-aware-entry follow-up: expected *downstream*
+cost, not a single accept bar, is what the assignment optimizes.
+
+Prices are per-(query, tier) and exact (adapted-prompt token counts via
+``ServingPipeline._tier_cost``), passed in at scoring time; the chain
+composition itself is one jitted function shared by every instance.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training.optim import OptConfig, adamw_update, init_opt_state
+
+
+def _meta_forward(params, emb):
+    """(n, d) embeddings -> accept and correct logits, both (n, m)."""
+    h = jax.nn.gelu(emb @ params["w1"] + params["b1"])
+    return h @ params["wa"] + params["ba"], h @ params["wc"] + params["bc"]
+
+
+def _chain_scores(p_acc, p_cor, prices):
+    """Compose head probabilities into entry-conditional expectations.
+
+    All (n, m). Unrolled over the (small, static) tier count: for each
+    entry column ``e`` walk positions ``e..m-1`` carrying the reach
+    probability. Returns (utility, exp_cost), both (n, m).
+    """
+    n, m = p_acc.shape
+    util_cols, cost_cols = [], []
+    for e in range(m):
+        reach = jnp.ones((n,), p_acc.dtype)
+        util = jnp.zeros((n,), p_acc.dtype)
+        cost = jnp.zeros((n,), p_acc.dtype)
+        for k in range(e, m):
+            cost = cost + reach * prices[:, k]
+            stop = reach if k == m - 1 else reach * p_acc[:, k]
+            util = util + stop * p_cor[:, k]
+            reach = reach * (1.0 - p_acc[:, k])
+        util_cols.append(util)
+        cost_cols.append(cost)
+    return jnp.stack(util_cols, axis=1), jnp.stack(cost_cols, axis=1)
+
+
+@functools.cache
+def _jitted_scores():
+    """One jitted forward+chain shared by every WindowMeta — shapes are
+    part of the jit cache key, so window sizes pad to pow2 upstream."""
+
+    def fwd(params, emb, prices):
+        acc_logit, cor_logit = _meta_forward(params, emb)
+        return _chain_scores(jax.nn.sigmoid(acc_logit),
+                             jax.nn.sigmoid(cor_logit), prices)
+
+    return jax.jit(fwd)
+
+
+@functools.cache
+def _jitted_predict():
+    def fwd(params, emb):
+        acc_logit, cor_logit = _meta_forward(params, emb)
+        return jax.nn.sigmoid(acc_logit), jax.nn.sigmoid(cor_logit)
+
+    return jax.jit(fwd)
+
+
+def init_meta_params(key, d_in: int, n_tiers: int, hidden: int = 64):
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale = 1.0 / np.sqrt(d_in)
+    return {
+        "w1": scale * jax.random.normal(k1, (d_in, hidden)),
+        "b1": jnp.zeros((hidden,)),
+        "wa": 0.02 * jax.random.normal(k2, (hidden, n_tiers)),
+        "ba": jnp.zeros((n_tiers,)),
+        "wc": 0.02 * jax.random.normal(k3, (hidden, n_tiers)),
+        "bc": jnp.zeros((n_tiers,)),
+    }
+
+
+def correctness_labels(correct: np.ndarray, apis) -> np.ndarray:
+    """(n, m) supervision for the correct head: the recorded correctness
+    of each cascade position's API on each build query."""
+    return np.asarray(correct)[:, np.asarray(apis)].astype(np.float32)
+
+
+def train_window_meta(emb: np.ndarray, accept: np.ndarray,
+                      correct: np.ndarray, *, hidden: int = 64,
+                      steps: int = 300, batch: int = 256,
+                      lr: float = 3e-3, seed: int = 0) -> "WindowMeta":
+    """Train both heads jointly with BCE; mirrors
+    ``strategy.router.train_entry_router`` (same optimizer, same
+    minibatch discipline) so build times stay comparable.
+
+    emb (n, d) scorer-encoder embeddings; accept (n, m) from
+    ``strategy.router.accept_labels``; correct (n, m) from
+    ``correctness_labels``.
+    """
+    emb = jnp.asarray(emb, jnp.float32)
+    accept = jnp.asarray(accept, jnp.float32)
+    correct = jnp.asarray(correct, jnp.float32)
+    n, d = emb.shape
+    m = accept.shape[1]
+    params = init_meta_params(jax.random.PRNGKey(seed), d, m, hidden)
+    opt = OptConfig(lr=lr, warmup=10, total_steps=steps, weight_decay=1e-4)
+    state = init_opt_state(params)
+    rng = np.random.default_rng(seed)
+
+    def bce(logit, y):
+        return jnp.mean(jnp.maximum(logit, 0) - logit * y
+                        + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+    @jax.jit
+    def step_fn(params, state, x, ya, yc):
+        def loss_fn(p):
+            acc_logit, cor_logit = _meta_forward(p, x)
+            return bce(acc_logit, ya) + bce(cor_logit, yc)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, state, _ = adamw_update(opt, params, grads, state)
+        return params, state, loss
+
+    for _ in range(steps):
+        idx = rng.choice(n, size=min(batch, n), replace=False)
+        params, state, _ = step_fn(params, state, emb[idx],
+                                   accept[idx], correct[idx])
+    return WindowMeta(params=params, n_tiers=m)
+
+
+@dataclasses.dataclass
+class WindowMeta:
+    """Trained two-head window scorer over scorer-encoder embeddings."""
+
+    params: dict
+    n_tiers: int
+
+    def predict(self, emb: np.ndarray):
+        """emb (n, d) -> (accept, correct) probabilities, both (n, m)."""
+        emb = np.atleast_2d(np.asarray(emb, np.float32))
+        pa, pc = _jitted_predict()(self.params, jnp.asarray(emb))
+        return np.asarray(pa, np.float64), np.asarray(pc, np.float64)
+
+    def scores(self, emb: np.ndarray, prices: np.ndarray):
+        """emb (n, d), prices (n, m) $ per (query, tier) -> the solver's
+        (utility, exp_cost) matrices, both (n, m) float64.
+
+        Prices are normalized by their max before the f32 device chain
+        and rescaled after, so marketplace magnitudes (~1e-5 $/query)
+        keep full precision.
+        """
+        emb = np.atleast_2d(np.asarray(emb, np.float32))
+        prices = np.atleast_2d(np.asarray(prices, np.float64))
+        if prices.shape != (emb.shape[0], self.n_tiers):
+            raise ValueError(f"prices {prices.shape} must be "
+                             f"({emb.shape[0]}, {self.n_tiers})")
+        p_scale = max(float(prices.max()), 1e-12)
+        util, cost = _jitted_scores()(
+            self.params, jnp.asarray(emb),
+            jnp.asarray((prices / p_scale).astype(np.float32)))
+        return (np.asarray(util, np.float64),
+                np.asarray(cost, np.float64) * p_scale)
+
+    def accept_probs(self, emb: np.ndarray) -> np.ndarray:
+        """Router-compatible accept probabilities (n, m) — lets the
+        greedy entry rule and the assignment share one trained model in
+        head-to-head comparisons."""
+        return self.predict(emb)[0]

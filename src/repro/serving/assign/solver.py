@@ -1,0 +1,416 @@
+"""On-device budgeted window assignment: LP relaxation + greedy swaps.
+
+The assignment problem one arrival window poses (ROADMAP item 2, the
+meta-modeling framing of Šakota et al. combined with Zhang et al.'s
+budget-constrained entry rule): given per-(query, tier) predicted
+utilities ``u`` (expected answer quality entering the cascade at that
+tier, ``assign.meta``) and expected downstream costs ``c``, choose one
+entry tier per query
+
+    maximize    sum_i u[i, a_i]
+    subject to  sum_i c[i, a_i] <= budget          (global $/window)
+                |{i : a_i = j}| <= caps[j]          (per-tier capacity)
+
+Everything runs inside ONE jitted solve over pow2-padded window shapes
+so a stream of ragged windows never retraces — the same discipline
+``serving.ingress.pad_pow2_rows`` applies to embed/scorer calls. Padded
+rows carry ``valid = 0`` and zero cost/utility, so they influence
+nothing; iteration counts are static (from ``SolverConfig``), making
+the solve a fixed-shape dataflow graph. Inputs are normalized on the
+host (costs by their max, utilities to unit span) so the device math is
+well-conditioned in default f32; the reported cost/utility accounting
+is redone on the host in f64 at the original scales.
+
+Two cooperating stages (``method`` picks):
+
+  * **LP relaxation via iterative proportional scaling** (``sinkhorn``,
+    the ``auto`` start): a temperature-softened score matrix
+    ``(u - lam * c) / T`` is row-normalized and column-capped in
+    alternation (Sinkhorn-style IPS with *inequality* column marginals
+    — columns only ever scale down, to their capacity), while an outer
+    bisection on the budget multiplier ``lam`` drives the relaxation's
+    expected cost to the budget. Rounding takes each row's argmax.
+  * **greedy with swaps** (``greedy``, also the rounding repair): from
+    the current assignment, a bounded sequence of vectorized repair
+    moves — demote the smallest-margin rows out of over-capacity tiers
+    (the exact top-``cap``-by-margin ranking per tier, applied
+    iteratively), walk cost down to the budget by the best
+    saved-$-per-utility move, then climb utility back with single-row
+    swaps that keep both constraints slack. Each phase is a
+    ``lax.while_loop`` whose body applies the single best move, so the
+    result is deterministic and the move counts come back as telemetry.
+
+Infeasible inputs degrade gracefully, never raise: a budget below even
+the cheapest assignment returns a least-cost-leaning assignment with
+``feasible = False`` in the result — the caller's governor sees the
+overrun through the realized spend and tightens the next window.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SOLVER_METHODS = ("auto", "sinkhorn", "greedy")
+
+#: traced-body counter: the solve body only executes while jax traces
+#: it, so this counts (re)compilations — the jit-stability tests pin
+#: down that pow2-padded window streams never grow it per window
+TRACE_COUNT = [0]
+
+_BIG = 1e30
+_EPS = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """Static dials of one solve graph (part of the jit cache key)."""
+
+    method: str = "auto"
+    temperature: float = 0.05       # IPS softmax temperature
+    sinkhorn_iters: int = 24        # row/column scaling rounds per plan
+    bisect_iters: int = 16          # budget-multiplier bisection steps
+    repair_iters: int = 192         # cap + budget repair move bound
+    swap_iters: int = 96            # utility-improvement move bound
+
+    def __post_init__(self):
+        if self.method not in SOLVER_METHODS:
+            raise ValueError(f"unknown method {self.method!r}; expected "
+                             f"one of {SOLVER_METHODS}")
+        if self.temperature <= 0:
+            raise ValueError("temperature must be > 0")
+        for f in ("sinkhorn_iters", "bisect_iters", "repair_iters",
+                  "swap_iters"):
+            if getattr(self, f) < 1:
+                raise ValueError(f"{f} must be >= 1")
+
+
+def pow2_rows(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _pad_rows(x: np.ndarray, n_pad: int) -> np.ndarray:
+    n = len(x)
+    if n == n_pad:
+        return x
+    return np.concatenate(
+        [x, np.zeros((n_pad - n,) + x.shape[1:], x.dtype)])
+
+
+# -- the jitted solve (static: shapes + config) ------------------------------
+
+def _counts(a, valid, m):
+    """(m,) valid rows per tier under assignment ``a``."""
+    return jnp.sum(jax.nn.one_hot(a, m) * valid[:, None], axis=0)
+
+
+def _ips_relaxation(u, c, caps, budget, valid, cfg: SolverConfig):
+    """Entropic LP relaxation: transportation by iterative proportional
+    scaling under an outer budget-multiplier bisection. Returns the
+    relaxed plan's row argmax — a (possibly infeasible) integral start
+    the repair phases make exact. ``u``/``c`` arrive normalized to unit
+    scale, so the temperature and multiplier bracket are dimensionless."""
+    t = cfg.temperature
+    caps_f = jnp.maximum(caps, _EPS)
+
+    def plan_for(lam):
+        logp = (u - lam * c) / t
+
+        def scale(_k, logp):
+            logp = logp - jax.scipy.special.logsumexp(
+                logp, axis=1, keepdims=True)                # rows sum to 1
+            col = jnp.sum(jnp.exp(logp) * valid[:, None], axis=0)
+            down = jnp.minimum(0.0, jnp.log(caps_f)
+                               - jnp.log(jnp.maximum(col, 1e-30)))
+            return logp + down[None, :]                     # cap columns
+
+        logp = jax.lax.fori_loop(0, cfg.sinkhorn_iters, scale, logp)
+        logp = logp - jax.scipy.special.logsumexp(logp, axis=1,
+                                                  keepdims=True)
+        return jnp.exp(logp)
+
+    def exp_cost(lam):
+        return jnp.sum(plan_for(lam) * c * valid[:, None])
+
+    # bisection bracket: at lam_hi the cost term towers over the unit-
+    # span utilities even through the softmax, so every row leans to its
+    # cheapest tier — costs cannot go meaningfully lower
+    lam_hi = 8.0 / t
+
+    def bisect(_k, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        over = exp_cost(mid) > budget
+        return jnp.where(over, mid, lo), jnp.where(over, hi, mid)
+
+    feasible_at_zero = exp_cost(0.0) <= budget
+    _lo, hi = jax.lax.fori_loop(0, cfg.bisect_iters, bisect,
+                                (0.0, lam_hi))
+    lam = jnp.where(feasible_at_zero, 0.0, hi)
+    return jnp.argmax(plan_for(lam), axis=1).astype(jnp.int32)
+
+
+def _repair_caps(u, a, caps, valid, cfg: SolverConfig):
+    """Demote rows out of over-capacity tiers, one best move per round:
+    among rows on the most-over-cap tier, move the one losing the least
+    utility to its best tier with spare capacity — exactly the
+    top-``cap``-by-margin ranking, applied iteratively."""
+    n, m = u.shape
+
+    def over(state):
+        a, moves = state
+        return jnp.logical_and(jnp.any(_counts(a, valid, m) > caps),
+                               moves < cfg.repair_iters)
+
+    def step(state):
+        a, moves = state
+        cnt = _counts(a, valid, m)
+        j_over = jnp.argmax(cnt - caps)          # most over-capacity tier
+        on_j = jnp.logical_and(a == j_over, valid > 0)
+        spare = cnt < caps                        # destinations with room
+        alt_u = jnp.where(spare[None, :], u, -_BIG)
+        best_j = jnp.argmax(alt_u, axis=1)
+        best_u = jnp.max(alt_u, axis=1)
+        loss = jnp.where(on_j, u[jnp.arange(n), a] - best_u, _BIG)
+        i = jnp.argmin(loss)                      # smallest-margin row
+        movable = jnp.logical_and(on_j[i], jnp.any(spare))
+        a = jnp.where(movable, a.at[i].set(best_j[i]), a)
+        return a, moves + 1
+
+    return jax.lax.while_loop(over, step, (a, jnp.int32(0)))
+
+
+def _pair_machinery(u, c, caps, valid):
+    """Shared scaffolding for the pair-move repair phases.
+
+    A *pair move* is two single-row reassignments applied together — one
+    may be the appended null move, so singles are a special case. Pairs
+    are what single-move local search cannot express: trading one row
+    down in cost to afford another row's upgrade, and moving into a
+    full tier by simultaneously vacating it. Returns ``deltas(a)`` → all
+    (M+1)² candidate pairs' utility/cost deltas + legality mask, and
+    ``apply(a, k)`` → ``a`` with flattened pair ``k`` applied."""
+    n, m = u.shape
+    rows = jnp.arange(n)
+    row_f = jnp.concatenate([jnp.repeat(rows, m), jnp.array([-1])])
+    dest_f = jnp.concatenate([jnp.tile(jnp.arange(m), n),
+                              jnp.array([-1])])
+    okrow_f = jnp.concatenate([jnp.repeat(valid > 0, m),
+                               jnp.array([True])])
+    M = n * m + 1
+
+    def deltas(a):
+        cur_u = u[rows, a]
+        cur_c = c[rows, a]
+        dU = jnp.concatenate([(u - cur_u[:, None]).ravel(),
+                              jnp.zeros(1)])
+        dC = jnp.concatenate([(c - cur_c[:, None]).ravel(),
+                              jnp.zeros(1)])
+        src_f = jnp.concatenate([jnp.repeat(a, m), jnp.array([-2])])
+        cnt = _counts(a, valid, m)
+        room = cnt < caps
+        dest_c = jnp.maximum(dest_f, 0)
+        ok1 = jnp.logical_and(okrow_f,
+                              jnp.where(dest_f >= 0, room[dest_c], True))
+        # either move may enter a full tier the OTHER move vacates — the
+        # exchange case tight caps force; a no-op move vacates nothing
+        vacates = jnp.logical_and(okrow_f, dest_f != src_f)
+        relief_a = jnp.logical_and(  # move1's dest freed by move2
+            okrow_f[:, None], jnp.logical_and(
+                dest_f[:, None] == src_f[None, :], vacates[None, :]))
+        relief_b = jnp.logical_and(  # move2's dest freed by move1
+            okrow_f[None, :], jnp.logical_and(
+                dest_f[None, :] == src_f[:, None], vacates[:, None]))
+        pair_ok = jnp.logical_and(
+            jnp.logical_or(ok1[:, None], relief_a),
+            jnp.logical_or(ok1[None, :], relief_b))
+        pair_ok = jnp.logical_and(
+            pair_ok, row_f[:, None] != row_f[None, :])
+        # both moves into the same tier need two spare slots
+        two_slots = cnt[dest_c] <= caps[dest_c] - 2.0
+        pair_ok = jnp.logical_and(pair_ok, jnp.logical_or(
+            dest_f[:, None] != dest_f[None, :], two_slots[:, None]))
+        G = dU[:, None] + dU[None, :]
+        DC = dC[:, None] + dC[None, :]
+        return G, DC, pair_ok
+
+    def apply_one(a, k):
+        r, d = row_f[k], dest_f[k]
+        rc = jnp.maximum(r, 0)
+        return a.at[rc].set(jnp.where(r >= 0, d, a[rc]))
+
+    def apply(a, flat):
+        return apply_one(apply_one(a, flat // M), flat % M)
+
+    return M, deltas, apply
+
+
+def _repair_budget(u, c, a, caps, budget, valid, cfg: SolverConfig,
+                   machinery):
+    """Walk realized cost down to the budget: per round, the single
+    capacity-respecting cost-reducing pair move with the best
+    (saved $ / lost utility) ratio. Stops when on budget or no
+    cost-reducing pair remains (infeasible — graceful degradation)."""
+    n, _m = u.shape
+    M, deltas, apply = machinery
+
+    def total(a):
+        return jnp.sum(c[jnp.arange(n), a] * valid)
+
+    def cont(state):
+        a, moves, stuck = state
+        return jnp.logical_and(
+            jnp.logical_and(total(a) > budget, ~stuck),
+            moves < cfg.repair_iters)
+
+    def step(state):
+        a, moves, _ = state
+        G, DC, pair_ok = deltas(a)
+        ok = jnp.logical_and(pair_ok, DC < -_EPS * 1e-3)
+        ratio = jnp.where(ok, -DC / jnp.maximum(-G, _EPS), -_BIG)
+        flat = jnp.argmax(ratio)
+        can = ratio[flat // M, flat % M] > -_BIG
+        a = jnp.where(can, apply(a, flat), a)
+        return a, moves + 1, ~can
+
+    a, moves, _ = jax.lax.while_loop(
+        cont, step, (a, jnp.int32(0), jnp.bool_(False)))
+    return a, moves
+
+
+def _improve_swaps(u, c, a, caps, budget, valid, cfg: SolverConfig,
+                   machinery):
+    """Climb utility under slack constraints: per round, the pair move
+    with the largest combined utility gain whose combined cost delta
+    still fits the remaining budget — including trades that push one
+    row cheaper to afford another row's upgrade."""
+    n, _m = u.shape
+    M, deltas, apply = machinery
+
+    def total(a):
+        return jnp.sum(c[jnp.arange(n), a] * valid)
+
+    def cont(state):
+        _a, moves, done = state
+        return jnp.logical_and(~done, moves < cfg.swap_iters)
+
+    def step(state):
+        a, moves, _ = state
+        G, DC, pair_ok = deltas(a)
+        slack = budget - total(a)
+        ok = jnp.logical_and(pair_ok, G > _EPS)
+        ok = jnp.logical_and(ok, DC <= slack)
+        score = jnp.where(ok, G, -_BIG)
+        flat = jnp.argmax(score)
+        can = score[flat // M, flat % M] > -_BIG
+        a = jnp.where(can, apply(a, flat), a)
+        return a, moves + 1, ~can
+
+    a, moves, _ = jax.lax.while_loop(
+        cont, step, (a, jnp.int32(0), jnp.bool_(False)))
+    return a, moves
+
+
+def _solve_body(u, c, caps, budget, valid, cfg: SolverConfig):
+    TRACE_COUNT[0] += 1                 # body runs only while tracing
+    u = u * valid[:, None]
+    c = c * valid[:, None]
+    if cfg.method == "greedy":
+        a = jnp.argmax(u, axis=1).astype(jnp.int32)
+    else:
+        a = _ips_relaxation(u, c, caps, budget, valid, cfg)
+    machinery = _pair_machinery(u, c, caps, valid)
+    a, cap_moves = _repair_caps(u, a, caps, valid, cfg)
+    a, cost_moves = _repair_budget(u, c, a, caps, budget, valid, cfg,
+                                   machinery)
+    a, swap_moves = _improve_swaps(u, c, a, caps, budget, valid, cfg,
+                                   machinery)
+    return a, cap_moves + cost_moves + swap_moves
+
+
+@functools.cache
+def _jitted_solve(cfg: SolverConfig):
+    """One compiled solve per SolverConfig; shapes key the jit cache, so
+    pow2-padded windows of the same size share a single trace."""
+    return jax.jit(functools.partial(_solve_body, cfg=cfg))
+
+
+def solve_assignment(utility: np.ndarray, cost: np.ndarray,
+                     caps, budget: float,
+                     cfg: SolverConfig | None = None) -> dict:
+    """Assign each of n queries an entry tier under the window budget
+    and per-tier capacity caps.
+
+    utility/cost: (n, m) predicted matrices (``assign.meta``); caps:
+    (m,) capacities (``None`` for the whole argument or per entry =
+    uncapped); budget: total predicted $ the window may commit.
+
+    Returns a dict: ``assignment`` (n,) int32, ``predicted_cost``,
+    ``predicted_utility``, ``feasible`` (both constraints met — False
+    means graceful degradation, not an error), ``iterations`` (repair +
+    swap moves applied), ``n_padded`` (the pow2 row count solved).
+    """
+    cfg = cfg or SolverConfig()
+    u = np.asarray(utility, np.float64)
+    c = np.asarray(cost, np.float64)
+    if u.shape != c.shape or u.ndim != 2:
+        raise ValueError(f"utility {u.shape} and cost {c.shape} must be "
+                         "matching (n, m) matrices")
+    n, m = u.shape
+    if n == 0:
+        return {"assignment": np.zeros(0, np.int32), "predicted_cost": 0.0,
+                "predicted_utility": 0.0, "feasible": True,
+                "iterations": 0, "n_padded": 0}
+    caps_arr = np.full(m, np.inf) if caps is None else \
+        np.asarray([np.inf if x is None else float(x) for x in caps],
+                   np.float64)
+    if caps_arr.shape != (m,):
+        raise ValueError(f"caps must be (m,) = ({m},), got "
+                         f"{caps_arr.shape}")
+    # an over-constrained window must still fit somewhere: scale finite
+    # caps up to a feasible total rather than failing the whole window
+    finite = np.isfinite(caps_arr)
+    room = caps_arr[finite].sum() + (~finite).sum() * n
+    if finite.any() and room < n:
+        caps_arr = np.where(
+            finite, np.ceil(caps_arr * n / max(caps_arr[finite].sum(),
+                                               1e-9)), caps_arr)
+    caps_arr = np.minimum(np.floor(caps_arr), float(n))
+    # normalize for well-conditioned default-dtype device math: costs by
+    # their max, utilities to unit span (a global shift never reorders
+    # assignments — every row contributes exactly one term)
+    c_scale = max(float(c.max()), 1e-12)
+    u_lo, u_hi = float(u.min()), float(u.max())
+    u_scale = max(u_hi - u_lo, 1e-12)
+    budget_n = min(float(budget) / c_scale, float(n) * 2.0)
+    n_pad = pow2_rows(n)
+    valid = np.zeros(n_pad, np.float32)
+    valid[:n] = 1.0
+    un = _pad_rows(((u - u_lo) / u_scale).astype(np.float32), n_pad)
+    cn = _pad_rows((c / c_scale).astype(np.float32), n_pad)
+    a_dev, iters = _jitted_solve(cfg)(
+        jnp.asarray(un), jnp.asarray(cn),
+        jnp.asarray(caps_arr.astype(np.float32)),
+        jnp.float32(budget_n), jnp.asarray(valid))
+    a = np.asarray(a_dev)[:n].astype(np.int32)
+    # exact f64 accounting at the original scales
+    rows = np.arange(n)
+    pred_cost = float(c[rows, a].sum())
+    pred_util = float(u[rows, a].sum())
+    over_cap = np.any(np.bincount(a, minlength=m) > caps_arr + 1e-9)
+    feasible = (pred_cost <= float(budget) * (1.0 + 1e-6) + 1e-12
+                and not over_cap)
+    return {
+        "assignment": a,
+        "predicted_cost": pred_cost,
+        "predicted_utility": pred_util,
+        "feasible": bool(feasible),
+        "iterations": int(iters),
+        "n_padded": n_pad,
+    }

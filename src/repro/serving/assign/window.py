@@ -1,0 +1,238 @@
+"""Window accumulation + budgeted dispatch for assignment routing.
+
+The third routing mode's runtime half: collect an arrival window
+(``WindowBuffer`` — drain on fill, age, or deadline pressure), score it
+as one batch (``WindowMeta``), solve the budgeted assignment
+(``assign.solver``), and hand per-query entry tiers to the existing
+``execute_cascade(entry=)`` dispatch. ``WindowAssigner`` owns the
+per-window policy — where the $ budget comes from (an explicit
+``window_budget`` or the governor's target rate, tightened by its
+current spend pressure) and where per-tier capacity caps come from (a
+static window fraction, derated by the scheduler's utilization
+estimators when they exist) — plus the realized-vs-predicted telemetry
+``ServeResult.strategy`` reports.
+
+Batch serve() uses only ``WindowAssigner`` (misses are already a batch;
+it chunks them into windows); the stream scheduler adds
+``WindowBuffer`` to turn an arrival *stream* into windows without
+violating SLO deadlines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.serving.assign.solver import SolverConfig, solve_assignment
+
+
+@dataclasses.dataclass(frozen=True)
+class AssignConfig:
+    """Dials of the window-assignment routing mode.
+
+    Build-time: ``hidden``/``steps``/``batch``/``lr``/``seed`` train the
+    window meta-model (mirroring the contextual router's dials).
+    Run-time: windows of up to ``window_size`` queries are assigned
+    together under ``window_budget`` $ (None derives it from the
+    governor: ``budget_rate * n``, tightened by the live spend
+    pressure); ``max_wait_s`` bounds how long the stream path may hold
+    an arrival for its window; ``capacity_frac`` caps each tier at that
+    fraction of the window (None = uncapped), derated by live tier
+    utilization when the scheduler's estimators are wired in;
+    ``solver`` carries the on-device solver's static dials.
+    """
+
+    window_size: int = 32
+    window_budget: float | None = None   # $ per full window (pro-rated)
+    max_wait_s: float = 0.05
+    capacity_frac: float | None = None
+    solver: SolverConfig = SolverConfig()
+    hidden: int = 64
+    steps: int = 300
+    batch: int = 256
+    lr: float = 3e-3
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.window_size < 1:
+            raise ValueError("window_size must be >= 1")
+        if self.window_budget is not None and self.window_budget <= 0:
+            raise ValueError("window_budget must be > 0 (None to derive "
+                             "from the governor)")
+        if self.max_wait_s < 0:
+            raise ValueError("max_wait_s must be >= 0")
+        if self.capacity_frac is not None and not (
+                0.0 < self.capacity_frac <= 1.0):
+            raise ValueError("capacity_frac must be in (0, 1]")
+
+
+class WindowBuffer:
+    """Accumulates stream arrivals into assignment windows.
+
+    ``due(now)`` when the window filled, the oldest arrival waited
+    ``max_wait_s``, or an item's deadline leaves less than
+    ``pressure_s`` of slack — the stream scheduler drains then, so
+    window formation never pushes a request past its SLO deadline."""
+
+    def __init__(self, cfg: AssignConfig):
+        self.cfg = cfg
+        self._rows: list[tuple] = []    # (item, t_add, deadline)
+
+    def __len__(self):
+        return len(self._rows)
+
+    def add(self, item, now: float, deadline: float | None = None):
+        self._rows.append((item, now,
+                           math.inf if deadline is None else deadline))
+
+    def due(self, now: float, pressure_s: float = 0.0) -> bool:
+        if not self._rows:
+            return False
+        if len(self._rows) >= self.cfg.window_size:
+            return True
+        if now - self._rows[0][1] >= self.cfg.max_wait_s:
+            return True
+        return now + pressure_s >= min(d for _, _, d in self._rows)
+
+    def next_due(self) -> float:
+        """Earliest absolute time the buffer becomes due by age alone
+        (inf when empty) — the scheduler's poll horizon."""
+        if not self._rows:
+            return math.inf
+        return min(self._rows[0][1] + self.cfg.max_wait_s,
+                   min(d for _, _, d in self._rows))
+
+    def drain(self, k: int | None = None) -> list:
+        """Pop the oldest ``k`` items (all, when None) — a burst that
+        outgrew one window drains as several ``window_size`` windows,
+        each solved on its own, with the remainder keeping its own age
+        and deadline bookkeeping."""
+        k = len(self._rows) if k is None else min(k, len(self._rows))
+        popped, self._rows = self._rows[:k], self._rows[k:]
+        return [item for item, _, _ in popped]
+
+
+@dataclasses.dataclass
+class WindowAssigner:
+    """Per-window budgeted assignment policy + telemetry.
+
+    Stateless per window except for the telemetry counters; safe to
+    share across windows under the caller's serialization domain (the
+    scheduler's lock, or the single-threaded batch path)."""
+
+    meta: object                          # WindowMeta
+    cfg: AssignConfig = AssignConfig()
+
+    def __post_init__(self):
+        self.n_windows = 0
+        self.n_assigned = 0
+        self.n_infeasible = 0
+        self.fill_sum = 0.0
+        self.budget_sum = 0.0
+        self.pred_cost_sum = 0.0
+        self.pred_util_sum = 0.0
+        self.realized_cost_sum = 0.0
+        self.realized_acc_sum = 0.0
+        self.n_observed = 0
+        self.solver_iters = 0
+        self.solver_secs = 0.0
+        self.entry_hist: dict[int, int] = {}
+
+    # -- policy ------------------------------------------------------------
+    def budget_for(self, n: int, governor=None) -> float:
+        """$ this window may commit: the explicit per-window budget
+        pro-rated to the actual fill, else the governor's target rate —
+        tightened by its live spend pressure (positive shift = the
+        stream is running hot, so windows get leaner until the dual
+        controller re-centers)."""
+        if self.cfg.window_budget is not None:
+            return self.cfg.window_budget * n / self.cfg.window_size
+        if governor is not None:
+            return governor.window_budget(n)
+        return math.inf
+
+    def caps_for(self, n: int, n_tiers: int,
+                 utilization: Sequence[float] | None = None):
+        """Per-tier caps: ``capacity_frac`` of the window each, derated
+        by live utilization (a tier at 80% load offers only 20% of its
+        static cap, floored at one slot so no tier is ever fully
+        fenced — the breaker owns hard unavailability)."""
+        if self.cfg.capacity_frac is None:
+            return None
+        base = self.cfg.capacity_frac * n
+        caps = np.full(n_tiers, base, np.float64)
+        if utilization is not None:
+            u = np.clip(np.asarray(utilization, np.float64), 0.0, 1.0)
+            caps = caps * (1.0 - u)
+        return np.maximum(1.0, np.ceil(caps))
+
+    # -- the per-window solve ----------------------------------------------
+    def assign(self, emb: np.ndarray, prices: np.ndarray, *,
+               governor=None, utilization=None,
+               budget: float | None = None) -> dict:
+        """Score + solve one window. emb (n, d), prices (n, m) exact
+        per-(query, tier) $. Returns the solver dict plus the scoring
+        matrices (``utility``/``exp_cost``) and the window ``budget``."""
+        n = len(emb)
+        m = self.meta.n_tiers
+        utility, exp_cost = self.meta.scores(emb, prices)
+        if budget is None:
+            budget = self.budget_for(n, governor)
+        caps = self.caps_for(n, m, utilization)
+        t0 = time.perf_counter()
+        res = solve_assignment(utility, exp_cost, caps, budget,
+                               self.cfg.solver)
+        secs = time.perf_counter() - t0
+        self.n_windows += 1
+        self.n_assigned += n
+        self.fill_sum += n / self.cfg.window_size
+        if math.isfinite(budget):
+            self.budget_sum += budget
+        self.pred_cost_sum += res["predicted_cost"]
+        self.pred_util_sum += res["predicted_utility"]
+        self.n_infeasible += 0 if res["feasible"] else 1
+        self.solver_iters += res["iterations"]
+        self.solver_secs += secs
+        for e in res["assignment"]:
+            self.entry_hist[int(e)] = self.entry_hist.get(int(e), 0) + 1
+        res.update(utility=utility, exp_cost=exp_cost, budget=budget,
+                   solver_secs=secs)
+        return res
+
+    # -- telemetry ---------------------------------------------------------
+    def observe(self, costs, accepted) -> None:
+        """Fold one window's realized outcome back in: per-query $ and
+        0/1 answer acceptance/correctness — the realized counterparts of
+        the solver's predicted cost and utility."""
+        costs = np.asarray(costs, np.float64)
+        self.realized_cost_sum += float(costs.sum())
+        self.realized_acc_sum += float(np.sum(accepted))
+        self.n_observed += len(costs)
+
+    def snapshot(self) -> dict:
+        nw = max(1, self.n_windows)
+        na = max(1, self.n_assigned)
+        return {
+            "n_windows": self.n_windows,
+            "n_assigned": self.n_assigned,
+            "window_fill": self.fill_sum / nw,
+            "n_infeasible": self.n_infeasible,
+            "entry_hist": dict(sorted(self.entry_hist.items())),
+            "predicted_cost_per_q": self.pred_cost_sum / na,
+            "predicted_utility_per_q": self.pred_util_sum / na,
+            "realized_cost_per_q": (
+                self.realized_cost_sum / self.n_observed
+                if self.n_observed else 0.0),
+            "realized_accept_rate": (
+                self.realized_acc_sum / self.n_observed
+                if self.n_observed else 0.0),
+            "budget_utilization": (
+                self.pred_cost_sum / self.budget_sum
+                if self.budget_sum > 0 else 0.0),
+            "solver_iterations": self.solver_iters,
+            "solver_secs": self.solver_secs,
+            "solver_secs_per_window": self.solver_secs / nw,
+        }

@@ -114,6 +114,12 @@ class BuildConfig:
     router_steps: int = 300
     budget_rate: float | None = None  # target USD/query (None = no governor)
     governor_window: int = 64         # queries per governor update
+    # window-assignment routing (repro.serving.assign): an AssignConfig
+    # trains the two-head window meta-model on the same offline
+    # artifacts and wires a WindowAssigner into the strategy as
+    # mode="assign" — the third routing mode, beside fixed thresholds
+    # and greedy contextual entry. None = structurally absent.
+    assign: object | None = None        # assign.AssignConfig | None
     # unadapted few-shot prompt shape (paper's 8-shot HEADLINES scale)
     n_shot: int = 8
     tokens_per_example: int = 110
@@ -242,11 +248,13 @@ def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
     #    offline artifacts the cascade was learned from, plus an online
     #    budget governor when a target spend rate is set
     strategy = None
-    entry_router = governor = None
+    entry_router = governor = assigner = None
     ent = None
+    emb_train = None
+    if cfg.contextual or cfg.assign is not None:
+        emb_train = embed_queries(sp, train.tokens, cfg=SC.SCORER_CFG)
     if cfg.contextual:
         say("== training the contextual entry router ==")
-        emb_train = embed_queries(sp, train.tokens, cfg=SC.SCORER_CFG)
         y = accept_labels(s_train, np.asarray(data.correct),
                           cas.apis, cas.thresholds)
         rp = train_entry_router(emb_train, y, hidden=cfg.router_hidden,
@@ -255,6 +263,21 @@ def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
         ent = entry_router.entry_tiers(emb_train, cfg.entry_bar)
         say(f"  entry-tier distribution (train): "
             f"{np.bincount(ent, minlength=len(cas.apis)).tolist()}")
+    if cfg.assign is not None:
+        from repro.serving.assign import (WindowAssigner,
+                                          correctness_labels,
+                                          train_window_meta)
+        say("== training the window meta-model ==")
+        acc_y = accept_labels(s_train, np.asarray(data.correct),
+                              cas.apis, cas.thresholds)
+        cor_y = correctness_labels(data.correct, cas.apis)
+        meta = train_window_meta(
+            emb_train, acc_y, cor_y, hidden=cfg.assign.hidden,
+            steps=cfg.assign.steps, batch=cfg.assign.batch,
+            lr=cfg.assign.lr, seed=cfg.assign.seed + cfg.seed)
+        assigner = WindowAssigner(meta=meta, cfg=cfg.assign)
+        say(f"  window meta: {len(cas.apis)} tiers, "
+            f"window_size={cfg.assign.window_size}")
     if cfg.budget_rate is not None:
         governor = BudgetGovernor(cfg.budget_rate, cas.thresholds,
                                   base_bar=cfg.entry_bar,
@@ -263,10 +286,14 @@ def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
                                   base_threshold=cfg.cache_threshold
                                   if cfg.enable_cache else None,
                                   window=cfg.governor_window)
-    if entry_router is not None or governor is not None:
+    if (entry_router is not None or governor is not None
+            or assigner is not None):
         strategy = ServingStrategy(router=entry_router, governor=governor,
                                    entry_bar=cfg.entry_bar,
-                                   degrade_relief=cfg.degrade_relief)
+                                   degrade_relief=cfg.degrade_relief,
+                                   mode=("assign" if assigner is not None
+                                         else "entry"),
+                                   assigner=assigner)
 
     # 6. per-tier device placement: the offline replay's per-tier
     #    pending counts are the traffic-share signal (the online
@@ -316,7 +343,8 @@ def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
                                 policy=cfg.cache_policy,
                                 min_score=cfg.cache_min_score,
                                 ttl=cfg.cache_ttl)
-    if cfg.enable_cache or entry_router is not None:
+    if (cfg.enable_cache or entry_router is not None
+            or assigner is not None):
         embed = functools.partial(embed_queries, sp, cfg=SC.SCORER_CFG)
     tiers = [TierSpec(apis[i].name, apis[i].answer, apis[i].price,
                       prompt=prompts[i],

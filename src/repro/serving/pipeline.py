@@ -182,6 +182,16 @@ class ServeResult:
             if gov is not None:
                 extra += (f" vs ${gov['budget_rate']:.6f} target "
                           f"(shift {gov['shift']:+.3f})")
+            asg = self.strategy.get("assign")
+            if asg is not None:
+                extra += (
+                    f" | assign: {asg['n_windows']} windows "
+                    f"(fill {asg['window_fill']:.2f}), budget util "
+                    f"{asg['budget_utilization']:.2f}, predicted "
+                    f"{asg['predicted_utility_per_q']:.2f} vs realized "
+                    f"{asg['realized_accept_rate']:.2f} accept, solver "
+                    f"{asg['solver_iterations']} moves/"
+                    f"{asg['solver_secs_per_window'] * 1e3:.1f}ms per window")
         return (
             f"served {self.n} queries | cache hit rate "
             f"{self.cache_hit_rate:.2f} ({self.cache_hits} hits) | "
@@ -255,6 +265,12 @@ class ServingPipeline:
             raise ValueError("a contextual router routes on embeddings: "
                              "give the pipeline an embed function (reuse "
                              "the scorer encoder, see builder)")
+        if (self.strategy is not None
+                and getattr(self.strategy, "mode", "entry") == "assign"
+                and self.embed is None):
+            raise ValueError("window assignment scores on embeddings: "
+                             "give the pipeline an embed function (reuse "
+                             "the scorer encoder, see builder)")
 
     @staticmethod
     def _block(x):
@@ -275,6 +291,12 @@ class ServingPipeline:
         return np.asarray(spec.price.query_cost(n_q + prefix, n_out),
                           np.float64)
 
+    def _tier_prices(self, tokens: np.ndarray) -> np.ndarray:
+        """(n, m) exact per-(query, tier) $ with each tier's adapted
+        prompt — the window meta-model's price input."""
+        return np.stack([self._tier_cost(s, tokens) for s in self.tiers],
+                        axis=1)
+
     def _baseline_cost(self, tokens: np.ndarray) -> float:
         """Everything to the marketplace top tier, full prompt, no cache."""
         if self.baseline_price is not None:
@@ -287,20 +309,21 @@ class ServingPipeline:
             np.full_like(n_q, n_out))).sum())
 
     # -- pieces shared with the continuous batcher (serving.ingress) -------
-    def _cascade_tiers(self) -> list[CascadeTier]:
+    def _cascade_tiers(self, clock=None, sleep=None) -> list[CascadeTier]:
         """The live tiers as cascade stages: one invoke = answer + the
         exact adapted-prompt cost for the same chunk. With ``faults``
         configured, the affected tiers come back wrapped in
         ``FaultyTier`` (the stream scheduler wires its clock into the
         wrappers at start; the batch path sees draw-based faults at
-        t=0)."""
+        t=0 unless a ``clock`` — e.g. a ``VirtualClock`` — is passed
+        through ``serve``)."""
         tiers = [CascadeTier(
                      s.name,
                      lambda q, s=s: (s.answer(q), self._tier_cost(s, q)))
                  for s in self.tiers]
         if self.faults is not None:
             from repro.serving.resilience import wrap_tiers
-            tiers = wrap_tiers(tiers, self.faults)
+            tiers = wrap_tiers(tiers, self.faults, clock=clock, sleep=sleep)
         return tiers
 
     def _pos_scorer(self, q, a, _j):
@@ -356,7 +379,13 @@ class ServingPipeline:
         self.cache.insert(emb_rows, a, scores)
         return True
 
-    def serve(self, tokens: np.ndarray) -> ServeResult:
+    def serve(self, tokens: np.ndarray, *, clock=None,
+              sleep=None) -> ServeResult:
+        """One closed token batch through all three stages. ``clock``/
+        ``sleep`` (optional, e.g. a ``resilience.VirtualClock`` and its
+        ``.sleep``) own time on the cascade's resilience path — fault
+        windows, retry backoff and latency spikes then advance virtual
+        time instead of wall-sleeping, with identical accounting."""
         t0 = time.perf_counter()
         n = tokens.shape[0]
         cost = np.zeros(n, np.float64)
@@ -389,9 +418,28 @@ class ServingPipeline:
         strat = self.strategy
         entries = probs = None
         thresholds = self.thresholds
+        assign_mode = (strat is not None
+                       and getattr(strat, "mode", "entry") == "assign")
         if strat is not None:
             thresholds = strat.thresholds(self.thresholds)
-            if getattr(strat, "router", None) is not None and len(miss):
+            if assign_mode and len(miss):
+                # window assignment: chunk the misses into arrival
+                # windows, score each as a batch, and solve entry tiers
+                # under the window budget (repro.serving.assign)
+                if emb is None:             # no cache stage ran: embed now
+                    t = time.perf_counter()
+                    emb = np.asarray(self._block(self.embed(tokens)))
+                    latency["embed"] = time.perf_counter() - t
+                t = time.perf_counter()
+                asg = strat.assigner
+                prices = self._tier_prices(tokens[miss])
+                w = asg.cfg.window_size
+                entries = np.concatenate([
+                    asg.assign(emb[miss[i:i + w]], prices[i:i + w],
+                               governor=strat.governor)["assignment"]
+                    for i in range(0, len(miss), w)])
+                latency["assign"] = time.perf_counter() - t
+            elif getattr(strat, "router", None) is not None and len(miss):
                 if emb is None:             # no cache stage ran: embed now
                     t = time.perf_counter()
                     emb = np.asarray(self._block(self.embed(tokens)))
@@ -404,16 +452,27 @@ class ServingPipeline:
         t = time.perf_counter()
         tier_counts = [0] * len(self.tiers)
         res_ans = np.zeros(0, np.int32)
+        ingress = None
         if len(miss):
-            res = execute_cascade(self._cascade_tiers(), thresholds,
+            res = execute_cascade(self._cascade_tiers(clock, sleep),
+                                  thresholds,
                                   self._pos_scorer, tokens[miss],
                                   batch_size=self.batch_size, entry=entries,
                                   compact=self.compact, retry=self.retry,
-                                  breaker=self.breaker)
+                                  breaker=self.breaker, clock=clock,
+                                  sleep=sleep)
             res_ans = np.asarray(res["answers"])
             cost[miss] = res["cost"]
             stopped_at[miss] = res["stopped_at"]
             tier_counts = res["tier_counts"]
+            if "resilience" in res:
+                # surface the executor's retry/failover counters (incl.
+                # backoff credited on terminally-failed chunks) the same
+                # way the stream paths do; trips/recoveries only exist
+                # with a breaker, but summary() reads them regardless
+                ingress = {"request_latency": np.zeros(0),
+                           "resilience": {"trips": 0, "recoveries": 0,
+                                          **res["resilience"]}}
         latency["cascade"] = time.perf_counter() - t
         answers = _merge_answers(n, [(hit_idx, hit_ans), (miss, res_ans)])
 
@@ -431,6 +490,11 @@ class ServingPipeline:
             if len(miss):
                 strat.observe_batch(cost[miss], entries,
                                     stopped_at[miss], probs)
+                if assign_mode:
+                    # realized counterparts of the solver's predictions:
+                    # per-query $ and acceptance at the assigned entry
+                    strat.assigner.observe(
+                        cost[miss], stopped_at[miss] == entries)
             strategy_snap = strat.snapshot(len(self.tiers))
 
         latency["total"] = time.perf_counter() - t0
@@ -441,7 +505,7 @@ class ServingPipeline:
             cache_hits=hits, cache_misses=len(miss),
             prompt_tokens_saved=self._prompt_saved(tier_counts),
             baseline_cost=self._baseline_cost(tokens),
-            latency=latency, strategy=strategy_snap)
+            latency=latency, ingress=ingress, strategy=strategy_snap)
 
     # -- continuous-batching entry points (ingress + sched subsystems) -----
     def _stream_backend(self, max_chunk, holdback, parallel, slo):

@@ -44,6 +44,7 @@ from repro.serving.resilience.faults import (  # noqa: F401
     TierFault,
     TierTimeout,
     TransientError,
+    VirtualClock,
     wrap_tiers,
 )
 from repro.serving.resilience.retry import (  # noqa: F401

@@ -39,6 +39,27 @@ import time
 import numpy as np
 
 
+class VirtualClock:
+    """Deterministic virtual time: ``clock()`` reads it, ``sleep(s)``
+    advances it. Inject the pair into the batch executor
+    (``pipeline.serve(clock=vc, sleep=vc.sleep)``) or the fault wrappers
+    so retry backoff and injected latency spikes advance *virtual* time
+    — a resilience bench with seconds of accumulated backoff finishes in
+    milliseconds, with identical telemetry (backoff is credited from the
+    slept amounts, which are the same numbers either way)."""
+
+    def __init__(self, start: float = 0.0):
+        self.t = float(start)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def sleep(self, s: float) -> None:
+        self.t += max(0.0, float(s))
+
+    advance = sleep
+
+
 class TierFault(RuntimeError):
     """A tier invoke failed in a way the resilience layer may absorb."""
 
@@ -90,6 +111,13 @@ class FaultSpec:
     #: cap on total injected faults (None = unlimited); spikes count
     max_faults: int | None = None
     seed: int = 0
+    #: correlated-failure group: tiers whose specs share a group name
+    #: share ONE fault schedule (same seed, so draw-based faults fire on
+    #: the same invoke indices; window faults already share the clock).
+    #: Models a common upstream dependency — one provider backing
+    #: several cascade tiers goes down, they all go down. None = the
+    #: default independent-failures model.
+    group: str | None = None
 
     def __post_init__(self):
         for name in ("error_rate", "timeout_rate", "spike_rate"):
@@ -142,6 +170,8 @@ class FaultSpec:
                 kw["max_faults"] = int(v)
             elif k == "seed":
                 kw["seed"] = int(v)
+            elif k == "group":
+                kw["group"] = v.strip()
             else:
                 raise ValueError(f"unknown --faults key {k!r}")
         return FaultSpec(**kw)
@@ -213,12 +243,24 @@ def wrap_tiers(tiers, specs, clock=None, sleep=None) -> list:
     specs return the original tier object — no wrapper, no overhead.
     ``specs`` may also be a single ``FaultSpec`` applied to every tier
     (each wrapper still draws from its own per-tier generator, offset by
-    the tier index so tiers don't fault in lockstep)."""
+    the tier index so tiers don't fault in lockstep). A spec with a
+    ``group`` opts out of that decorrelation: a grouped broadcast
+    replicates the seed verbatim, and grouped entries of a per-tier list
+    adopt the group's first member's seed — either way the group's tiers
+    share one draw sequence and fault together (the shared-upstream
+    outage the breaker fleet has to survive as a fleet)."""
     if specs is None:
         return list(tiers)
     if isinstance(specs, FaultSpec):
-        specs = [dataclasses.replace(specs, seed=specs.seed + 7919 * j)
+        specs = [specs if specs.group is not None
+                 else dataclasses.replace(specs, seed=specs.seed + 7919 * j)
                  for j in range(len(tiers))]
+    else:
+        group_seed: dict = {}
+        specs = [s if s is None or s.group is None
+                 else dataclasses.replace(
+                     s, seed=group_seed.setdefault(s.group, s.seed))
+                 for s in specs]
     if len(specs) != len(tiers):
         raise ValueError(f"{len(specs)} fault specs for {len(tiers)} tiers")
     return [t if s is None or not s.enabled

@@ -91,7 +91,7 @@ class RetryPolicy:
 def invoke_with_retry(tier, chunk, policy: RetryPolicy, *, clock, sleep,
                       deadline: float | None = None,
                       predicted_s: float = 0.0, token: int = 0,
-                      on_attempt_fail=None):
+                      on_attempt_fail=None, on_backoff=None):
     """Run ``tier.invoke(chunk)`` under ``policy``.
 
     Returns ``(answers, costs, attempts, backoff_total_s)``; re-raises
@@ -101,6 +101,10 @@ def invoke_with_retry(tier, chunk, policy: RetryPolicy, *, clock, sleep,
     back scaled by the attempt count under ``"all_attempts"``
     accounting. ``on_attempt_fail(attempt, exc)`` (optional) observes
     each failed attempt — the circuit breaker's failure-rate signal.
+    ``on_backoff(wait_s)`` (optional) observes each backoff as it is
+    slept — unlike the returned total, it also fires on the attempts
+    *before* a terminal failure, so telemetry can credit the seconds a
+    chunk spent backing off even when every retry was wasted.
     """
     attempt = 0
     backoff_total = 0.0
@@ -116,6 +120,8 @@ def invoke_with_retry(tier, chunk, policy: RetryPolicy, *, clock, sleep,
             wait = policy.backoff(attempt, token)
             backoff_total += wait
             sleep(wait)
+            if on_backoff is not None:
+                on_backoff(wait)
             attempt += 1
             continue
         if attempt and policy.accounting == "all_attempts":

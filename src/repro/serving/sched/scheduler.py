@@ -161,6 +161,18 @@ class TierScheduler:
         # dispatch, predicted-score degradation under overload; None
         # keeps every decision bit-identical to the fixed cascade
         self._strategy = pipeline.strategy
+        # window-assignment routing (repro.serving.assign): admitted
+        # misses are buffered into arrival windows and entry-routed by
+        # the budgeted assignment solver at drain; the buffer is only
+        # touched on the driver thread (admit + drain), enqueue happens
+        # under the lock like every other path
+        self._assign = (self._strategy is not None
+                        and getattr(self._strategy, "mode", "entry")
+                        == "assign")
+        self._win_buf = None
+        if self._assign:
+            from repro.serving.assign import WindowBuffer
+            self._win_buf = WindowBuffer(self._strategy.assigner.cfg)
 
         # one lock + condition guards every field below; chunk compute,
         # embedding and cache traffic all happen OUTSIDE it
@@ -194,6 +206,8 @@ class TierScheduler:
         self.deadline_total = 0
         self.latency = {"embed": 0.0, "cache": 0.0, "cascade": 0.0,
                         "insert": 0.0}
+        if self._assign:
+            self.latency["assign"] = 0.0
 
         # speculation state (all under _mu; see module docstring).
         # _decoding[j]: rid -> request for rows inside tier j's running
@@ -246,11 +260,11 @@ class TierScheduler:
         if not reqs:
             return
         strat = self._strategy
-        routed = (strat is not None
+        routed = (strat is not None and not self._assign
                   and getattr(strat, "router", None) is not None)
         hit_mask, cached, emb, embed_s, cache_s = stage1_lookup(
             self.pipeline, reqs, cache_lock=self._cache_mu,
-            need_emb=routed)
+            need_emb=routed or self._assign)
         entries = probs = None
         if routed:
             entries, probs = strat.route(emb)
@@ -270,6 +284,13 @@ class TierScheduler:
                     r.answer = cached[i]
                     r.stopped_at = -1
                     self._finish_locked(r, now)
+                    continue
+                if self._assign:
+                    # buffer into the arrival window; overload policy
+                    # and enqueue happen at drain, once the solver has
+                    # picked the entry tier (_drain_window)
+                    r.emb = emb[i]
+                    self._win_buf.add(r, now, deadline=r.deadline)
                     continue
                 j0 = int(entries[i]) if entries is not None else 0
                 verdict = admit_decision(
@@ -310,6 +331,78 @@ class TierScheduler:
                     self._finish_locked(r, now)
             self._cv.notify_all()
 
+    # -- window assignment (driver thread; see repro.serving.assign) -------
+    def _window_pressure(self) -> float:
+        """Seconds of slack the window must leave before its earliest
+        deadline: the safety-scaled predicted service of the whole
+        cascade chain (conservative — a drained query may still have to
+        climb every tier), so holding an arrival for its window never
+        pushes it past an SLO deadline the chain could have met."""
+        svc = sum(e.predicted_service() for e in self.estimators)
+        return self.slo.service_safety * svc
+
+    def _drain_window(self, now: float, force: bool = False):
+        """Drain every currently-due window (a burst that outgrew one
+        window drains as several). ``force`` flushes the partial
+        remainder once ingress has drained — nothing will top it up."""
+        buf = self._win_buf
+        while buf is not None and len(buf):
+            if not force and not buf.due(now, self._window_pressure()):
+                return
+            self._solve_window(buf.drain(buf.cfg.window_size), now)
+
+    def _solve_window(self, items: list, now: float):
+        """Score + solve ONE arrival window and enqueue the results.
+        Runs on the driver thread; scoring and the solver stay outside
+        the lock (like stage-1 embed/cache traffic). Shed/degrade still
+        apply, per assigned tier, at enqueue time."""
+        strat, asg = self._strategy, self._strategy.assigner
+        emb_w = np.stack([r.emb for r in items])
+        toks = np.stack([r.tokens for r in items])
+        t0 = time.perf_counter()
+        util = ([e.utilization(now) for e in self.estimators]
+                if now > 0 else None)
+        res = asg.assign(emb_w, self.pipeline._tier_prices(toks),
+                         governor=strat.governor, utilization=util)
+        probs = asg.meta.accept_probs(emb_w)
+        solve_s = time.perf_counter() - t0
+        m = len(self._tiers)
+        keep_emb = self.pipeline.cache is not None
+        with self._cv:
+            self.latency["assign"] += solve_s
+            for i, r in enumerate(items):
+                if not keep_emb:
+                    r.emb = None
+                j0 = int(res["assignment"][i])
+                verdict = admit_decision(
+                    len(self._waiting[j0]), self.slo,
+                    est=self.estimators[j0], now=now, deadline=r.deadline)
+                if verdict == ADMIT or verdict == DEGRADE:
+                    if verdict == DEGRADE:
+                        # cost-aware degradation off the meta-model's
+                        # accept probabilities (router-compatible)
+                        j0 = strat.degrade_entry(probs[i], m)
+                        cap = self.slo.queue_cap
+                        if (cap is not None
+                                and len(self._waiting[j0]) >= 2 * cap):
+                            r.shed = True
+                            r.stopped_at = -2
+                            self.shed_count += 1
+                            self._finish_locked(r, now)
+                            continue
+                        r.degraded = True
+                        self.degraded_count += 1
+                    r.entry = j0
+                    r.pred_accept = float(probs[i, j0])
+                    r.probs = probs[i]
+                    self._enqueue_locked(r, j0, now)
+                else:
+                    r.shed = True
+                    r.stopped_at = -2
+                    self.shed_count += 1
+                    self._finish_locked(r, now)
+            self._cv.notify_all()
+
     def _enqueue_locked(self, r: RequestState, j: int, now: float):
         r.tier_pos = j
         r.t_enqueued = now
@@ -335,6 +428,10 @@ class TierScheduler:
                 self._strategy.observe_request(
                     r.cost, entry=r.entry, pred=r.pred_accept,
                     accepted=(r.stopped_at == r.entry))
+            if self._assign and r.stopped_at >= 0:
+                # realized counterpart of the window solver's prediction
+                self._strategy.assigner.observe(
+                    [r.cost], [r.stopped_at == r.entry])
         if r.future is not None:
             # workers are plain threads: hand resolution to the loop
             r.future.get_loop().call_soon_threadsafe(
@@ -543,12 +640,17 @@ class TierScheduler:
                 else:
                     predicted = self.estimators[j].predicted_service(
                         self.slo.init_service_s)
-                    a, c, attempts, waited = invoke_with_retry(
+
+                    def _waited(w):
+                        # per-backoff credit: terminally-failed chunks
+                        # keep their wasted backoff seconds too
+                        meta["backoff"] += w
+
+                    a, c, attempts, _ = invoke_with_retry(
                         inner, chunk, pol, clock=self._clock,
                         sleep=self._sleep, deadline=deadline,
                         predicted_s=predicted, token=j,
-                        on_attempt_fail=_fail)
-                    meta["backoff"] += waited
+                        on_attempt_fail=_fail, on_backoff=_waited)
             except TierFault:
                 meta["retries"] += max(0, fails[0] - 1)
                 if (self._health is not None
@@ -872,6 +974,11 @@ class TierScheduler:
                 now = clock()
                 self._admit(queue.due(now), now)
                 drained = queue.closed and len(queue) == 0
+                if self._win_buf is not None:
+                    # window formation: drain on fill/age/deadline
+                    # pressure — or force-flush a partial window once
+                    # no further arrival can ever top it up
+                    self._drain_window(now, force=drained)
                 with self._cv:
                     self._ingress_drained = drained
                     if self._error is not None:

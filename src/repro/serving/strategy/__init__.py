@@ -24,6 +24,13 @@ package makes both decisions *per query* and *per window*:
 ``ServingPipeline`` carries (``pipeline.strategy``); with it unset the
 serving paths are bit-identical to the fixed cascade. Built by
 ``serving.builder.build_pipeline(BuildConfig(contextual=True, ...))``.
+
+A third routing mode lives beside fixed-threshold and contextual entry:
+``mode="assign"`` swaps greedy per-query routing for *window
+assignment* (``repro.serving.assign``) — arrivals are collected into
+windows, scored by a meta-model, and dispatched by a budgeted
+assignment solver. ``ServingStrategy`` only carries the mode switch and
+the ``WindowAssigner``; the window mechanics live in the serving paths.
 """
 from __future__ import annotations
 
@@ -56,9 +63,23 @@ class ServingStrategy:
     governor: BudgetGovernor | None = None
     entry_bar: float = 0.5              # static bar when no governor
     degrade_relief: float = 0.5
+    # routing mode: "entry" (greedy contextual, the default) or
+    # "assign" (window assignment, repro.serving.assign) — "assign"
+    # needs an assigner; with mode "entry" the assigner is ignored and
+    # the strategy behaves exactly as before it existed
+    mode: str = "entry"
+    assigner: object | None = None      # assign.WindowAssigner
 
     def __post_init__(self):
-        if self.router is None and self.governor is None:
+        if self.mode not in ("entry", "assign"):
+            raise ValueError(f"unknown strategy mode {self.mode!r}; "
+                             "expected 'entry' or 'assign'")
+        if self.mode == "assign" and self.assigner is None:
+            raise ValueError("mode='assign' needs an assigner "
+                             "(assign.WindowAssigner; see "
+                             "BuildConfig(assign=...))")
+        if (self.router is None and self.governor is None
+                and self.mode != "assign"):
             raise ValueError("a ServingStrategy needs a router and/or a "
                              "governor; with neither it is a no-op — "
                              "leave pipeline.strategy unset instead")
@@ -141,6 +162,9 @@ class ServingStrategy:
     def snapshot(self, n_tiers: int) -> dict:
         hist = [self._entry_hist.get(j, 0) for j in range(n_tiers)]
         return {
+            "mode": self.mode,
+            "assign": (self.assigner.snapshot()
+                       if self.assigner is not None else None),
             "entry_hist": hist,
             "n_routed": int(sum(hist)),
             "spend_rate": (self._cost_sum / self._n_served

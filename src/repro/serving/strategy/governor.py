@@ -175,6 +175,16 @@ class BudgetGovernor:
         ships them sooner."""
         return max(0.0, float(base * (1.0 + self.shift)))
 
+    def window_budget(self, n: int) -> float:
+        """$ an ``n``-query assignment window may commit
+        (``repro.serving.assign``): the target rate times the window,
+        tightened by the live spend pressure — a stream running hot gets
+        leaner windows until the dual controller re-centers. Spare
+        budget is NOT handed out here (no ``1 + |shift|`` loosening):
+        the assignment solver already spends up to its budget, so the
+        squeeze only needs to act one way."""
+        return float(self.budget_rate * n * (1.0 - max(0.0, self.shift)))
+
     # -- telemetry ---------------------------------------------------------
     def realized_rate(self) -> float:
         """Lifetime $/query over everything observed."""

@@ -1,0 +1,422 @@
+"""Window assignment (repro.serving.assign): the budgeted assignment
+solver against a brute-force oracle, jit stability across window sizes,
+the window meta-model's expected-cost/utility chain, window buffering
+semantics, the assigner's budget/caps policy, and pipeline + scheduler
+integration of the third routing mode (structurally absent when off)."""
+import itertools
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.cost import ApiCost
+from repro.serving.assign import (AssignConfig, SolverConfig, WindowAssigner,
+                                  WindowBuffer, correctness_labels,
+                                  solve_assignment, train_window_meta)
+from repro.serving.assign.solver import TRACE_COUNT, pow2_rows
+from repro.serving.pipeline import ServingPipeline, TierSpec
+from repro.serving.strategy import BudgetGovernor, ServingStrategy
+
+D = 8          # toy embedding width
+
+
+# ---------------------------------------------------------------------------
+# solver units
+# ---------------------------------------------------------------------------
+
+
+def _oracle(u, c, caps, budget):
+    """Brute force: best total utility over every feasible assignment
+    (None when no assignment satisfies caps + budget)."""
+    n, m = u.shape
+    best = None
+    for a in itertools.product(range(m), repeat=n):
+        if caps is not None:
+            counts = np.bincount(a, minlength=m)
+            if (counts > caps).any():
+                continue
+        if c[np.arange(n), a].sum() > budget + 1e-12:
+            continue
+        val = u[np.arange(n), a].sum()
+        if best is None or val > best:
+            best = val
+    return best
+
+
+def _random_instance(rng):
+    n = int(rng.integers(2, 8))
+    m = int(rng.integers(2, 5))
+    u = rng.random((n, m))
+    # cheap tiers less useful on average, like the real marketplace
+    u.sort(axis=1)
+    c = np.cumsum(rng.random((n, m)) * 1e-4, axis=1)   # increasing in tier
+    caps = None
+    if rng.random() < 0.6:
+        caps = rng.integers(1, n + 1, size=m).astype(float)
+        while caps.sum() < n:                           # keep it satisfiable
+            caps[rng.integers(m)] += 1
+    budget = float(rng.uniform(0.3, 1.2) * c[:, -1].sum())
+    return u, c, caps, budget
+
+
+def _check_against_oracle(u, c, caps, budget):
+    n, m = u.shape
+    res = solve_assignment(u, c, caps, budget)
+    a = res["assignment"]
+    assert a.shape == (n,) and ((0 <= a) & (a < m)).all()
+    if caps is not None:
+        assert (np.bincount(a, minlength=m) <= caps + 1e-9).all()
+    realized = c[np.arange(n), a].sum()
+    assert res["predicted_cost"] == pytest.approx(realized, abs=1e-12)
+    best = _oracle(u, c, caps, budget)
+    if res["feasible"]:
+        assert realized <= budget * (1 + 1e-6) + 1e-12
+        assert best is not None, "solver claims feasible, oracle disagrees"
+        got = u[np.arange(n), a].sum()
+        assert got >= best - 1e-6, (got, best)
+    else:
+        assert best is None, "oracle found a feasible point solver missed"
+
+
+def test_solver_matches_bruteforce_oracle_seeded_sweep():
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        _check_against_oracle(*_random_instance(rng))
+
+
+def test_solver_unconstrained_is_rowwise_argmax():
+    rng = np.random.default_rng(1)
+    u = rng.random((12, 4))
+    c = rng.random((12, 4)) * 1e-5
+    res = solve_assignment(u, c, None, math.inf)
+    assert res["feasible"]
+    assert np.array_equal(res["assignment"], u.argmax(1))
+
+
+def test_solver_budget_squeezes_toward_cheap_tiers():
+    rng = np.random.default_rng(2)
+    n, m = 16, 3
+    u = np.tile([0.3, 0.6, 0.9], (n, 1)) + 0.01 * rng.random((n, m))
+    c = np.tile([1e-5, 1e-4, 1e-3], (n, 1))
+    rich = solve_assignment(u, c, None, math.inf)
+    poor = solve_assignment(u, c, None, n * 3e-5)
+    assert (rich["assignment"] == 2).all()
+    assert poor["feasible"]
+    assert poor["predicted_cost"] <= n * 3e-5 * (1 + 1e-6)
+    assert poor["predicted_utility"] < rich["predicted_utility"]
+
+
+def test_solver_relaxes_insufficient_caps():
+    u = np.array([[0.2, 0.9]] * 4)
+    c = np.full((4, 2), 1e-5)
+    res = solve_assignment(u, c, np.array([1.0, 1.0]), math.inf)
+    a = res["assignment"]                 # caps sum < n: scaled up to fit
+    assert len(a) == 4
+    counts = np.bincount(a, minlength=2)
+    assert counts.sum() == 4 and counts.max() <= 2
+
+
+def test_solver_validation_and_empty_window():
+    u = np.zeros((3, 2))
+    with pytest.raises(ValueError):
+        solve_assignment(u, np.zeros((2, 2)), None, 1.0)
+    with pytest.raises(ValueError):
+        solve_assignment(u, np.zeros((3, 2)), np.zeros(3), 1.0)
+    res = solve_assignment(np.zeros((0, 2)), np.zeros((0, 2)), None, 1.0)
+    assert len(res["assignment"]) == 0 and res["feasible"]
+
+
+def test_solver_jit_stable_across_pow2_padded_sizes():
+    """One trace per (padded size, tier count, config) — ragged window
+    sizes that pad to the same pow2 must NOT retrace."""
+    cfg = SolverConfig(repair_iters=32, swap_iters=16)
+    rng = np.random.default_rng(3)
+
+    def solve(n):
+        u = rng.random((n, 3))
+        c = rng.random((n, 3)) * 1e-5
+        solve_assignment(u, c, None, float(n) * 5e-6, cfg)
+
+    solve(8)                                   # warm the (8, 3) trace
+    base = TRACE_COUNT[0]
+    for n in (5, 6, 7, 8, 3, 4, 8):            # all pad to 4 or 8
+        assert pow2_rows(n) in (4, 8)
+        solve(n)
+    assert TRACE_COUNT[0] == base + 1          # exactly the (4, 3) trace
+
+
+try:                                           # property-based variant of
+    import hypothesis                          # the oracle sweep, when the
+except ImportError:                            # container has hypothesis
+    hypothesis = None
+
+
+@pytest.mark.skipif(hypothesis is None, reason="hypothesis not installed")
+def test_solver_oracle_property():
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10_000))
+    def prop(seed):
+        _check_against_oracle(
+            *_random_instance(np.random.default_rng(seed)))
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# meta-model units
+# ---------------------------------------------------------------------------
+
+
+def _toy_meta(n_tiers=2, seed=0, steps=200):
+    """Meta trained on separable features: emb[0] > 0 => tier 0 accepts
+    and answers correctly; the last tier always accepts."""
+    rng = np.random.default_rng(seed)
+    emb = rng.normal(size=(600, D)).astype(np.float32)
+    acc = np.zeros((600, n_tiers), np.float32)
+    acc[:, 0] = emb[:, 0] > 0
+    acc[:, 1:] = 1.0
+    return train_window_meta(emb, acc, acc.copy(), steps=steps, seed=seed)
+
+
+def test_correctness_labels_gather():
+    correct = np.array([[1.0, 0.0, 1.0], [0.0, 1.0, 0.0]])
+    y = correctness_labels(correct, apis=(2, 0))
+    assert y.tolist() == [[1.0, 1.0], [0.0, 0.0]]
+
+
+def test_meta_learns_separable_accept():
+    meta = _toy_meta()
+    rng = np.random.default_rng(1)
+    emb = rng.normal(size=(300, D)).astype(np.float32)
+    pa = meta.accept_probs(emb)
+    assert pa.shape == (300, 2)
+    assert (((pa[:, 0] > 0.5) == (emb[:, 0] > 0)).mean()) > 0.9
+
+
+def test_meta_chain_scores_closed_form():
+    """utility/exp_cost must compose the accept/correct heads exactly as
+    the cascade stops: reach_k = prod_{j<k}(1 - p_acc_j)."""
+    meta = _toy_meta(n_tiers=3, steps=60)
+    rng = np.random.default_rng(2)
+    emb = rng.normal(size=(50, D)).astype(np.float32)
+    prices = np.cumsum(rng.random((50, 3)) * 1e-4, axis=1)
+    util, cost = meta.scores(emb, prices)
+    pa, pc = meta.predict(emb)
+    for k in range(50):
+        reach, eu, ec = 1.0, 0.0, 0.0
+        for j in range(3):
+            ec += reach * prices[k, j]
+            stop = reach if j == 2 else reach * pa[k, j]
+            eu += stop * pc[k, j]
+            reach *= 1.0 - pa[k, j]
+        # entry = tier 0 column of the (n, m) matrices
+        assert cost[k, 0] == pytest.approx(ec, rel=2e-3, abs=1e-9)
+        assert util[k, 0] == pytest.approx(eu, rel=2e-3, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# window buffering + assigner policy
+# ---------------------------------------------------------------------------
+
+
+def test_assign_config_validation():
+    with pytest.raises(ValueError, match="window_size"):
+        AssignConfig(window_size=0)
+    with pytest.raises(ValueError, match="window_budget"):
+        AssignConfig(window_budget=0.0)
+    with pytest.raises(ValueError, match="capacity_frac"):
+        AssignConfig(capacity_frac=1.5)
+
+
+def test_window_buffer_due_and_partial_drain():
+    buf = WindowBuffer(AssignConfig(window_size=4, max_wait_s=0.1))
+    assert not buf.due(0.0) and buf.next_due() == math.inf
+    for i in range(3):
+        buf.add(i, now=0.01 * i)
+    assert not buf.due(0.05)                   # not full, not aged
+    assert buf.due(0.11)                       # oldest aged out
+    buf.add(3, now=0.05)
+    assert buf.due(0.06)                       # full
+    assert buf.drain(2) == [0, 1]              # oldest first
+    assert len(buf) == 2
+    assert buf.next_due() == pytest.approx(0.02 + 0.1)
+    assert buf.drain() == [2, 3] and len(buf) == 0
+
+
+def test_window_buffer_deadline_pressure():
+    buf = WindowBuffer(AssignConfig(window_size=8, max_wait_s=10.0))
+    buf.add("a", now=0.0, deadline=1.0)
+    assert not buf.due(0.5)
+    assert buf.due(0.5, pressure_s=0.6)        # solving would overshoot
+    assert buf.next_due() == 1.0
+
+
+def test_assigner_budget_prorated_and_governor_squeeze():
+    meta = _toy_meta(steps=40)
+    asg = WindowAssigner(meta=meta, cfg=AssignConfig(
+        window_size=8, window_budget=8e-4))
+    assert asg.budget_for(8) == pytest.approx(8e-4)
+    assert asg.budget_for(2) == pytest.approx(2e-4)   # pro-rated to fill
+    gov = BudgetGovernor(1e-4, (0.5,), window=4)
+    free = WindowAssigner(meta=meta, cfg=AssignConfig(window_size=8))
+    assert free.budget_for(8, gov) == pytest.approx(8e-4)
+    for _ in range(8):
+        gov.observe(1.0)                       # way over budget
+    assert gov.shift > 0
+    assert free.budget_for(8, gov) < 8e-4      # hot stream: leaner windows
+    assert free.budget_for(8) == math.inf      # no budget source at all
+
+
+def test_assigner_caps_derated_by_utilization():
+    meta = _toy_meta(steps=40)
+    asg = WindowAssigner(meta=meta, cfg=AssignConfig(
+        window_size=8, capacity_frac=0.5))
+    caps = asg.caps_for(8, 2)
+    assert caps.tolist() == [4.0, 4.0]
+    derated = asg.caps_for(8, 2, utilization=[0.9, 0.0])
+    assert derated[0] == 1.0                   # floored, never fully fenced
+    assert derated[1] == 4.0
+    none_cfg = WindowAssigner(meta=meta, cfg=AssignConfig())
+    assert none_cfg.caps_for(8, 2) is None
+
+
+def test_assigner_assign_and_telemetry_roundtrip():
+    meta = _toy_meta(steps=120)
+    asg = WindowAssigner(meta=meta, cfg=AssignConfig(
+        window_size=8, window_budget=1e-3))
+    rng = np.random.default_rng(4)
+    emb = rng.normal(size=(8, D)).astype(np.float32)
+    prices = np.cumsum(rng.random((8, 2)) * 1e-4, axis=1)
+    res = asg.assign(emb, prices)
+    assert res["assignment"].shape == (8,)
+    assert res["budget"] == pytest.approx(1e-3)
+    asg.observe(prices[np.arange(8), res["assignment"]], np.ones(8))
+    snap = asg.snapshot()
+    assert snap["n_windows"] == 1 and snap["n_assigned"] == 8
+    assert snap["window_fill"] == pytest.approx(1.0)
+    assert sum(snap["entry_hist"].values()) == 8
+    assert snap["realized_accept_rate"] == pytest.approx(1.0)
+    assert snap["solver_secs_per_window"] > 0
+
+
+# ---------------------------------------------------------------------------
+# strategy + pipeline + scheduler integration
+# ---------------------------------------------------------------------------
+
+
+def _feature_embed(tokens):
+    return np.asarray(tokens[:, :D], np.float32)
+
+
+def _feature_tokens(n, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, D)).astype(np.float32)
+
+
+def _assign_pipeline(asg=None, governor=None, n_tiers=2, **pipe_kw):
+    prices = [ApiCost(10.0 * 10 ** j, 10.0 * 10 ** j, 0.0)
+              for j in range(n_tiers)]
+    tiers = [TierSpec(f"t{j}", (lambda t, j=j: np.full(len(t), j, np.int32)),
+                      prices[j]) for j in range(n_tiers)]
+    strategy = None
+    if asg is not None:
+        strategy = ServingStrategy(mode="assign", assigner=asg,
+                                   governor=governor)
+    return ServingPipeline(
+        tiers=tiers, thresholds=[0.5] * (n_tiers - 1),
+        scorer=lambda t, a: np.where(t[:, 0] > 0, 0.9, 0.1),
+        embed=_feature_embed, full_prompt_tokens=100, pad_token=-1,
+        batch_size=8, strategy=strategy, **pipe_kw)
+
+
+def test_strategy_mode_validation():
+    meta = _toy_meta(steps=20)
+    asg = WindowAssigner(meta=meta)
+    with pytest.raises(ValueError, match="mode"):
+        ServingStrategy(mode="windowed")
+    with pytest.raises(ValueError, match="assigner"):
+        ServingStrategy(mode="assign")
+    s = ServingStrategy(mode="assign", assigner=asg)
+    snap = s.snapshot(2)
+    assert snap["mode"] == "assign" and snap["assign"] is not None
+
+
+def test_strategy_assign_structurally_absent_when_off():
+    """mode != "assign": no assign key content, no assigner, and the
+    default-constructed strategy still behaves exactly as before."""
+    gov = BudgetGovernor(1.0, (0.5,), window=8)
+    s = ServingStrategy(governor=gov)
+    assert s.mode == "entry" and s.assigner is None
+    snap = s.snapshot(2)
+    assert snap["mode"] == "entry" and snap["assign"] is None
+
+
+def test_pipeline_serve_assign_mode_end_to_end():
+    # toy economics: tier 0 ~1.1e-4/q, tier 1 ~1.1e-3/q; entering a HARD
+    # row at 0 costs MORE in expectation (escalation pays both tiers)
+    # than entering it at 1. 9.5e-4/q clears every window's least-cost
+    # assignment (hard-heavy windows need ~8.6e-4) but binds below the
+    # unconstrained utility argmax (~1.1e-3), so the budget both holds
+    # and actually constrains
+    meta = _toy_meta(steps=200)
+    asg = WindowAssigner(meta=meta, cfg=AssignConfig(
+        window_size=16, window_budget=16 * 9.5e-4))
+    pipe = _assign_pipeline(asg)
+    toks = _feature_tokens(48, seed=5)
+    res = pipe.serve(toks)
+    assert res.strategy is not None and res.strategy["mode"] == "assign"
+    snap = res.strategy["assign"]
+    assert snap["n_windows"] == 3              # 48 misses / 16
+    assert snap["n_assigned"] == 48
+    assert snap["realized_cost_per_q"] > 0     # realized $ folded back
+    # entering a hard row at 0 is strictly dominated (costlier AND less
+    # useful than entering at 1) — the solver must never do it
+    hard = toks[:, 0] < -0.5
+    assert (res.stopped_at[hard] == 1).all()
+    # ... and the budget binds: not every row can afford tier 1, so a
+    # chunk of the (cheap-to-serve) easy rows stays at tier 0
+    assert snap["entry_hist"].get(0, 0) > 0
+    # budget respected in expectation per window
+    assert snap["n_infeasible"] == 0
+    assert snap["predicted_cost_per_q"] <= 9.5e-4 * (1 + 1e-6)
+    assert "assign" in res.latency
+
+
+def test_pipeline_assign_requires_embed():
+    meta = _toy_meta(steps=20)
+    asg = WindowAssigner(meta=meta)
+    donor = _assign_pipeline(asg)
+    with pytest.raises(ValueError, match="embed"):
+        ServingPipeline(
+            tiers=donor.tiers, thresholds=donor.thresholds,
+            scorer=donor.scorer, embed=None, strategy=donor.strategy)
+
+
+def test_scheduler_assign_mode_windows_stream():
+    from repro.serving.sched import SLOConfig
+    meta = _toy_meta(steps=200)
+    asg = WindowAssigner(meta=meta, cfg=AssignConfig(
+        window_size=8, max_wait_s=0.02))
+    pipe = _assign_pipeline(asg)
+    toks = _feature_tokens(32, seed=6)
+    res = pipe.serve_stream(toks, np.linspace(0, 0.05, 32),
+                            max_chunk=8, slo=SLOConfig(deadline_s=30.0))
+    assert (res.stopped_at >= 0).all()
+    snap = res.strategy["assign"]
+    assert snap["n_assigned"] == 32
+    assert snap["n_windows"] >= 4              # never lumped into one
+    assert snap["realized_cost_per_q"] > 0     # realized telemetry folded
+    assert res.ingress["deadline_hit_rate"] == pytest.approx(1.0)
+
+
+def test_scheduler_entry_mode_untouched_by_assign_plumbing():
+    """A strategy-free stream run has no window buffer in its path and
+    produces no assign telemetry."""
+    pipe = _assign_pipeline(None)
+    toks = _feature_tokens(16, seed=7)
+    res = pipe.serve_stream(toks, max_chunk=8)
+    assert res.strategy is None
+    assert "assign" not in res.latency
+    assert (res.stopped_at >= 0).all()

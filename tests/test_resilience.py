@@ -21,7 +21,8 @@ from repro.serving.resilience import (BreakerConfig, CircuitBreaker,
                                       FaultSpec, FaultyTier, RateLimitError,
                                       RetryPolicy, TierFault, TierHealth,
                                       TierTimeout, TransientError,
-                                      invoke_with_retry, wrap_tiers)
+                                      VirtualClock, invoke_with_retry,
+                                      wrap_tiers)
 from repro.serving.sched import (SLOConfig, TierScheduler, rank_speculation,
                                  speculation_ev)
 
@@ -648,3 +649,141 @@ def test_rank_speculation_orders_by_ev_and_keeps_queue_order():
     # cold rows all tie -> stable: the first `cap` in queue order
     cold = [_Row(None) for _ in range(4)]
     assert rank_speculation(cold, [0] * 4, 1, 1.0, cap=2) == cold[:2]
+
+
+# ---------------------------------------------------------------------------
+# terminal-failure backoff crediting, virtual clock, fault groups
+# ---------------------------------------------------------------------------
+
+
+def test_on_backoff_fires_before_terminal_failure():
+    """The on_backoff hook sees every slept backoff — including the
+    ones before a terminal failure, which the returned total (only
+    delivered on success) cannot report."""
+    clk = _FakeClock()
+    pol = RetryPolicy(max_attempts=3, backoff_s=0.1, jitter_frac=0.0)
+    tier, calls = _flaky(99)
+    waits = []
+    with pytest.raises(TransientError):
+        invoke_with_retry(tier, np.arange(2.0), pol, clock=clk,
+                          sleep=clk.sleep, on_backoff=waits.append)
+    assert calls["n"] == 3
+    assert waits == pytest.approx([0.1, 0.2])
+    assert clk.now == pytest.approx(0.3)
+
+
+def test_offline_terminal_failure_credits_backoff():
+    """Every tier down: the rows shed, but the backoff seconds the
+    wasted retries slept still land in the telemetry — they were real
+    added latency even though no attempt ever answered."""
+    clk = _FakeClock()
+    specs = [FaultSpec(error_rate=1.0, seed=21),
+             FaultSpec(error_rate=1.0, seed=22),
+             FaultSpec(error_rate=1.0, seed=23)]
+    pol = RetryPolicy(max_attempts=2, backoff_s=0.05, jitter_frac=0.0)
+    res = execute_cascade(wrap_tiers(_mk_tiers(), specs), [0.5, 0.5],
+                          _scorer, np.arange(4.0), batch_size=4,
+                          retry=pol, clock=clk, sleep=clk.sleep)
+    assert (res["stopped_at"] == -2).all()
+    r = res["resilience"]
+    assert r["retries"] == 3                    # one wasted retry per tier
+    assert r["backoff_s"] == pytest.approx(3 * 0.05)
+    assert clk.now == pytest.approx(r["backoff_s"])
+
+
+def test_virtual_clock_unit():
+    vc = VirtualClock()
+    assert vc() == 0.0
+    vc.sleep(0.25)
+    vc.advance(0.05)
+    assert vc() == pytest.approx(0.30)
+    vc.sleep(-1.0)                              # time never runs backwards
+    assert vc() == pytest.approx(0.30)
+    assert VirtualClock(start=2.0)() == 2.0
+
+
+def test_pipeline_serve_virtual_clock_no_wall_sleep():
+    """Batch serve under a VirtualClock: answers and charged cost match
+    the clean run bit-for-bit, backoff advances *virtual* time, and the
+    wall clock never pays for it."""
+    import time as _t
+    toks = _tokens(16)
+    clean = _toy_pipeline().serve(toks)
+    faults = [FaultSpec(error_rate=0.5, seed=31), None]
+    pol = RetryPolicy(max_attempts=8, backoff_s=0.2, jitter_frac=0.0)
+    vc = VirtualClock()
+    pipe = _toy_pipeline(faults=faults, retry=pol)
+    t0 = _t.perf_counter()
+    res = pipe.serve(toks, clock=vc, sleep=vc.sleep)
+    wall = _t.perf_counter() - t0
+    assert np.array_equal(clean.answers, res.answers)
+    assert (clean.cost == res.cost).all()
+    r = res.ingress["resilience"]
+    assert r["retries"] > 0
+    assert vc() == pytest.approx(r["backoff_s"])
+    assert r["backoff_s"] >= 0.2                # would have wall-slept
+    assert wall < r["backoff_s"]                # ... but did not
+    assert "resilience:" in res.summary()
+    assert clean.ingress is None                # clean batch: no block
+
+
+def test_fault_spec_group_parse_and_field():
+    sp = FaultSpec.parse("error=0.2,group=upstream,seed=3")
+    assert sp.group == "upstream" and sp.error_rate == 0.2 and sp.seed == 3
+    assert FaultSpec().group is None
+
+
+def test_fault_group_broadcast_correlated():
+    """Grouped broadcast: every tier shares the seed, so draw-based
+    faults hit the same invoke indices (one upstream, one schedule);
+    the ungrouped broadcast keeps the per-tier seed offsets and
+    decorrelates."""
+    def pattern(spec):
+        out = []
+        for ft in wrap_tiers(_mk_tiers(), spec):
+            seq = []
+            for _ in range(20):
+                try:
+                    ft.invoke(np.arange(2.0))
+                    seq.append(0)
+                except TierFault:
+                    seq.append(1)
+            out.append(seq)
+        return out
+
+    corr = pattern(FaultSpec(error_rate=0.4, seed=5, group="upstream"))
+    assert corr[0] == corr[1] == corr[2]
+    indep = pattern(FaultSpec(error_rate=0.4, seed=5))
+    assert indep[0] != indep[1]
+
+
+def test_fault_group_list_adopts_first_members_seed():
+    specs = [FaultSpec(error_rate=0.3, seed=1, group="u"),
+             FaultSpec(error_rate=0.3, seed=99, group="u"),
+             FaultSpec(error_rate=0.3, seed=42)]
+    tiers = wrap_tiers(_mk_tiers(), specs)
+    assert tiers[0].spec.seed == 1 and tiers[1].spec.seed == 1
+    assert tiers[2].spec.seed == 42             # ungrouped: untouched
+
+
+def test_breaker_fleet_survives_correlated_outage():
+    """Regression for the correlated-failure scenario the independent
+    model can't produce: one upstream outage takes tiers a AND b down
+    together. Both breakers trip, every row fails over to the
+    independent tier c, nothing sheds."""
+    clk = _FakeClock()                          # t=0: inside the window
+    specs = [FaultSpec(outage=(0.0, 50.0), group="u", seed=8),
+             FaultSpec(outage=(0.0, 50.0), group="u", seed=8),
+             None]
+    res = execute_cascade(
+        wrap_tiers(_mk_tiers(), specs, clock=clk, sleep=clk.sleep),
+        [0.5, 0.5], _scorer, np.arange(8.0), batch_size=2,
+        retry=RetryPolicy(max_attempts=1),
+        breaker=BreakerConfig(window=4, fail_rate=0.5, min_samples=2,
+                              cooldown_s=100.0),
+        clock=clk, sleep=clk.sleep)
+    assert (res["stopped_at"] == 2).all()
+    r = res["resilience"]
+    assert r["trips"] == 2 and r["shed"] == 0
+    assert r["breakers"][0]["state"] == "open"
+    assert r["breakers"][1]["state"] == "open"
