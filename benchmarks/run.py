@@ -43,6 +43,7 @@ def main() -> None:
         ("placement_overlap", bench_serving.bench_placement_overlap),
         ("contextual_routing", bench_strategy.bench_contextual_routing),
         ("budget_governor", bench_strategy.bench_budget_governor),
+        ("guarantee", bench_strategy.bench_guarantee),
     ]
     for name, fn in paper_benches:
         rows, derived, secs = fn()

@@ -1,0 +1,30 @@
+"""Version-compat shims shared by the Pallas kernel family.
+
+JAX renamed the TPU compiler-params dataclass: newer releases expose
+``pltpu.CompilerParams``, while the pinned toolchain here still ships
+``pltpu.TPUCompilerParams``. Every kernel builds its params through
+:func:`tpu_compiler_params` so the rename is absorbed in ONE place
+instead of four `try/except` blocks that drift apart.
+"""
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+#: the TPU compiler-params class under whichever name this JAX exports
+TPUCompilerParams = getattr(pltpu, "CompilerParams", None)
+if TPUCompilerParams is None:
+    TPUCompilerParams = pltpu.TPUCompilerParams
+
+#: the TPU memory-space enum went through the same rename
+TPUMemorySpace = getattr(pltpu, "MemorySpace", None)
+if TPUMemorySpace is None:
+    TPUMemorySpace = pltpu.TPUMemorySpace
+
+#: scalar-prefetch memory space for BlockSpec(memory_space=...)
+SMEM = TPUMemorySpace.SMEM
+
+
+def tpu_compiler_params(**kwargs):
+    """Build TPU compiler params (``dimension_semantics=...`` etc.)
+    against whichever class name the installed JAX exposes."""
+    return TPUCompilerParams(**kwargs)

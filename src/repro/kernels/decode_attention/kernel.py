@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import SMEM, tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -72,7 +74,7 @@ def decode_attention(q, k, v, length, *, bk: int = 512,
         kernel,
         grid=(b, kvh, nk),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
+            pl.BlockSpec(memory_space=SMEM),
             pl.BlockSpec((1, 1, g, d), lambda bi, hi, kj: (bi, hi, 0, 0)),
             pl.BlockSpec((1, bk, 1, d), lambda bi, hi, kj: (bi, kj, hi, 0)),
             pl.BlockSpec((1, bk, 1, dv), lambda bi, hi, kj: (bi, kj, hi, 0)),
@@ -84,7 +86,7 @@ def decode_attention(q, k, v, length, *, bk: int = 512,
             pltpu.VMEM((g,), jnp.float32),
             pltpu.VMEM((g,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(length_arr, q, k, v)

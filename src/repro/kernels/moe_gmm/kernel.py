@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import tpu_compiler_params
+
 
 def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
     kj = pl.program_id(3)
@@ -52,7 +54,7 @@ def gmm(x, w, *, bc: int = 128, bf: int = 128, bk: int = 128,
         out_specs=pl.BlockSpec((1, bc, bf), lambda ei, ci, fi, kj: (ei, ci, fi)),
         out_shape=jax.ShapeDtypeStruct((e, c, f), x.dtype),
         scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

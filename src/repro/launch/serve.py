@@ -11,6 +11,9 @@ Demo (CPU):
       --contextual --budget-rate 3e-5     # entry routing + spend governor
   PYTHONPATH=src python -m repro.launch.serve --requests 200 \\
       --assign --window-budget 1e-3       # budgeted window assignment
+  PYTHONPATH=src python -m repro.launch.serve --requests 400 \\
+      --contextual --budget-rate 3e-5 --guarantee --acc-gap 0.05 \\
+      --shadow-frac 0.1    # accuracy floor: P(gap > delta) <= alpha
   PYTHONPATH=src python -m repro.launch.serve --requests 200 --stream \\
       --devices 4 --on-device-compact     # per-tier device placement
   PYTHONPATH=src python -m repro.launch.serve --requests 200 --stream \\
@@ -167,6 +170,25 @@ def main():
                          "entry bar to hold it")
     ap.add_argument("--governor-window", type=int, default=64,
                     help="queries per governor controller update")
+    ap.add_argument("--guarantee", action="store_true",
+                    help="accuracy-guaranteed frugality (online SMART "
+                         "calibration): shadow-sample served queries "
+                         "against the reference (top) tier, hold "
+                         "anytime-valid sequential confidence intervals "
+                         "on the gap-to-reference, and tighten the "
+                         "cascade thresholds so P(gap > delta) <= alpha "
+                         "— the guarantee side can veto the budget "
+                         "governor's cost-driven loosening. Shadow "
+                         "invocations are charged to a separate meter")
+    ap.add_argument("--acc-gap", type=float, default=0.05,
+                    help="guarantee: tolerable accuracy gap delta vs "
+                         "the reference tier (disagreement rate)")
+    ap.add_argument("--acc-alpha", type=float, default=0.05,
+                    help="guarantee: failure probability alpha of the "
+                         "sequential guarantee")
+    ap.add_argument("--shadow-frac", type=float, default=0.1,
+                    help="guarantee: fraction of served queries "
+                         "shadow-routed to the reference tier")
     ap.add_argument("--devices", type=int, default=None,
                     help="pin each cascade tier's model to its own "
                          "device, sized by offline traffic share "
@@ -281,6 +303,14 @@ def main():
                  "dials; add --assign")
     if args.assign and args.window_size < 1:
         ap.error("--window-size must be >= 1")
+    if args.guarantee and args.serial:
+        ap.error("--guarantee runs on the batch path or the parallel "
+                 "scheduler; drop --serial")
+    if not args.guarantee and (args.acc_gap != 0.05
+                               or args.acc_alpha != 0.05
+                               or args.shadow_frac != 0.1):
+        ap.error("--acc-gap/--acc-alpha/--shadow-frac are guarantee "
+                 "dials; add --guarantee")
     if args.virtual_clock and args.stream:
         ap.error("--virtual-clock drives the offline batch executor; "
                  "drop --stream (the stream scheduler owns its clock)")
@@ -317,6 +347,15 @@ def main():
         assign_cfg = AssignConfig(window_size=args.window_size,
                                   window_budget=args.window_budget,
                                   capacity_frac=args.capacity_frac)
+    guarantee_cfg = None
+    if args.guarantee:
+        from repro.serving.guarantee import GuaranteeConfig
+        try:
+            guarantee_cfg = GuaranteeConfig(delta=args.acc_gap,
+                                            alpha=args.acc_alpha,
+                                            sample_frac=args.shadow_frac)
+        except ValueError as e:
+            ap.error(f"--guarantee: {e}")
 
     pipe, _ = build_pipeline(BuildConfig(
         task=args.task, tiers=tuple(args.tiers.split(",")),
@@ -325,6 +364,7 @@ def main():
         enable_prompt_adaptation=not args.no_prompt_adaptation,
         contextual=args.contextual, entry_bar=args.entry_bar,
         budget_rate=args.budget_rate, assign=assign_cfg,
+        guarantee=guarantee_cfg,
         governor_window=args.governor_window,
         place_tiers=args.devices is not None,
         shard_tiers=mesh_shape is not None, mesh_shape=mesh_shape,

@@ -50,6 +50,14 @@ Modules
               overload degradation routes degraded arrivals to the
               cheapest tier clearing a reduced predicted bar. Composed
               as a ``ServingStrategy`` on ``pipeline.strategy``.
+``guarantee`` accuracy-guaranteed frugality (online SMART calibration):
+              a seeded shadow sample of live traffic is re-run on the
+              reference (top) tier, anytime-valid sequential confidence
+              intervals track each threshold configuration's
+              gap-to-reference, and a tighten ladder caps the budget
+              governor's shift so ``P(gap > delta) <= alpha`` holds
+              under drift the frozen offline grid would violate. Shadow
+              labels also retrain the contextual router online.
 ``builder``   ``build_pipeline(BuildConfig)`` — train tiers, collect
               offline data, train the scorer, select prompts, learn the
               cascade, assemble the pipeline (with ``contextual=True`` /
@@ -98,6 +106,11 @@ from repro.serving.strategy import (  # noqa: F401
     BudgetGovernor,
     ContextualRouter,
     ServingStrategy,
+)
+from repro.serving.guarantee import (  # noqa: F401
+    GuaranteeConfig,
+    GuaranteeController,
+    RouterRetrainer,
 )
 from repro.serving.engine import (  # noqa: F401
     CascadeServer,

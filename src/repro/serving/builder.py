@@ -120,6 +120,15 @@ class BuildConfig:
     # mode="assign" — the third routing mode, beside fixed thresholds
     # and greedy contextual entry. None = structurally absent.
     assign: object | None = None        # assign.AssignConfig | None
+    # accuracy-guaranteed frugality (repro.serving.guarantee): a
+    # GuaranteeConfig(delta=, alpha=, sample_frac=) shadow-samples live
+    # traffic against the reference (top) tier, holds anytime-valid
+    # sequential confidence intervals on the gap-to-reference, and caps
+    # the governor's threshold shift so P(gap > delta) <= alpha — the
+    # spend controller's second dual constraint. Shadow invocations are
+    # charged to a separate meter. None = structurally absent
+    # (bit-identical serving).
+    guarantee: object | None = None     # guarantee.GuaranteeConfig | None
     # unadapted few-shot prompt shape (paper's 8-shot HEADLINES scale)
     n_shot: int = 8
     tokens_per_example: int = 110
@@ -278,6 +287,19 @@ def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
         assigner = WindowAssigner(meta=meta, cfg=cfg.assign)
         say(f"  window meta: {len(cas.apis)} tiers, "
             f"window_size={cfg.assign.window_size}")
+    guarantee_ctrl = None
+    if cfg.guarantee is not None:
+        from repro.serving.guarantee import (GuaranteeController,
+                                             RouterRetrainer)
+        retrainer = None
+        if cfg.guarantee.retrain and entry_router is not None:
+            retrainer = RouterRetrainer(entry_router)
+        guarantee_ctrl = GuaranteeController(cfg.guarantee,
+                                             retrainer=retrainer)
+        say(f"== accuracy guarantee: gap <= {cfg.guarantee.delta} at "
+            f"alpha {cfg.guarantee.alpha} "
+            f"({cfg.guarantee.sample_frac:.0%} shadow"
+            f"{', online router retraining' if retrainer else ''}) ==")
     if cfg.budget_rate is not None:
         governor = BudgetGovernor(cfg.budget_rate, cas.thresholds,
                                   base_bar=cfg.entry_bar,
@@ -285,15 +307,17 @@ def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
                                   if cfg.enable_cache else None,
                                   base_threshold=cfg.cache_threshold
                                   if cfg.enable_cache else None,
-                                  window=cfg.governor_window)
+                                  window=cfg.governor_window,
+                                  guarantee=guarantee_ctrl)
     if (entry_router is not None or governor is not None
-            or assigner is not None):
+            or assigner is not None or guarantee_ctrl is not None):
         strategy = ServingStrategy(router=entry_router, governor=governor,
                                    entry_bar=cfg.entry_bar,
                                    degrade_relief=cfg.degrade_relief,
                                    mode=("assign" if assigner is not None
                                          else "entry"),
-                                   assigner=assigner)
+                                   assigner=assigner,
+                                   guarantee=guarantee_ctrl)
 
     # 6. per-tier device placement: the offline replay's per-tier
     #    pending counts are the traffic-share signal (the online
@@ -367,5 +391,6 @@ def build_pipeline(cfg: BuildConfig) -> tuple[ServingPipeline, dict]:
               "cascade": cas, "metrics": metrics, "budget": budget,
               "prompts": prompts, "full_prompt_tokens": full_tokens,
               "strategy": strategy, "joint": joint_report,
+              "guarantee": guarantee_ctrl,
               "placement": placement, "mesh_plan": mesh_plan}
     return pipeline, report

@@ -1,0 +1,32 @@
+"""``repro.serving.guarantee`` — accuracy-guaranteed frugality.
+
+Online SMART calibration (arXiv 2403.13835) for the cascade: the user
+states a tolerable accuracy gap ``delta`` vs. the reference (top) tier
+and a level ``alpha``; a seeded shadow sample of live traffic is also
+sent to the reference tier, anytime-valid sequential confidence
+intervals track each threshold configuration's gap-to-reference, and a
+tighten ladder caps the budget governor's threshold shift so that
+``P(gap > delta) <= alpha`` holds under drift the frozen offline grid
+would violate.  Shadow labels additionally retrain the contextual
+entry router online.
+
+Modules: ``bounds`` (time-uniform Hoeffding / empirical-Bernstein
+confidence sequences), ``controller`` (``GuaranteeConfig`` /
+``GuaranteeController``: shadow sampler, per-level intervals, shift
+cap), ``retrain`` (``RouterRetrainer``: masked-BCE online router
+updates from realized accepts + shadow agreement labels).
+
+Opt-in: with ``guarantee=None`` every serve path is bit-identical to a
+strategy without the layer (proven by the equivalence-matrix legs in
+``tests/test_placement.py``).
+"""
+from repro.serving.guarantee.bounds import (  # noqa: F401
+    GapStat,
+    bernstein_radius,
+    hoeffding_radius,
+)
+from repro.serving.guarantee.controller import (  # noqa: F401
+    GuaranteeConfig,
+    GuaranteeController,
+)
+from repro.serving.guarantee.retrain import RouterRetrainer  # noqa: F401

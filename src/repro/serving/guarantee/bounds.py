@@ -1,0 +1,135 @@
+"""Anytime-valid sequential confidence bounds on a bounded mean.
+
+The guarantee layer watches a stream of *gap observations* ``g_t`` in
+``[0, 1]`` (1 when the cascade's answer disagrees with the reference
+tier's, 0 when it agrees — the disagreement rate upper-bounds the
+accuracy gap, since queries where both are right or both are wrong
+cancel).  It needs a confidence interval on ``E[g]`` that is valid *at
+every stopping time simultaneously*: the controller peeks after every
+window and acts on what it sees, so a fixed-``n`` Hoeffding/Bernstein
+interval would silently lose its coverage.
+
+Both bounds here are time-uniform via a union over doubling epochs
+(the "stitching" construction of Howard et al., 2021): the failure
+budget ``alpha`` is spread over epochs ``[2^k, 2^{k+1})`` with an
+``O(1/k^2)`` schedule, which costs only an ``O(log log n)`` widening
+over the fixed-``n`` radius.
+
+* :func:`hoeffding_radius` — distribution-free, scales as
+  ``sqrt(log(..)/n)``.  Simple, but loose for the small disagreement
+  rates the guarantee cares about.
+* :func:`bernstein_radius` — empirical-Bernstein (Maurer & Pontil,
+  2009, stitched): scales with the *empirical variance*, so for a
+  Bernoulli(``p``) gap stream with small ``p`` the radius shrinks like
+  ``sqrt(p log(..)/n)`` — the reason it is the default bound.
+
+Coverage is exercised empirically in ``tests/test_guarantee.py``
+(uniform-over-time violation rate under H0 stays below ``alpha``).
+"""
+from __future__ import annotations
+
+import math
+
+__all__ = [
+    "bernstein_radius",
+    "hoeffding_radius",
+    "GapStat",
+]
+
+
+def _union_log(n: int, alpha: float) -> float:
+    """Log failure-budget term, time-uniform over doubling epochs.
+
+    ``log(1/alpha_k)`` where epoch ``k = floor(log2 n)`` receives
+    ``alpha_k = alpha / (2 (k+1)^2)`` of the budget (``sum_k alpha_k
+    <= alpha * pi^2/12 < alpha``).
+    """
+    if not (0.0 < alpha < 1.0):
+        raise ValueError(f"alpha must be in (0, 1), got {alpha}")
+    k = int(math.log2(n)) if n >= 1 else 0
+    return math.log(2.0 * (k + 1) ** 2 / alpha)
+
+
+def hoeffding_radius(n: int, alpha: float) -> float:
+    """Time-uniform Hoeffding radius for a mean of ``[0, 1]`` variables.
+
+    ``P(exists n >= 1: |mean_n - mu| > radius(n)) <= alpha``.
+    """
+    if n <= 0:
+        return 1.0
+    return min(1.0, math.sqrt(_union_log(n, alpha) / (2.0 * n)))
+
+
+def bernstein_radius(n: int, var: float, alpha: float) -> float:
+    """Time-uniform empirical-Bernstein radius (Maurer–Pontil form).
+
+    ``var`` is the empirical variance of the first ``n`` observations.
+    The ``sqrt(2 var L / n)`` term dominates once the stream settles;
+    the ``7L/(3(n-1))`` term pays for estimating the variance.
+    """
+    if n <= 1:
+        return 1.0
+    ell = _union_log(n, alpha)
+    var = max(0.0, float(var))
+    return min(1.0, math.sqrt(2.0 * var * ell / n) + 7.0 * ell / (3.0 * (n - 1)))
+
+
+class GapStat:
+    """Running (n, mean, variance) of one configuration's gap stream,
+    with anytime-valid upper/lower confidence bounds.
+
+    Welford accumulation keeps the variance numerically stable; the
+    bound family is chosen per call so the controller can expose both.
+    """
+
+    __slots__ = ("n", "_mean", "_m2", "last_fed")
+
+    def __init__(self) -> None:
+        self.reset()
+
+    def reset(self) -> None:
+        self.n = 0
+        self._mean = 0.0
+        self._m2 = 0.0
+        self.last_fed = 0
+
+    def add(self, gap: float, *, clock: int = 0) -> None:
+        """Fold one observation ``gap`` in ``[0, 1]`` into the stream.
+
+        ``clock`` is the controller's global observation counter, kept
+        so stale configurations can be detected and re-tested after
+        drift rather than trusted forever.
+        """
+        if not (0.0 <= gap <= 1.0) or gap != gap:
+            raise ValueError(f"gap observation must be in [0, 1], got {gap}")
+        self.n += 1
+        d = gap - self._mean
+        self._mean += d / self.n
+        self._m2 += d * (gap - self._mean)
+        self.last_fed = clock
+
+    @property
+    def mean(self) -> float:
+        return self._mean if self.n else 0.0
+
+    @property
+    def var(self) -> float:
+        return self._m2 / self.n if self.n else 0.0
+
+    def radius(self, alpha: float, bound: str = "bernstein") -> float:
+        if bound == "bernstein":
+            return bernstein_radius(self.n, self.var, alpha)
+        if bound == "hoeffding":
+            return hoeffding_radius(self.n, alpha)
+        raise ValueError(f"unknown bound {bound!r} (want bernstein|hoeffding)")
+
+    def ucb(self, alpha: float, bound: str = "bernstein") -> float:
+        """Anytime-valid upper bound on the true gap (1.0 until data)."""
+        if self.n == 0:
+            return 1.0
+        return min(1.0, self.mean + self.radius(alpha, bound))
+
+    def lcb(self, alpha: float, bound: str = "bernstein") -> float:
+        if self.n == 0:
+            return 0.0
+        return max(0.0, self.mean - self.radius(alpha, bound))

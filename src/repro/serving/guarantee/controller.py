@@ -1,0 +1,267 @@
+"""Online SMART calibration: shadow sampling + sequential guarantee.
+
+The offline grid search freezes cascade thresholds on a build-time
+split; under drift the frozen grid can silently trade accuracy for
+cost.  This module inverts the contract (SMART, arXiv 2403.13835): the
+user states a tolerable accuracy gap ``delta`` vs. the *reference*
+model — the cascade's top tier — and a failure level ``alpha``, and the
+controller enforces ``P(gap > delta) <= alpha`` online:
+
+1. **Shadow sampling.**  A seeded, deterministic fraction
+   ``sample_frac`` of served queries is also routed to the reference
+   tier in shadow.  The comparison yields a gap observation in
+   ``[0, 1]`` (answer disagreement upper-bounds the accuracy gap).
+   Shadow invocations are charged to a separate meter — they never
+   touch per-request cost or the governor's spend rate.
+2. **Per-configuration sequential intervals.**  Control authority is a
+   ladder of ``levels`` tighten settings, each mapping to a cap on the
+   governor's threshold shift (level 0 = no veto, top level = force
+   full tightening).  Each level keeps its own anytime-valid
+   confidence sequence (``bounds.GapStat``), so evidence gathered
+   under one threshold configuration is never silently attributed to
+   another.
+3. **Sequential-test triad.**  Every ``window`` observations the
+   controller reads the *current* level's interval and acts only on
+   certified evidence: LCB above ``delta`` → the gap provably exceeds
+   the contract, climb the ladder (two levels when the violation is
+   gross); UCB at or below ``delta`` → the configuration is certified
+   safe, relax one level toward 0; anything in between → hold.  Under
+   H0 (true gap ``<= delta``) a spurious tighten therefore has
+   probability ``<= alpha`` per evidence segment — the anytime-valid
+   guarantee.  Two hygiene rules keep the evidence honest under drift:
+   a level revisited after ``stale_after`` observations of absence is
+   reset before being trusted, and any level's stream restarts after
+   ``stat_cap`` observations (rolling segments — a long-gone regime
+   cannot pin the test forever; each segment is its own anytime-valid
+   test, so ``alpha`` is spent per segment, not per lifetime).
+
+The ladder position is exposed to :class:`~repro.serving.strategy.
+governor.BudgetGovernor` as :meth:`shift_cap` — the guarantee-side
+multiplier of the governor's dual: the cost side may *want* to loosen
+thresholds (positive shift) but the effective shift is clamped to the
+cap, so the accuracy floor vetoes cost-driven loosening.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.guarantee.bounds import GapStat
+
+__all__ = ["GuaranteeConfig", "GuaranteeController"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GuaranteeConfig:
+    """User-facing accuracy-guarantee contract.
+
+    ``delta``        tolerable gap-to-reference (disagreement rate).
+    ``alpha``        failure probability of the sequential guarantee.
+    ``sample_frac``  fraction of served queries shadowed to the
+                     reference tier (charged separately).
+    ``window``       shadow observations between controller decisions.
+    ``bound``        ``"bernstein"`` (variance-adaptive, default) or
+                     ``"hoeffding"``.
+    ``levels``       size of the tighten ladder (control resolution).
+    ``min_samples``  interval is not acted on before this many
+                     observations at the current level.
+    ``stale_after``  per-level evidence older than this many global
+                     observations is discarded on re-entry.
+    ``stat_cap``     per-level evidence horizon: the level's stream
+                     restarts (a fresh sequential test) after this many
+                     observations, so old regimes age out.
+    ``seed``         seeds the deterministic shadow sampler.
+    ``retrain``      also retrain the entry router online from shadow
+                     labels (needs a contextual strategy).
+    """
+
+    delta: float = 0.05
+    alpha: float = 0.05
+    sample_frac: float = 0.1
+    window: int = 32
+    bound: str = "bernstein"
+    levels: int = 8
+    min_samples: int = 8
+    stale_after: int = 512
+    stat_cap: int = 2048
+    seed: int = 0
+    retrain: bool = True
+    trace_len: int = 256
+
+    def __post_init__(self) -> None:
+        if not (0.0 < self.delta < 1.0):
+            raise ValueError(f"delta must be in (0, 1), got {self.delta}")
+        if not (0.0 < self.alpha < 1.0):
+            raise ValueError(f"alpha must be in (0, 1), got {self.alpha}")
+        if not (0.0 < self.sample_frac <= 1.0):
+            raise ValueError(
+                f"sample_frac must be in (0, 1], got {self.sample_frac}")
+        if self.window < 1:
+            raise ValueError(f"window must be >= 1, got {self.window}")
+        if self.levels < 2:
+            raise ValueError(f"levels must be >= 2, got {self.levels}")
+        if self.bound not in ("bernstein", "hoeffding"):
+            raise ValueError(f"unknown bound {self.bound!r}")
+
+
+class GuaranteeController:
+    """Sequential gap monitor + tighten-ladder controller.
+
+    Thread-safety contract matches the rest of the strategy layer:
+    callers serialize mutation (the scheduler holds its lock around
+    ``observe``/``should_sample``; the batch path is single-threaded).
+    """
+
+    def __init__(self, cfg: GuaranteeConfig,
+                 retrainer: Optional[Any] = None) -> None:
+        self.cfg = cfg
+        self.retrainer = retrainer
+        k = cfg.levels
+        self._stats: List[GapStat] = [GapStat() for _ in range(k)]
+        self.level = 0
+        self.clock = 0           # global gap-observation counter
+        self._win = 0            # observations since last decision
+        self._next_id = 0        # shadow-sampling draw counter
+        self.n_shadow = 0        # sampled queries (incl. free top-tier)
+        self.n_invoked = 0       # sampled queries that cost a reference call
+        self.n_aborted = 0       # sampled queries lost to faults/overload
+        self.shadow_cost = 0.0   # $ charged to the shadow meter
+        self.dropped_obs = 0     # invalid observations refused
+        self.trace: Deque[Dict[str, float]] = deque(maxlen=cfg.trace_len)
+
+    # -- shadow sampling -------------------------------------------------
+    def should_sample(self) -> bool:
+        """Deterministic coin for the next served query.
+
+        Draws are keyed on ``(seed, draw index)`` so a fixed seed
+        reproduces the exact shadow subset regardless of wall clock or
+        worker interleaving *within one serve order*.
+        """
+        k = self._next_id
+        self._next_id += 1
+        u = float(np.random.default_rng([self.cfg.seed, k]).random())
+        return u < self.cfg.sample_frac
+
+    # -- gap stream ------------------------------------------------------
+    def observe(self, gap: float, cost: float = 0.0,
+                invoked: bool = False) -> None:
+        """Fold one shadow comparison into the current level's stream.
+
+        ``gap`` in [0, 1] (1 = cascade disagreed with the reference),
+        ``cost`` the reference-tier invocation charged to the shadow
+        meter, ``invoked`` whether a real reference call was made (a
+        query that already stopped at the top tier is a free zero-gap
+        observation).
+        """
+        gap = float(gap)
+        cost = float(cost)
+        if not (0.0 <= gap <= 1.0) or gap != gap or not (cost >= 0.0) \
+                or cost != cost or not np.isfinite(cost):
+            self.dropped_obs += 1
+            return
+        self.clock += 1
+        self._stats[self.level].add(gap, clock=self.clock)
+        self.n_shadow += 1
+        if invoked:
+            self.n_invoked += 1
+            self.shadow_cost += cost
+        self._win += 1
+        while self._win >= self.cfg.window:
+            self._win -= self.cfg.window
+            self._decide()
+
+    def abort(self) -> None:
+        """A sampled query's shadow call failed — no observation."""
+        self.n_aborted += 1
+
+    # -- ladder ----------------------------------------------------------
+    def _enter(self, level: int) -> None:
+        st = self._stats[level]
+        if st.n and self.clock - st.last_fed > self.cfg.stale_after:
+            st.reset()  # drift: evidence from a past regime is void
+        self.level = level
+
+    def _decide(self) -> None:
+        cfg = self.cfg
+        st = self._stats[self.level]
+        if st.n >= cfg.stat_cap:
+            # rolling evidence horizon: restart the level's sequential
+            # test so a long-passed regime cannot pin it forever
+            st.reset()
+        ucb = st.ucb(cfg.alpha, cfg.bound)
+        lcb = st.lcb(cfg.alpha, cfg.bound)
+        if st.n >= cfg.min_samples:
+            if lcb > cfg.delta:
+                # certified violating: the gap provably exceeds delta
+                # at this setting — tighten (harder when gross)
+                step = 2 if lcb > 2.0 * cfg.delta else 1
+                self._enter(min(cfg.levels - 1, self.level + step))
+            elif ucb <= cfg.delta and self.level > 0:
+                # certified safe: probe one level looser so the cost
+                # savings are recovered once the drift passes
+                self._enter(self.level - 1)
+            # in between: uncertain — hold the current setting
+        self.trace.append({
+            "clock": self.clock,
+            "level": self.level,
+            "gap_hat": st.mean,
+            "gap_ucb": ucb,
+            "gap_lcb": lcb,
+            "cap": self.shift_cap(1.0),
+        })
+
+    def shift_cap(self, max_shift: float) -> float:
+        """Largest governor shift the guarantee allows, in
+        ``[-max_shift, +max_shift]``.
+
+        Level 0 returns ``+max_shift`` (no veto); the top level returns
+        ``-max_shift`` (force full tightening).  The governor applies
+        ``effective_shift = min(cost_shift, shift_cap)``.
+        """
+        frac = self.level / (self.cfg.levels - 1)
+        return float(max_shift) * (1.0 - 2.0 * frac)
+
+    # -- introspection ---------------------------------------------------
+    @property
+    def gap_hat(self) -> float:
+        return self._stats[self.level].mean
+
+    @property
+    def gap_ucb(self) -> float:
+        return self._stats[self.level].ucb(self.cfg.alpha, self.cfg.bound)
+
+    @property
+    def gap_lcb(self) -> float:
+        return self._stats[self.level].lcb(self.cfg.alpha, self.cfg.bound)
+
+    @property
+    def certified(self) -> bool:
+        """Current configuration's gap is certified <= delta."""
+        st = self._stats[self.level]
+        return st.n >= self.cfg.min_samples and self.gap_ucb <= self.cfg.delta
+
+    def snapshot(self) -> Dict[str, Any]:
+        out = {
+            "delta": self.cfg.delta,
+            "alpha": self.cfg.alpha,
+            "sample_frac": self.cfg.sample_frac,
+            "bound": self.cfg.bound,
+            "level": self.level,
+            "levels": self.cfg.levels,
+            "n_shadow": self.n_shadow,
+            "n_invoked": self.n_invoked,
+            "n_aborted": self.n_aborted,
+            "shadow_cost": self.shadow_cost,
+            "dropped_obs": self.dropped_obs,
+            "gap_hat": self.gap_hat,
+            "gap_ucb": self.gap_ucb,
+            "gap_lcb": self.gap_lcb,
+            "certified": self.certified,
+            "trace": list(self.trace),
+        }
+        if self.retrainer is not None:
+            out["retrain"] = self.retrainer.snapshot()
+        return out

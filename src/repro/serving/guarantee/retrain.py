@@ -1,0 +1,133 @@
+"""Online entry-router retraining from serving telemetry.
+
+The contextual router ships frozen from the offline build; under drift
+its accept predictions go stale, and the predicted-vs-realized accept
+telemetry the strategy layer already records was collected but never
+consumed.  The guarantee layer closes that loop with two label
+streams, both free at serve time:
+
+* **realized accepts** — every routed query yields ``(embedding,
+  entry position, was the entry tier's answer accepted)``, exactly the
+  event the router predicts at non-final positions;
+* **shadow labels** — every shadow-sampled query yields ``(embedding,
+  stopping position, did the answer agree with the reference tier)``,
+  a correctness proxy that supervises positions (notably the final
+  one, whose offline label was build-split correctness).
+
+Observations land in a fixed-capacity ring buffer; every ``interval``
+observations one masked-BCE AdamW step runs over the buffer and the
+router's parameters are swapped in place.  Buffers are fixed-shape so
+the jitted step compiles once per (capacity, d, m).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.strategy.router import _mlp_forward
+from repro.training.optim import OptConfig, adamw_update, init_opt_state
+
+__all__ = ["RouterRetrainer"]
+
+
+class RouterRetrainer:
+    """Masked-BCE online updates for a ``ContextualRouter``.
+
+    Mutation contract matches the strategy layer: callers serialize
+    ``observe``/``maybe_step`` (scheduler lock / single-threaded batch
+    path).  The router's ``params`` attribute is replaced atomically
+    after each step, so concurrent readers only ever see a full
+    parameter set.
+    """
+
+    def __init__(self, router: Any, *, lr: float = 1e-3,
+                 capacity: int = 512, interval: int = 64,
+                 min_fill: int = 32) -> None:
+        if capacity < 1 or interval < 1 or min_fill < 1:
+            raise ValueError("capacity/interval/min_fill must be >= 1")
+        self.router = router
+        self.lr = lr
+        self.capacity = capacity
+        self.interval = interval
+        self.min_fill = min(min_fill, capacity)
+        self.steps = 0
+        self.n_observed = 0
+        self.last_loss = float("nan")
+        self._since = 0
+        self._fill = 0
+        self._head = 0
+        self._emb: Optional[np.ndarray] = None   # (capacity, d)
+        self._pos: Optional[np.ndarray] = None   # (capacity,)
+        self._lab: Optional[np.ndarray] = None
+        self._opt = OptConfig(lr=lr, warmup=1, total_steps=100_000,
+                              weight_decay=0.0)
+        self._state = init_opt_state(router.params)
+        self._step_fn = None
+
+    # -- label streams ---------------------------------------------------
+    def observe(self, emb, pos: int, label: float) -> None:
+        """Record one (embedding, position, accept/agree label)."""
+        emb = np.asarray(emb, np.float32).reshape(-1)
+        if not np.all(np.isfinite(emb)):
+            return
+        pos = int(pos)
+        if not (0 <= pos < self.router.n_tiers):
+            return
+        if self._emb is None:
+            self._emb = np.zeros((self.capacity, emb.shape[0]), np.float32)
+            self._pos = np.zeros((self.capacity,), np.int32)
+            self._lab = np.zeros((self.capacity,), np.float32)
+        self._emb[self._head] = emb
+        self._pos[self._head] = pos
+        self._lab[self._head] = float(bool(label))
+        self._head = (self._head + 1) % self.capacity
+        self._fill = min(self._fill + 1, self.capacity)
+        self.n_observed += 1
+        self._since += 1
+
+    # -- updates ---------------------------------------------------------
+    def _build_step(self):
+        opt = self._opt
+
+        def step(params, state, x, pos, y, w):
+            def loss_fn(p):
+                logit = _mlp_forward(p, x)
+                z = logit[jnp.arange(x.shape[0]), pos]
+                bce = (jnp.maximum(z, 0) - z * y
+                       + jnp.log1p(jnp.exp(-jnp.abs(z))))
+                return jnp.sum(w * bce) / jnp.maximum(jnp.sum(w), 1.0)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, state, _ = adamw_update(opt, params, grads, state)
+            return params, state, loss
+
+        return jax.jit(step)
+
+    def maybe_step(self) -> bool:
+        """Run one update if enough new observations accrued."""
+        if (self._since < self.interval or self._fill < self.min_fill
+                or self._emb is None):
+            return False
+        if self._step_fn is None:
+            self._step_fn = self._build_step()
+        w = np.zeros((self.capacity,), np.float32)
+        w[: self._fill] = 1.0
+        params, self._state, loss = self._step_fn(
+            self.router.params, self._state,
+            jnp.asarray(self._emb), jnp.asarray(self._pos),
+            jnp.asarray(self._lab), jnp.asarray(w))
+        self.router.params = params
+        self.last_loss = float(loss)
+        self.steps += 1
+        self._since = 0
+        return True
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {
+            "steps": self.steps,
+            "n_observed": self.n_observed,
+            "buffer_fill": self._fill,
+            "last_loss": self.last_loss,
+        }

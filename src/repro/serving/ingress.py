@@ -197,6 +197,13 @@ class RequestState:
     fb_answer: object = None
     fb_score: float = float("-inf")
     fb_tier: int = -1
+    # shadow audit (repro.serving.guarantee): a clone re-running a
+    # served query on the reference tier. Shadow rows never resolve a
+    # future, never count in tier_counts/fold_stream_result, and their
+    # cost lands on the controller's shadow meter
+    shadow: bool = False
+    orig_answer: object = None      # the served answer being audited
+    orig_stop: int = -1             # position the served answer came from
 
     @property
     def done(self) -> bool:

@@ -182,6 +182,16 @@ class ServeResult:
             if gov is not None:
                 extra += (f" vs ${gov['budget_rate']:.6f} target "
                           f"(shift {gov['shift']:+.3f})")
+            gtee = self.strategy.get("guarantee")
+            if gtee is not None:
+                extra += (
+                    f" | guarantee: gap {gtee['gap_hat']:.3f} "
+                    f"(ucb {gtee['gap_ucb']:.3f}) vs delta "
+                    f"{gtee['delta']:.3f} at alpha {gtee['alpha']:.2f}, "
+                    f"level {gtee['level']}/{gtee['levels'] - 1}, "
+                    f"{gtee['n_shadow']} shadowed "
+                    f"({gtee['n_invoked']} invoked, "
+                    f"${gtee['shadow_cost']:.6f} shadow)")
             asg = self.strategy.get("assign")
             if asg is not None:
                 extra += (
@@ -379,6 +389,47 @@ class ServingPipeline:
         self.cache.insert(emb_rows, a, scores)
         return True
 
+    # -- stage 3.5: accuracy-guarantee shadow audit ------------------------
+    def _shadow_audit(self, tokens, miss, res_ans, stopped, emb, guar):
+        """Shadow-sample this batch's served misses against the
+        reference (top) tier (``repro.serving.guarantee``).
+
+        Picks are drawn from the controller's seeded per-query coin (in
+        row order, so a fixed seed reproduces the subset). A picked row
+        that already stopped at the top tier IS the reference answer —
+        a free zero-gap observation. The rest invoke the raw reference
+        tier in ``batch_size`` chunks; shadow calls bypass fault
+        injection (they are measurement, not service) and their cost is
+        charged to the controller's separate shadow meter, never to the
+        request or the governor's spend rate. Shadow agreement also
+        labels the online router retrainer at the stopping position
+        (skipping top-tier rows, whose agreement is trivial)."""
+        top = len(self.tiers) - 1
+        spec = self.tiers[top]
+        picks = [i for i in range(len(miss)) if guar.should_sample()]
+        if not picks:
+            return
+        need = [i for i in picks if stopped[i] != top]
+        ref_ans: dict = {}
+        ref_cost: dict = {}
+        for s in range(0, len(need), self.batch_size):
+            rows = need[s:s + self.batch_size]
+            sub = tokens[miss[rows]]
+            ans = np.asarray(spec.answer(sub))
+            c = self._tier_cost(spec, sub)
+            for k, i in enumerate(rows):
+                ref_ans[i] = ans[k]
+                ref_cost[i] = float(c[k])
+        rt = getattr(guar, "retrainer", None)
+        for i in picks:
+            if stopped[i] == top:
+                guar.observe(0.0, 0.0, invoked=False)
+                continue
+            agree = bool(np.all(res_ans[i] == ref_ans[i]))
+            guar.observe(0.0 if agree else 1.0, ref_cost[i], invoked=True)
+            if rt is not None and emb is not None:
+                rt.observe(emb[miss[i]], int(stopped[i]), agree)
+
     def serve(self, tokens: np.ndarray, *, clock=None,
               sleep=None) -> ServeResult:
         """One closed token batch through all three stages. ``clock``/
@@ -482,6 +533,14 @@ class ServingPipeline:
             self._cache_insert(emb[miss], res_ans, res["scores"])
             latency["insert"] = time.perf_counter() - t
 
+        # stage 3.5: accuracy-guarantee shadow audit (separate meter)
+        guar = getattr(strat, "guarantee", None) if strat is not None else None
+        if guar is not None and len(miss):
+            t = time.perf_counter()
+            self._shadow_audit(tokens, miss, res_ans, stopped_at[miss],
+                               emb, guar)
+            latency["shadow"] = time.perf_counter() - t
+
         # feed the strategy: cache hits are zero-cost served queries,
         # misses carry entry/accept telemetry when the router routed them
         strategy_snap = None
@@ -495,6 +554,21 @@ class ServingPipeline:
                     # per-query $ and acceptance at the assigned entry
                     strat.assigner.observe(
                         cost[miss], stopped_at[miss] == entries)
+            rt = getattr(guar, "retrainer", None) if guar is not None else None
+            if rt is not None and len(miss):
+                if entries is not None and emb is not None:
+                    # realized accepts at the routed entry — the
+                    # predicted-vs-realized telemetry, consumed as
+                    # labels (final position is supervised by shadow
+                    # agreement only: its offline label was correctness,
+                    # and entering there accepts unconditionally)
+                    top = len(self.tiers) - 1
+                    sub_stop = stopped_at[miss]
+                    for i in range(len(miss)):
+                        if int(entries[i]) != top:
+                            rt.observe(emb[miss[i]], int(entries[i]),
+                                       bool(sub_stop[i] == entries[i]))
+                rt.maybe_step()
             strategy_snap = strat.snapshot(len(self.tiers))
 
         latency["total"] = time.perf_counter() - t0

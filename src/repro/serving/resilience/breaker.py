@@ -10,9 +10,15 @@ The classic three-state machine over a sliding failure-rate window:
     so the scheduler routes rows *past* it (failover escalation)
     instead of burning retries. After ``cooldown_s`` the breaker moves
     to half-open.
-  * **half-open** — one probe's worth of traffic is allowed through.
-    Success closes the breaker (a **recovery**, window reset); failure
-    re-trips it for another cooldown.
+  * **half-open** — probe traffic is metered by a token bucket:
+    entering half-open grants ``probe_bucket`` tokens, each recorded
+    probe outcome consumes one, and (optionally) tokens refill at
+    ``probe_refill_per_s`` while half-open — so a large fleet cannot
+    thundering-herd a barely-recovered tier the moment its cooldown
+    expires. ``recovery_successes`` successful probes close the breaker
+    (a **recovery**, window reset); any probe failure re-trips it for
+    another cooldown. The defaults (bucket 1, one success, no refill)
+    reduce to the classic single-probe half-open.
 
 Every method takes an explicit ``now`` — the breaker holds no clock, so
 fake-clock tests (and the scheduler's injected stream clock) drive state
@@ -40,6 +46,13 @@ class BreakerConfig:
     min_samples: int = 4
     #: seconds open before allowing a half-open probe
     cooldown_s: float = 0.5
+    #: half-open probe tokens granted when the cooldown expires (bucket
+    #: size 1 = the classic single-probe half-open)
+    probe_bucket: int = 1
+    #: token refill rate while half-open (0 = burst only)
+    probe_refill_per_s: float = 0.0
+    #: successful probes required to close (ramped recovery)
+    recovery_successes: int = 1
 
     def __post_init__(self):
         if self.window < 1:
@@ -50,6 +63,18 @@ class BreakerConfig:
             raise ValueError("min_samples must be in [1, window]")
         if self.cooldown_s < 0:
             raise ValueError("cooldown_s must be >= 0")
+        if self.probe_bucket < 1:
+            raise ValueError("probe_bucket must be >= 1")
+        if self.probe_refill_per_s < 0:
+            raise ValueError("probe_refill_per_s must be >= 0")
+        if self.recovery_successes < 1:
+            raise ValueError("recovery_successes must be >= 1")
+        if (self.probe_refill_per_s == 0
+                and self.recovery_successes > self.probe_bucket):
+            raise ValueError(
+                "recovery_successes > probe_bucket with no refill can "
+                "never close the breaker; raise probe_bucket or set "
+                "probe_refill_per_s > 0")
 
 
 class CircuitBreaker:
@@ -60,20 +85,42 @@ class CircuitBreaker:
         self._state = "closed"
         self._outcomes = collections.deque(maxlen=cfg.window)
         self._opened_at = 0.0
+        self._tokens = 0.0          # half-open probe bucket
+        self._refill_at = 0.0       # last token-refill timestamp
+        self._probe_oks = 0         # successes into the current ramp
         self.trips = 0
         self.recoveries = 0
 
     def state(self, now: float) -> str:
-        """Current state, applying the open -> half-open cooldown edge."""
+        """Current state, applying the open -> half-open cooldown edge
+        (which grants the probe bucket's burst and arms the ramp)."""
         if (self._state == "open"
                 and now - self._opened_at >= self.cfg.cooldown_s):
             self._state = "half_open"
+            self._tokens = float(self.cfg.probe_bucket)
+            self._refill_at = now
+            self._probe_oks = 0
         return self._state
 
+    def _refill(self, now: float) -> None:
+        """Advance the half-open token bucket to ``now``."""
+        if self.cfg.probe_refill_per_s > 0:
+            dt = max(0.0, now - self._refill_at)
+            self._tokens = min(float(self.cfg.probe_bucket),
+                               self._tokens + dt
+                               * self.cfg.probe_refill_per_s)
+        self._refill_at = now
+
     def available(self, now: float) -> bool:
-        """May traffic be sent to this tier right now? False only while
-        open and still cooling down; half-open admits the probe."""
-        return self.state(now) != "open"
+        """May traffic be sent to this tier right now? False while open
+        and still cooling down, and while half-open with the probe
+        bucket drained (the ramp: a recovering tier sees at most
+        ``probe_bucket`` probes per refill interval, not the fleet)."""
+        state = self.state(now)
+        if state == "half_open":
+            self._refill(now)
+            return self._tokens >= 1.0
+        return state != "open"
 
     def record(self, ok: bool, now: float) -> bool:
         """Record one invoke outcome. Returns True when this outcome
@@ -81,10 +128,14 @@ class CircuitBreaker:
         hook for cancelling in-flight speculation against the tier."""
         state = self.state(now)
         if state == "half_open":
-            if ok:                      # probe succeeded: recover
-                self._state = "closed"
-                self._outcomes.clear()
-                self.recoveries += 1
+            self._refill(now)
+            self._tokens = max(0.0, self._tokens - 1.0)  # probe spent
+            if ok:
+                self._probe_oks += 1
+                if self._probe_oks >= self.cfg.recovery_successes:
+                    self._state = "closed"  # ramp complete: recover
+                    self._outcomes.clear()
+                    self.recoveries += 1
                 return False
             self._state = "open"        # probe failed: re-trip
             self._opened_at = now
@@ -105,7 +156,9 @@ class CircuitBreaker:
         return {"state": self.state(now), "trips": self.trips,
                 "recoveries": self.recoveries,
                 "window_fails": sum(1 for o in self._outcomes if not o),
-                "window_n": len(self._outcomes)}
+                "window_n": len(self._outcomes),
+                "probe_tokens": self._tokens,
+                "probe_oks": self._probe_oks}
 
 
 class TierHealth:

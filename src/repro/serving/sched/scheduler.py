@@ -173,6 +173,13 @@ class TierScheduler:
         if self._assign:
             from repro.serving.assign import WindowBuffer
             self._win_buf = WindowBuffer(self._strategy.assigner.cfg)
+        # accuracy guarantee (repro.serving.guarantee): finished rows
+        # are shadow-sampled onto the reference (top) tier as clone
+        # requests riding the normal worker machinery; None keeps the
+        # request path structurally identical
+        self._guarantee = (getattr(self._strategy, "guarantee", None)
+                           if self._strategy is not None else None)
+        self._shadow_rid = -1           # clone rids: negative, unique
 
         # one lock + condition guards every field below; chunk compute,
         # embedding and cache traffic all happen OUTSIDE it
@@ -406,13 +413,40 @@ class TierScheduler:
     def _enqueue_locked(self, r: RequestState, j: int, now: float):
         r.tier_pos = j
         r.t_enqueued = now
-        self.tier_counts[j] += 1
+        if not r.shadow:        # tier_counts reflect service traffic only
+            self.tier_counts[j] += 1
         q = self._waiting[j]
         q.append(r)
         if len(q) > self.queue_peak[j]:
             self.queue_peak[j] = len(q)
 
+    def _finish_shadow_locked(self, r: RequestState, now: float):
+        """A shadow clone came back from the reference tier: fold the
+        comparison into the guarantee controller (cost on the shadow
+        meter) and feed the online router retrainer's shadow label at
+        the audited stopping position. Clones lost to faults/overload
+        abort cleanly — no observation, no telemetry pollution."""
+        r.t_done = now
+        self._inflight -= 1
+        guar = self._guarantee
+        if guar is None:
+            return
+        if r.shed or r.answer is None:
+            r.emb = None
+            guar.abort()
+            return
+        agree = bool(np.all(np.asarray(r.answer == r.orig_answer)))
+        guar.observe(0.0 if agree else 1.0, r.cost, invoked=True)
+        rt = getattr(guar, "retrainer", None)
+        if rt is not None and r.emb is not None:
+            rt.observe(r.emb, int(r.orig_stop), agree)
+            rt.maybe_step()
+        r.emb = None
+
     def _finish_locked(self, r: RequestState, now: float):
+        if r.shadow:
+            self._finish_shadow_locked(r, now)
+            return
         r.t_done = now
         self._inflight -= 1
         if r.deadline is not None and not r.shed:
@@ -432,6 +466,38 @@ class TierScheduler:
                 # realized counterpart of the window solver's prediction
                 self._strategy.assigner.observe(
                     [r.cost], [r.stopped_at == r.entry])
+        guar = self._guarantee
+        if guar is not None and not r.shed and r.stopped_at >= 0:
+            top = len(self._tiers) - 1
+            rt = getattr(guar, "retrainer", None)
+            if (rt is not None and r.emb is not None
+                    and not r.degraded and r.pred_accept is not None
+                    and r.entry != top):
+                # realized accept at the routed entry as an online label
+                # (final position is supervised by shadow agreement
+                # only — entering there accepts unconditionally)
+                rt.observe(r.emb, int(r.entry), r.stopped_at == r.entry)
+                rt.maybe_step()
+            if guar.should_sample():
+                if r.stopped_at == top:
+                    # the served answer IS the reference answer: a free
+                    # zero-gap observation, no invoke
+                    guar.observe(0.0, 0.0, invoked=False)
+                else:
+                    cap = self.slo.queue_cap
+                    if (cap is not None
+                            and len(self._waiting[top]) >= cap):
+                        guar.abort()    # overload sheds the audit, never
+                    else:               # the service traffic
+                        sh = RequestState(
+                            rid=self._shadow_rid, tokens=r.tokens,
+                            arrival=r.arrival, shadow=True,
+                            orig_answer=r.answer,
+                            orig_stop=r.stopped_at, emb=r.emb)
+                        self._shadow_rid -= 1
+                        self._inflight += 1
+                        self._enqueue_locked(sh, top, now)
+            r.emb = None
         if r.future is not None:
             # workers are plain threads: hand resolution to the loop
             r.future.get_loop().call_soon_threadsafe(
@@ -685,6 +751,12 @@ class TierScheduler:
         best-scoring answer an earlier tier produced (a degraded answer
         — availability over accuracy), or account the row as shed when
         no tier ever answered it."""
+        if r.shadow:
+            # a failed audit clone is silently aborted: no fallback, no
+            # shed/degraded accounting — shadow traffic is measurement
+            r.shed = True
+            self._finish_locked(r, now)
+            return
         if r.fb_tier >= 0:
             r.answer = r.fb_answer
             r.score = r.fb_score
@@ -814,7 +886,8 @@ class TierScheduler:
                 # never cache an answer the scorer rejected: a forced
                 # degraded answer would otherwise be served to future
                 # near-duplicates long after the overload has passed
-                if accept[i]:
+                # (nor a shadow clone — its answer audits, not serves)
+                if accept[i] and not r.shadow:
                     cacheable.append(r)
             else:
                 if self._resilient:
@@ -833,8 +906,13 @@ class TierScheduler:
                     np.asarray([r.answer for r in cacheable]),
                     np.asarray([r.score for r in cacheable]))
             insert_s = time.perf_counter() - t0
-        for r in finished:                  # embedding served its purpose
-            r.emb = None
+        # the embedding served its cache purpose — but the guarantee's
+        # online retrainer still consumes it as a label feature in
+        # _finish_locked, which clears it after use
+        if (self._guarantee is None
+                or getattr(self._guarantee, "retrainer", None) is None):
+            for r in finished:
+                r.emb = None
         m = len(self._tiers)
         with self._cv:
             self.retry_count += meta["retries"]

@@ -69,6 +69,10 @@ class ServingStrategy:
     # the strategy behaves exactly as before it existed
     mode: str = "entry"
     assigner: object | None = None      # assign.WindowAssigner
+    # accuracy guarantee (repro.serving.guarantee.GuaranteeController):
+    # shadow-samples served queries against the reference tier and caps
+    # the governor's shift; None = no guarantee layer (bit-identical)
+    guarantee: object | None = None
 
     def __post_init__(self):
         if self.mode not in ("entry", "assign"):
@@ -79,10 +83,15 @@ class ServingStrategy:
                              "(assign.WindowAssigner; see "
                              "BuildConfig(assign=...))")
         if (self.router is None and self.governor is None
-                and self.mode != "assign"):
-            raise ValueError("a ServingStrategy needs a router and/or a "
-                             "governor; with neither it is a no-op — "
+                and self.guarantee is None and self.mode != "assign"):
+            raise ValueError("a ServingStrategy needs a router, governor "
+                             "and/or guarantee; with none it is a no-op — "
                              "leave pipeline.strategy unset instead")
+        if (self.governor is not None and self.guarantee is not None
+                and self.governor.guarantee is not self.guarantee):
+            raise ValueError("strategy.guarantee and governor.guarantee "
+                             "must be the same controller — build both "
+                             "via BuildConfig(guarantee=...)")
         self._entry_hist: dict[int, int] = {}
         self._cost_sum = 0.0
         self._n_served = 0
@@ -176,4 +185,6 @@ class ServingStrategy:
                                      if self._accept_n else None),
             "governor": (self.governor.snapshot()
                          if self.governor is not None else None),
+            "guarantee": (self.guarantee.snapshot()
+                          if self.guarantee is not None else None),
         }

@@ -40,6 +40,19 @@ The governor is deliberately dumb about *why* spend moved — traffic mix,
 tier pricing, cache hit-rate collapse all look the same through the
 realized rate, which is exactly what makes the control robust.
 
+**Second dual constraint — the accuracy floor.** With a
+``repro.serving.guarantee.GuaranteeController`` attached
+(``guarantee=``), the dual problem gains a guarantee-side multiplier:
+the controller's sequential test turns shadow comparisons against the
+reference tier into a *cap* on the shift, and every accuracy-relevant
+surface (thresholds, entry bar, cache floor, cache similarity) uses
+``effective_shift = min(shift, cap)``. The cost side may want to
+loosen (positive shift) but the guarantee can veto down to
+``-max_shift`` (force tightening) whenever the gap-to-reference is not
+certified ``<= delta``. The latency dials (``max_chunk``,
+``holdback_s``) keep the raw cost shift — chunking trades $, not
+answer quality.
+
 Concurrency: mutate (``observe``) under one caller-side serialization
 domain — the parallel scheduler calls it under its own lock, the batch
 path is single-threaded. Reads (``thresholds``/``entry_bar``) return
@@ -69,6 +82,8 @@ class BudgetGovernor:
     max_shift: float = 0.35             # saturation of the threshold shift
     lam_max: float = 4.0                # dual variable clip
     trace_len: int = 256                # most recent windows kept in trace
+    guarantee: object | None = None     # GuaranteeController (accuracy
+                                        # floor — caps the shift)
 
     def __post_init__(self):
         if self.budget_rate <= 0:
@@ -85,6 +100,7 @@ class BudgetGovernor:
         self._win_n = 0
         self._total_cost = 0.0
         self._total_n = 0
+        self.dropped_obs = 0
         # one snapshot per window update; bounded — the governor
         # outlives individual batches/streams, so an unbounded trace
         # (and its per-snapshot copy) would grow with service lifetime
@@ -94,16 +110,30 @@ class BudgetGovernor:
     # -- observation -------------------------------------------------------
     def observe(self, cost: float, n: int = 1):
         """Record ``n`` served queries costing ``cost`` USD in total;
-        runs a controller update whenever a window fills."""
-        self._win_cost += float(cost)
-        self._win_n += int(n)
-        self._total_cost += float(cost)
-        self._total_n += int(n)
+        runs a controller update whenever a window fills.
+
+        Invalid observations are dropped, not folded: a NaN or negative
+        cost (the failed-tier path produces NaN scores one hop away)
+        would poison ``lam`` and propagate through ``tanh`` into every
+        governed threshold, and ``n <= 0`` would corrupt the window
+        accounting. Drops are counted in ``dropped_obs``."""
+        cost = float(cost)
+        n = int(n)
+        if n <= 0 or not np.isfinite(cost) or cost < 0.0:
+            self.dropped_obs += 1
+            return
+        self._win_cost += cost
+        self._win_n += n
+        self._total_cost += cost
+        self._total_n += n
         while self._win_n >= self.window:
             self._update()
 
     def observe_many(self, costs) -> None:
         costs = np.asarray(costs, np.float64)
+        ok = np.isfinite(costs) & (costs >= 0.0)
+        self.dropped_obs += int(len(costs) - ok.sum())
+        costs = costs[ok]
         if len(costs):
             self.observe(float(costs.sum()), len(costs))
 
@@ -130,14 +160,26 @@ class BudgetGovernor:
             self._win_n = 0
 
     # -- control surfaces --------------------------------------------------
+    def effective_shift(self) -> float:
+        """Cost shift after the guarantee veto: ``min(shift, cap)``.
+
+        Without a guarantee controller this IS ``shift`` (bit-identical
+        behaviour); with one, the accuracy floor clamps cost-driven
+        loosening and can force tightening (negative cap)."""
+        if self.guarantee is None:
+            return self.shift
+        return min(self.shift, self.guarantee.shift_cap(self.max_shift))
+
     def thresholds(self) -> tuple:
         """Current cascade accept thresholds (len = m - 1)."""
-        return tuple(float(np.clip(t - self.shift, 0.0, 1.0))
+        s = self.effective_shift()
+        return tuple(float(np.clip(t - s, 0.0, 1.0))
                      for t in self.base_thresholds)
 
     def entry_bar(self) -> float:
         """Current contextual-router entry bar."""
-        return float(np.clip(self.base_bar - self.shift, 0.0, 1.0))
+        return float(np.clip(self.base_bar - self.effective_shift(),
+                             0.0, 1.0))
 
     def min_score(self) -> float | None:
         """Current completion-cache confidence floor (None when the
@@ -146,7 +188,8 @@ class BudgetGovernor:
         traffic to free hits; spare budget tightens it."""
         if self.base_min_score is None:
             return None
-        return float(np.clip(self.base_min_score - self.shift, 0.0, 1.0))
+        return float(np.clip(self.base_min_score - self.effective_shift(),
+                             0.0, 1.0))
 
     def cache_threshold(self) -> float | None:
         """Current completion-cache similarity threshold (None when not
@@ -157,8 +200,9 @@ class BudgetGovernor:
         be a sledgehammer."""
         if self.base_threshold is None:
             return None
+        s = self.effective_shift()
         return float(np.clip(
-            self.base_threshold - self.shift * (1.0 - self.base_threshold),
+            self.base_threshold - s * (1.0 - self.base_threshold),
             0.0, 1.0))
 
     def max_chunk(self, base: int) -> int:
@@ -195,8 +239,10 @@ class BudgetGovernor:
             "budget_rate": self.budget_rate,
             "realized_rate": self.realized_rate(),
             "n_observed": self._total_n,
+            "dropped_obs": self.dropped_obs,
             "lam": self.lam,
             "shift": self.shift,
+            "effective_shift": self.effective_shift(),
             "thresholds": self.thresholds(),
             "entry_bar": self.entry_bar(),
             "min_score": self.min_score(),

@@ -1,0 +1,519 @@
+"""Accuracy-guaranteed frugality (ISSUE 10): the online SMART layer.
+
+Covers the four contract layers bottom-up:
+
+  * **bounds** — the anytime-valid confidence sequences keep their
+    time-uniform coverage under H0 (Monte Carlo violation rate below
+    ``alpha``) and still *detect*: a gap genuinely above ``delta``
+    certifies (LCB crosses) within a practical sample count;
+  * **controller** — the tighten ladder climbs only on certified
+    violations, relaxes only on certified safety, holds under
+    uncertainty; shadow sampling is a seeded deterministic coin; bad
+    observations are refused, not folded;
+  * **governor interaction** — the guarantee-side multiplier vetoes
+    cost-driven loosening on every accuracy surface while the latency
+    dials keep the raw cost shift; plus the ISSUE's NaN/negative-cost
+    regression on ``BudgetGovernor.observe``;
+  * **end-to-end** — both serve paths (closed batch + parallel
+    scheduler) shadow-audit against the reference tier on a separate
+    meter with served results bit-identical, and the online router
+    retrainer consumes the realized-accept / shadow-agreement labels.
+"""
+import numpy as np
+import pytest
+
+from repro.core.cost import ApiCost
+from repro.serving.guarantee import (GapStat, GuaranteeConfig,
+                                     GuaranteeController, RouterRetrainer,
+                                     bernstein_radius, hoeffding_radius)
+from repro.serving.pipeline import ServingPipeline, TierSpec
+from repro.serving.sched import SLOConfig, TierScheduler
+from repro.serving.strategy import (BudgetGovernor, ContextualRouter,
+                                    ServingStrategy)
+from repro.serving.strategy.router import train_entry_router
+
+D = 8  # embedding width of the toy pipelines
+
+
+# ---------------------------------------------------------------------------
+# bounds: anytime-valid coverage + detection
+# ---------------------------------------------------------------------------
+
+
+def test_radii_shrink_and_clip():
+    assert hoeffding_radius(0, 0.05) == 1.0
+    assert bernstein_radius(1, 0.0, 0.05) == 1.0
+    hs = [hoeffding_radius(n, 0.05) for n in (8, 64, 512, 4096)]
+    assert all(a > b for a, b in zip(hs, hs[1:]))
+    assert all(0.0 < h <= 1.0 for h in hs)
+    # variance adaptivity: at small empirical variance the empirical-
+    # Bernstein radius undercuts distribution-free Hoeffding
+    p = 0.05
+    assert bernstein_radius(4096, p * (1 - p), 0.05) \
+        < hoeffding_radius(4096, 0.05)
+
+
+def test_gapstat_welford_matches_numpy():
+    rng = np.random.default_rng(0)
+    xs = rng.random(200)
+    st = GapStat()
+    for i, x in enumerate(xs):
+        st.add(float(x), clock=i + 1)
+    assert st.n == 200 and st.last_fed == 200
+    assert st.mean == pytest.approx(xs.mean(), abs=1e-12)
+    assert st.var == pytest.approx(xs.var(), abs=1e-12)
+    st.reset()
+    assert st.n == 0 and st.ucb(0.05) == 1.0 and st.lcb(0.05) == 0.0
+
+
+def test_gapstat_rejects_invalid():
+    st = GapStat()
+    for bad in (-0.1, 1.1, float("nan")):
+        with pytest.raises(ValueError, match="gap observation"):
+            st.add(bad)
+    with pytest.raises(ValueError, match="unknown bound"):
+        st.add(0.5)
+        st.radius(0.05, "wald")
+
+
+@pytest.mark.parametrize("bound", ["bernstein", "hoeffding"])
+def test_anytime_coverage_under_h0(bound):
+    """Time-uniform coverage: over many independent gap streams with
+    true mean p, the fraction of *streams* whose interval ever excludes
+    p (at any of the continuously-monitored stopping times) stays below
+    alpha. This is the property a fixed-n interval would fail — peeking
+    every step inflates its violation rate far above alpha."""
+    alpha, p, streams, horizon = 0.05, 0.3, 120, 400
+    rng = np.random.default_rng(42)
+    violated = 0
+    for _ in range(streams):
+        st = GapStat()
+        bad = False
+        for x in (rng.random(horizon) < p).astype(float):
+            st.add(float(x))
+            if st.ucb(alpha, bound) < p or st.lcb(alpha, bound) > p:
+                bad = True
+                break
+        violated += bad
+    assert violated / streams <= alpha
+
+
+@pytest.mark.parametrize("bound", ["bernstein", "hoeffding"])
+def test_detection_under_drift(bound):
+    """Power: a true gap of 0.3 against delta=0.05 must certify (LCB
+    crosses delta) within a practical number of shadow observations."""
+    delta, alpha = 0.05, 0.05
+    rng = np.random.default_rng(7)
+    st = GapStat()
+    crossed_at = None
+    for t, x in enumerate((rng.random(2000) < 0.3).astype(float)):
+        st.add(float(x))
+        if st.lcb(alpha, bound) > delta:
+            crossed_at = t + 1
+            break
+    assert crossed_at is not None and crossed_at < 500
+
+
+# ---------------------------------------------------------------------------
+# controller: ladder dynamics, sampling determinism, input hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_config_validation():
+    for kw in ({"delta": 0.0}, {"delta": 1.0}, {"alpha": 0.0},
+               {"sample_frac": 0.0}, {"sample_frac": 1.5},
+               {"window": 0}, {"levels": 1}, {"bound": "wald"}):
+        with pytest.raises(ValueError):
+            GuaranteeConfig(**kw)
+
+
+def _drive(ctrl, p, n, rng):
+    for x in (rng.random(n) < p).astype(float):
+        ctrl.observe(float(x), 1e-5, invoked=True)
+
+
+def test_h0_holds_level_zero():
+    """True gap well under delta: the triad never has a certified
+    violation, so the ladder never climbs and the cap never vetoes."""
+    ctrl = GuaranteeController(GuaranteeConfig(delta=0.05, window=16))
+    _drive(ctrl, 0.01, 2000, np.random.default_rng(0))
+    assert ctrl.level == 0
+    assert ctrl.shift_cap(0.35) == pytest.approx(0.35)
+    assert ctrl.certified    # UCB under delta by now
+
+
+def test_drift_tightens_then_calm_recovers():
+    """A 0.4 disagreement burst climbs the ladder (gross violation:
+    double steps); once the drift passes, per-level re-certification
+    walks it back to level 0 and the cap releases."""
+    ctrl = GuaranteeController(GuaranteeConfig(delta=0.05, window=16))
+    rng = np.random.default_rng(0)
+    _drive(ctrl, 0.4, 400, rng)
+    assert ctrl.level >= 2
+    assert ctrl.shift_cap(0.35) < 0.35   # veto engaged
+    _drive(ctrl, 0.005, 6000, rng)
+    assert ctrl.level == 0 and ctrl.certified
+    assert ctrl.shift_cap(0.35) == pytest.approx(0.35)
+
+
+def test_uncertain_holds_position():
+    """Before min_samples the interval is vacuous ([0, 1] spans delta):
+    neither certified branch fires and the level holds."""
+    ctrl = GuaranteeController(GuaranteeConfig(
+        delta=0.05, window=2, min_samples=64))
+    _drive(ctrl, 1.0, 32, np.random.default_rng(0))  # gap 1.0 but n < 64
+    assert ctrl.level == 0 and not ctrl.certified
+
+
+def test_shift_cap_ladder_endpoints():
+    cfg = GuaranteeConfig(levels=8)
+    ctrl = GuaranteeController(cfg)
+    assert ctrl.shift_cap(0.35) == pytest.approx(0.35)
+    ctrl.level = cfg.levels - 1
+    assert ctrl.shift_cap(0.35) == pytest.approx(-0.35)
+    ctrl.level = 3
+    assert -0.35 < ctrl.shift_cap(0.35) < 0.35
+
+
+def test_stale_level_evidence_reset_on_reentry():
+    """Evidence parked at a level for longer than ``stale_after`` global
+    observations is from a dead regime: re-entering the level restarts
+    its sequential test instead of trusting it."""
+    cfg = GuaranteeConfig(stale_after=10, window=10 ** 6)
+    ctrl = GuaranteeController(cfg)
+    _drive(ctrl, 1.0, 5, np.random.default_rng(0))   # level 0 evidence
+    assert ctrl._stats[0].n == 5
+    ctrl.level = 1                                    # park elsewhere
+    _drive(ctrl, 0.0, 20, np.random.default_rng(1))  # clock advances
+    ctrl._enter(0)                                    # come back
+    assert ctrl._stats[0].n == 0                      # reset, not trusted
+
+
+def test_stat_cap_restarts_the_stream():
+    """The rolling evidence horizon: a level's stream restarts after
+    ``stat_cap`` observations so a long-passed regime cannot pin the
+    anytime test forever."""
+    cfg = GuaranteeConfig(window=16, stat_cap=64)
+    ctrl = GuaranteeController(cfg)
+    _drive(ctrl, 0.0, 200, np.random.default_rng(0))
+    assert ctrl._stats[0].n <= 64
+
+
+def test_should_sample_deterministic_and_calibrated():
+    cfg = GuaranteeConfig(sample_frac=0.3, seed=11)
+    a = GuaranteeController(cfg)
+    b = GuaranteeController(cfg)
+    pa = [a.should_sample() for _ in range(400)]
+    pb = [b.should_sample() for _ in range(400)]
+    assert pa == pb                                   # same seed, same subset
+    c = GuaranteeController(GuaranteeConfig(sample_frac=0.3, seed=12))
+    assert pa != [c.should_sample() for _ in range(400)]
+    assert abs(np.mean(pa) - 0.3) < 0.08              # calibrated coin
+
+
+def test_observe_refuses_invalid():
+    ctrl = GuaranteeController(GuaranteeConfig())
+    ctrl.observe(float("nan"), 1.0)
+    ctrl.observe(1.5, 1.0)
+    ctrl.observe(0.5, -1.0)
+    ctrl.observe(0.5, float("inf"))
+    assert ctrl.dropped_obs == 4 and ctrl.n_shadow == 0
+    ctrl.observe(0.5, 1.0, invoked=True)
+    assert ctrl.n_shadow == 1 and ctrl.n_invoked == 1
+    ctrl.abort()
+    assert ctrl.n_aborted == 1
+
+
+def test_snapshot_and_trace():
+    ctrl = GuaranteeController(GuaranteeConfig(window=8, sample_frac=0.5))
+    _drive(ctrl, 0.2, 64, np.random.default_rng(0))
+    snap = ctrl.snapshot()
+    for key in ("delta", "alpha", "level", "n_shadow", "n_invoked",
+                "shadow_cost", "gap_hat", "gap_ucb", "gap_lcb",
+                "certified", "trace", "dropped_obs"):
+        assert key in snap
+    assert len(snap["trace"]) == 8                    # one per window
+    tr = snap["trace"][-1]
+    assert tr["gap_lcb"] <= tr["gap_hat"] <= tr["gap_ucb"]
+
+
+# ---------------------------------------------------------------------------
+# governor interaction: the second dual constraint
+# ---------------------------------------------------------------------------
+
+
+def _overspending_governor(guarantee=None):
+    gov = BudgetGovernor(budget_rate=1.0, base_thresholds=(0.5, 0.6),
+                         base_bar=0.5, base_min_score=0.5,
+                         base_threshold=0.98, window=4,
+                         guarantee=guarantee)
+    for _ in range(32):                 # far under budget -> loosen
+        gov.observe(0.01)
+    return gov
+
+
+def test_guarantee_veto_beats_cost_loosening():
+    """The cost dual wants to loosen (underspend -> negative lam ->
+    positive... no: underspend gives negative shift). Drive overspend
+    instead? The veto direction that matters: cost side loosening
+    (positive shift) clamped by a violated guarantee to -max_shift."""
+    guar = GuaranteeController(GuaranteeConfig(window=8))
+    gov = BudgetGovernor(budget_rate=0.01, base_thresholds=(0.5, 0.6),
+                         base_bar=0.5, base_min_score=0.5,
+                         base_threshold=0.98, window=4, guarantee=guar)
+    for _ in range(64):                 # overspend -> loosen (shift > 0)
+        gov.observe(1.0)
+    assert gov.shift > 0.2
+    base = BudgetGovernor(budget_rate=0.01, base_thresholds=(0.5, 0.6),
+                          window=4)
+    for _ in range(64):
+        base.observe(1.0)
+    assert gov.thresholds() == base.thresholds()      # level 0: no veto
+    # certified violation: drive the controller up the ladder
+    _drive(guar, 0.6, 400, np.random.default_rng(3))
+    assert guar.level > 0
+    assert gov.effective_shift() < gov.shift          # veto engaged
+    # every accuracy surface tightens past the un-governed base...
+    assert all(g >= b for g, b in zip(gov.thresholds(),
+                                      base.thresholds()))
+    assert gov.thresholds() != base.thresholds()
+    assert gov.entry_bar() > base.entry_bar()
+    # ...while the latency dials keep the raw cost shift (chunking
+    # trades $, not answer quality)
+    assert gov.max_chunk(16) == base.max_chunk(16)
+    assert gov.holdback_s(0.1) == base.holdback_s(0.1)
+    assert gov.snapshot()["effective_shift"] == gov.effective_shift()
+
+
+def test_governor_without_guarantee_is_identity():
+    gov = _overspending_governor(None)
+    assert gov.effective_shift() == gov.shift
+
+
+def test_governor_observe_rejects_nan_and_negative():
+    """ISSUE 10 satellite: a NaN cost (one hop from the failed-tier
+    path) or a non-positive count must be dropped, leaving every
+    governed threshold finite."""
+    gov = BudgetGovernor(budget_rate=0.01, base_thresholds=(0.5,),
+                         base_min_score=0.5, base_threshold=0.98, window=2)
+    gov.observe(float("nan"))
+    gov.observe(-1.0)
+    gov.observe(0.02, n=0)
+    gov.observe(0.02, n=-3)
+    gov.observe(float("inf"))
+    assert gov.dropped_obs == 5
+    gov.observe_many([0.01, float("nan"), -0.5, 0.02])
+    assert gov.dropped_obs == 7
+    for _ in range(8):
+        gov.observe(0.02)
+    assert np.isfinite(gov.lam) and np.isfinite(gov.shift)
+    assert all(np.isfinite(t) for t in gov.thresholds())
+    assert np.isfinite(gov.entry_bar())
+    assert np.isfinite(gov.min_score())
+    assert np.isfinite(gov.cache_threshold())
+
+
+def test_strategy_governor_guarantee_must_share_controller():
+    guar = GuaranteeController(GuaranteeConfig())
+    gov = BudgetGovernor(budget_rate=1.0, base_thresholds=(0.5,),
+                         guarantee=GuaranteeController(GuaranteeConfig()))
+    with pytest.raises(ValueError, match="same controller"):
+        ServingStrategy(governor=gov, guarantee=guar)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: both serve paths
+# ---------------------------------------------------------------------------
+
+
+def _feature_embed(tokens):
+    return np.asarray(tokens[:, :D], np.float32)
+
+
+def _two_tier_pipeline(guarantee=None, strategy=None, batch_size=8):
+    """t0 answers 0, the reference t1 answers 1; the scorer accepts at
+    t0 iff the leading feature is positive — so every t0-stopped row
+    *disagrees* with the reference (known gap)."""
+    prices = [ApiCost(10.0, 10.0, 0.0), ApiCost(100.0, 100.0, 0.0)]
+    tiers = [TierSpec("t0", lambda t: np.zeros(len(t), np.int32), prices[0]),
+             TierSpec("t1", lambda t: np.ones(len(t), np.int32), prices[1])]
+    if strategy is None and guarantee is not None:
+        strategy = ServingStrategy(guarantee=guarantee)
+    return ServingPipeline(
+        tiers=tiers, thresholds=[0.5],
+        scorer=lambda t, a: np.where(t[:, 0] > 0, 0.9, 0.1),
+        embed=_feature_embed, full_prompt_tokens=100, pad_token=-1,
+        batch_size=batch_size, strategy=strategy)
+
+
+def _feature_tokens(n, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, D)).astype(np.float32)
+
+
+def test_batch_shadow_audit_end_to_end():
+    guar = GuaranteeController(GuaranteeConfig(sample_frac=1.0, window=8,
+                                               retrain=False))
+    pipe = _two_tier_pipeline(guar)
+    toks = _feature_tokens(32, seed=0)
+    res = pipe.serve(toks)
+    plain = _two_tier_pipeline().serve(toks)
+    # measurement, not service: served results bit-identical
+    assert np.array_equal(res.answers, plain.answers)
+    assert (res.cost == plain.cost).all()
+    n0 = int((res.stopped_at == 0).sum())
+    # every miss sampled: t0-stoppers invoke the reference (and all
+    # disagree by construction), top-tier rows are free observations
+    assert guar.n_shadow == 32 and guar.n_invoked == n0
+    assert guar.gap_hat == pytest.approx(n0 / 32)
+    # the shadow meter charged exactly n0 reference invocations, and
+    # none of it leaked into the per-request accounting
+    assert guar.shadow_cost == pytest.approx(
+        float(pipe._tier_cost(pipe.tiers[1], toks[:n0]).sum()))
+    assert res.cost.sum() == plain.cost.sum()
+    assert "guarantee" in res.strategy
+    assert res.strategy["guarantee"]["n_invoked"] == n0
+    assert "guarantee" in res.summary()
+
+
+def test_batch_shadow_subset_is_seeded():
+    toks = _feature_tokens(64, seed=1)
+    runs = []
+    for _ in range(2):
+        guar = GuaranteeController(GuaranteeConfig(
+            sample_frac=0.4, seed=5, retrain=False, window=10 ** 6))
+        _two_tier_pipeline(guar).serve(toks)
+        runs.append((guar.n_shadow, guar.n_invoked,
+                     round(guar.shadow_cost, 12)))
+    assert runs[0] == runs[1]          # fixed seed, identical subset
+
+
+def test_scheduler_shadow_clones_end_to_end():
+    toks = _feature_tokens(48, seed=2)
+    guar = GuaranteeController(GuaranteeConfig(sample_frac=1.0, window=8,
+                                               retrain=False))
+    sched = TierScheduler(_two_tier_pipeline(guar), max_chunk=8)
+    res = sched.run_trace(toks)
+    plain = TierScheduler(_two_tier_pipeline(), max_chunk=8).run_trace(toks)
+    assert np.array_equal(res.answers, plain.answers)
+    assert (res.cost == plain.cost).all()
+    assert np.array_equal(res.stopped_at, plain.stopped_at)
+    n0 = int((res.stopped_at == 0).sum())
+    # every request audited and every shadow clone drained before the
+    # result was folded: invoked = t0-stoppers, free obs for the rest
+    assert guar.n_shadow == 48 and guar.n_invoked == n0
+    assert guar.n_aborted == 0
+    assert guar.gap_hat == pytest.approx(n0 / 48)
+    # shadow clones never pollute the service telemetry
+    assert res.tier_counts == plain.tier_counts
+
+
+def test_scheduler_shadow_aborts_on_full_queue():
+    """Overload sheds the *audit*, never the service: a finish that
+    draws the shadow coin while the reference tier's queue sits at
+    ``queue_cap`` counts an abort instead of enqueueing a clone, and a
+    clone that comes back failed aborts instead of observing."""
+    from repro.serving.ingress import RequestState
+
+    guar = GuaranteeController(GuaranteeConfig(sample_frac=1.0,
+                                               retrain=False))
+    pipe = _two_tier_pipeline(guar)
+    sched = TierScheduler(pipe, max_chunk=4, slo=SLOConfig(queue_cap=2))
+    top = len(pipe.tiers) - 1
+    toks = _feature_tokens(1, seed=3)
+
+    def finished(rid):
+        r = RequestState(rid=rid, tokens=toks[0], arrival=0.0)
+        r.answer, r.stopped_at, r.cost = np.int32(0), 0, 0.1
+        sched._inflight += 1
+        return r
+
+    with sched._mu:
+        sched._waiting[top].extend(
+            RequestState(rid=-9 - k, tokens=toks[0], arrival=0.0,
+                         shadow=True) for k in range(2))   # cap reached
+        sched._finish_locked(finished(0), 0.0)
+        assert guar.n_aborted == 1                 # audit shed at the cap
+        assert len(sched._waiting[top]) == 2       # no clone squeezed in
+        sched._waiting[top].clear()
+        sched._finish_locked(finished(1), 0.0)
+        assert guar.n_aborted == 1                 # room again: clone queued
+        assert len(sched._waiting[top]) == 1
+        clone = sched._waiting[top].pop()          # ...which then fails
+        clone.answer = None
+        sched._finish_locked(clone, 0.0)
+        assert guar.n_aborted == 2 and guar.n_shadow == 0
+
+
+def test_serial_batcher_still_rejects_strategies():
+    guar = GuaranteeController(GuaranteeConfig(retrain=False))
+    pipe = _two_tier_pipeline(guar)
+    with pytest.raises(ValueError, match="parallel"):
+        pipe.serve_stream(_feature_tokens(8), np.zeros(8), parallel=False)
+
+
+# ---------------------------------------------------------------------------
+# online router retraining
+# ---------------------------------------------------------------------------
+
+
+def _toy_router(n_tiers=2, seed=0, steps=60):
+    rng = np.random.default_rng(seed)
+    emb = rng.normal(size=(200, D)).astype(np.float32)
+    labels = np.zeros((200, n_tiers), np.float32)
+    labels[:, 0] = emb[:, 0] > 0
+    labels[:, 1:] = 1.0
+    params = train_entry_router(emb, labels, steps=steps, seed=seed)
+    return ContextualRouter(params, n_tiers)
+
+
+def test_retrainer_learns_from_labels():
+    router = _toy_router(steps=1)        # nearly untrained
+    rt = RouterRetrainer(router, lr=5e-2, capacity=128, interval=32,
+                         min_fill=32)
+    rng = np.random.default_rng(0)
+    before = None
+    for _ in range(12):
+        emb = rng.normal(size=(32, D)).astype(np.float32)
+        for e in emb:
+            rt.observe(e, 0, bool(e[0] > 0))
+        stepped = rt.maybe_step()
+        assert stepped
+        if before is None:
+            before = rt.last_loss
+    assert rt.steps == 12
+    assert rt.last_loss < before         # masked BCE actually descends
+    probe = np.zeros((2, D), np.float32)
+    probe[0, 0], probe[1, 0] = 3.0, -3.0
+    p = router.predict(probe)
+    assert p[0, 0] > p[1, 0]             # learned the separable rule
+
+
+def test_retrainer_refuses_bad_observations():
+    rt = RouterRetrainer(_toy_router(steps=1))
+    rt.observe(np.full(D, np.nan, np.float32), 0, True)
+    rt.observe(np.zeros(D, np.float32), 7, True)      # position out of range
+    rt.observe(np.zeros(D, np.float32), -1, True)
+    assert rt.n_observed == 0
+    with pytest.raises(ValueError):
+        RouterRetrainer(_toy_router(steps=1), capacity=0)
+
+
+def test_pipeline_feeds_retrainer_from_both_streams():
+    """Routed entries yield realized-accept labels; shadow audits yield
+    agreement labels at the stopping position."""
+    router = _toy_router(steps=60)
+    guar = GuaranteeController(
+        GuaranteeConfig(sample_frac=1.0, window=10 ** 6),
+        retrainer=RouterRetrainer(router, interval=10 ** 6))
+    strat = ServingStrategy(router=router, guarantee=guar)
+    pipe = _two_tier_pipeline(strategy=strat)
+    toks = _feature_tokens(32, seed=4)
+    res = pipe.serve(toks)
+    rt = guar.retrainer
+    n0 = int((res.stopped_at == 0).sum())
+    entered0 = int(res.strategy["entry_hist"][0])
+    # realized accepts at non-final entries + shadow labels at non-top
+    # stopping positions (both streams skip the trivial final position)
+    assert rt.n_observed == entered0 + n0
+    assert res.strategy["guarantee"]["retrain"]["n_observed"] \
+        == rt.n_observed

@@ -34,9 +34,11 @@ import pytest
 from repro.core.approx import CompletionCache
 from repro.core.cost import ApiCost
 from repro.core.prompt import PromptSpec
+from repro.serving.guarantee import GuaranteeConfig, GuaranteeController
 from repro.serving.pipeline import ServingPipeline, TierSpec
 from repro.serving.resilience import BreakerConfig, RetryPolicy
 from repro.serving.sched import SLOConfig
+from repro.serving.strategy import ServingStrategy
 from repro.sharding.placement import place_params, plan_placement
 from repro.sharding.tier_mesh import (TierMeshPlan, batch_sharding,
                                       plan_tier_meshes, shard_params)
@@ -185,6 +187,26 @@ def _run_matrix(seed: int, n: int = 16, n_tiers: int = 3,
                          toks, arrivals, parallel=True,
                          slo=SLOConfig(retry=rp, breaker=bc)),
                      f"seed={seed} {pname}/resilient-sched")
+        # accuracy-guarantee legs (ISSUE 10): a strategy carrying only
+        # a guarantee controller shadow-audits every miss against the
+        # reference tier, yet served answers/costs/stopped_at stay
+        # bit-identical on both paths — shadow traffic is measurement,
+        # charged to its own meter, never service
+        g_cfg = GuaranteeConfig(sample_frac=1.0, window=10 ** 6,
+                                retrain=False)
+        g_pipe = _pipeline(mp, "host", placement, with_cache)
+        g_pipe.strategy = ServingStrategy(
+            guarantee=GuaranteeController(g_cfg))
+        g_res = g_pipe.serve(toks)
+        _assert_same(ref, g_res, f"seed={seed} {pname}/guarantee-serve")
+        assert g_pipe.strategy.guarantee.n_shadow == ref.cache_misses
+        g_sched = _pipeline(mp, "host", placement, with_cache)
+        g_sched.strategy = ServingStrategy(
+            guarantee=GuaranteeController(g_cfg))
+        _assert_same(ref, g_sched.serve_stream(toks, arrivals,
+                                               parallel=True),
+                     f"seed={seed} {pname}/guarantee-sched")
+        assert g_sched.strategy.guarantee.n_shadow == ref.cache_misses
     return ref
 
 

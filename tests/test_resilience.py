@@ -310,6 +310,103 @@ def test_breaker_state_machine_on_explicit_now():
     assert b.state(3.0) == "closed"
 
 
+def test_breaker_ramp_validation():
+    with pytest.raises(ValueError, match="probe_bucket"):
+        BreakerConfig(probe_bucket=0)
+    with pytest.raises(ValueError, match="probe_refill_per_s"):
+        BreakerConfig(probe_refill_per_s=-1.0)
+    with pytest.raises(ValueError, match="recovery_successes"):
+        BreakerConfig(recovery_successes=0)
+    with pytest.raises(ValueError, match="never close"):
+        BreakerConfig(recovery_successes=3)      # bucket 1, no refill
+    BreakerConfig(recovery_successes=3, probe_bucket=3)
+    BreakerConfig(recovery_successes=3, probe_refill_per_s=1.0)
+
+
+def _tripped(cfg, now=0.0):
+    b = CircuitBreaker(cfg)
+    b.record(False, now)
+    assert b.state(now) == "open"
+    return b
+
+
+def test_breaker_ramped_recovery_closes_after_n_probes():
+    """ISSUE 10: half-open is a token bucket — ``recovery_successes``
+    successful probes close the breaker, not the first one."""
+    cfg = BreakerConfig(window=4, fail_rate=0.5, min_samples=1,
+                        cooldown_s=1.0, probe_bucket=3,
+                        recovery_successes=3)
+    b = _tripped(cfg)
+    assert b.state(1.0) == "half_open"
+    assert not b.record(True, 1.1)
+    assert b.state(1.1) == "half_open"           # 1/3: still ramping
+    assert not b.record(True, 1.2)
+    assert b.state(1.2) == "half_open"           # 2/3
+    assert not b.record(True, 1.3)
+    assert b.state(1.3) == "closed"              # ramp complete
+    assert b.recoveries == 1
+
+
+def test_breaker_ramp_failure_retrips():
+    cfg = BreakerConfig(window=4, fail_rate=0.5, min_samples=1,
+                        cooldown_s=1.0, probe_bucket=3,
+                        recovery_successes=3)
+    b = _tripped(cfg)
+    assert b.state(1.0) == "half_open"
+    assert not b.record(True, 1.1)               # 1/3 into the ramp
+    assert b.record(False, 1.2)                  # mid-ramp failure: TRIP
+    assert b.state(1.3) == "open" and b.trips == 2
+    # the next half-open entry starts a fresh ramp (oks reset)
+    assert b.state(2.3) == "half_open"
+    assert b.snapshot(2.3)["probe_oks"] == 0
+
+
+def test_breaker_token_bucket_meters_probes():
+    """Tokens bound the probe rate: the burst drains after
+    ``probe_bucket`` recorded probes, then ``available`` stays False
+    until the refill rate mints the next token — a fleet cannot
+    thundering-herd a barely-recovered tier."""
+    cfg = BreakerConfig(window=8, fail_rate=0.5, min_samples=1,
+                        cooldown_s=1.0, probe_bucket=2,
+                        probe_refill_per_s=1.0, recovery_successes=4)
+    b = _tripped(cfg)
+    assert b.available(1.0)                      # burst token 1
+    assert not b.record(True, 1.0)
+    assert b.available(1.0)                      # burst token 2
+    assert not b.record(True, 1.0)
+    assert not b.available(1.0)                  # bucket drained
+    assert not b.available(1.5)                  # 0.5 tokens: still short
+    assert b.available(2.0)                      # refill minted one
+    assert not b.record(True, 2.0)               # 3/4
+    assert not b.available(2.0)
+    assert b.available(3.0)
+    assert not b.record(True, 3.0)               # 4/4: closed
+    assert b.state(3.0) == "closed" and b.recoveries == 1
+
+
+def test_breaker_default_ramp_is_classic_single_probe():
+    """Defaults (bucket 1, one success, no refill) replay the exact
+    pre-ramp half-open transcript — opt-in means bit-identical off."""
+    cfg = BreakerConfig(window=4, fail_rate=0.5, min_samples=2,
+                        cooldown_s=1.0)
+    b = CircuitBreaker(cfg)
+    transcript = []
+    for ok, now in ((False, 0.0), (False, 0.1), (True, 1.2),
+                    (False, 1.3), (False, 2.4), (True, 3.5)):
+        avail = b.available(now)
+        tripped = b.record(ok, now)
+        transcript.append((b.state(now), avail, tripped))
+    assert transcript == [
+        ("closed", True, False),
+        ("open", True, True),          # 2/2 failures: trip
+        ("closed", True, False),       # cooldown over, probe ok: recover
+        ("closed", True, False),       # 1 sample < min_samples
+        ("open", True, True),          # 2/2 failures again
+        ("closed", True, False),       # second recovery
+    ]
+    assert b.trips == 2 and b.recoveries == 2
+
+
 def test_tier_health_registry_sums_counters():
     h = TierHealth(3, BreakerConfig(window=2, fail_rate=0.5,
                                     min_samples=1, cooldown_s=10.0))

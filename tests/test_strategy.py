@@ -461,7 +461,7 @@ def test_pipeline_requires_embed_with_router():
 
 
 def test_strategy_requires_router_or_governor():
-    with pytest.raises(ValueError, match="router and/or"):
+    with pytest.raises(ValueError, match="governor and/or guarantee"):
         ServingStrategy()
 
 
